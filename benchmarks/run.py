@@ -1,0 +1,218 @@
+"""Benchmark harness — one entry per paper table/figure, plus the settlement
+scaling claim and the dry-run roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), where
+``derived`` is the benchmark's headline number (see each function's doc).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig6 table1
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def fig2_weighting():
+    """Paper Fig. 2 — utilization-weighted pricing curves.
+    derived: φ(0.99)/φ(0.80) for the default exp curve (congestion spread)."""
+    import jax.numpy as jnp
+    from repro.core import CURVE_FAMILIES
+
+    psi = jnp.linspace(0.0, 1.0, 11)
+    rows = {}
+    for name, phi in CURVE_FAMILIES.items():
+        rows[name] = np.asarray(phi(psi)).round(3).tolist()
+    us = _timeit(lambda: np.asarray(CURVE_FAMILIES["exp"](psi)))
+    spread = float(CURVE_FAMILIES["exp"](np.float32(0.99)) / CURVE_FAMILIES["exp"](np.float32(0.80)))
+    print(f"# fig2 curves at psi=0..1 step .1: {json.dumps(rows)}", file=sys.stderr)
+    return us, round(spread, 3)
+
+
+def _economy_stats(epochs=6, seed=3):
+    from repro.core.economy import make_fleet_economy
+
+    eco = make_fleet_economy(seed=seed)
+    return eco, [eco.run_epoch() for _ in range(epochs)]
+
+
+def table1_premiums():
+    """Paper Table I — bid premium γ statistics over successive auctions.
+    derived: median γ of the final auction (paper: 0.0009–0.0092 once
+    bidders learn; wild early)."""
+    t0 = time.perf_counter()
+    _, stats = _economy_stats()
+    us = (time.perf_counter() - t0) * 1e6 / len(stats)
+    print("# table1: auction, gamma_median, gamma_mean, pct_settled", file=sys.stderr)
+    for s in stats:
+        print(
+            f"#   {s.epoch}, {s.gamma_median:.4f}, {s.gamma_mean:.4f}, {s.pct_settled:.1f}%",
+            file=sys.stderr,
+        )
+    return us, round(stats[-1].gamma_median, 4)
+
+
+def fig6_price_change():
+    """Paper Fig. 6 — settled price as a ratio over the former fixed price.
+    derived: max/min ratio across pools after the first auction (price
+    dispersion the market discovers; 1.0 would mean fixed prices were right)."""
+    t0 = time.perf_counter()
+    _, stats = _economy_stats(epochs=1)
+    us = (time.perf_counter() - t0) * 1e6
+    r = stats[0].price_ratio
+    print(
+        f"# fig6: ratio min {r.min():.3f} median {np.median(r):.3f} max {r.max():.3f}",
+        file=sys.stderr,
+    )
+    return us, round(float(r.max() / max(r.min(), 1e-9)), 2)
+
+
+def fig7_utilization():
+    """Paper Fig. 7 — utilization percentile of settled bids vs offers.
+    derived: median(sell %ile) − median(buy %ile); positive = buys flow to
+    cold pools, sells come from hot ones (the paper's headline behavior)."""
+    t0 = time.perf_counter()
+    _, stats = _economy_stats(epochs=4)
+    us = (time.perf_counter() - t0) * 1e6 / 4
+    buys = np.concatenate([s.buy_util_percentiles for s in stats])
+    sells = np.concatenate([s.sell_util_percentiles for s in stats])
+    print(
+        f"# fig7: buy %ile quartiles {np.percentile(buys, [25,50,75]).round(1).tolist()} "
+        f"sell %ile quartiles {np.percentile(sells, [25,50,75]).round(1).tolist()}",
+        file=sys.stderr,
+    )
+    return us, round(float(np.median(sells) - np.median(buys)), 1)
+
+
+def auction_scaling():
+    """Paper §III.C.4 — '100 bidders × 100 resources took a few minutes in
+    non-optimized Python; optimized code ≥1 order of magnitude faster.'
+    derived: speedup of our settlement vs a 120 s few-minutes baseline."""
+    import jax.numpy as jnp
+    from repro.core import ClockConfig, clock_auction, pack_bids
+
+    rng = np.random.default_rng(0)
+
+    def make(u, r, b=3):
+        bl, pis = [], []
+        for _ in range(u):
+            alts = []
+            for _ in range(b):
+                q = np.zeros(r, np.float32)
+                q[rng.integers(0, r, size=2)] = rng.uniform(0.5, 4, size=2)
+                alts.append(q)
+            bl.append(alts)
+            pis.append(float(rng.uniform(1, 20)))
+        # operator supply
+        for i in range(r):
+            q = np.zeros(r, np.float32)
+            q[i] = -float(rng.uniform(20, 50))
+            bl.append([q])
+            pis.append(float(-rng.uniform(0.5, 1) * -q[i]))
+        return pack_bids(bl, pis, base_cost=np.ones(r, np.float32))
+
+    rows = []
+    # bigger markets use coarser clock ticks (tick size is an operator knob —
+    # the paper runs weekly auctions); the largest case is round-capped on
+    # this 1-core CPU container and reported as rounds/s.
+    for (u, r, cap) in [(100, 100, 3000), (1_000, 200, 3000), (10_000, 500, 3000),
+                        (100_000, 1000, 150)]:
+        prob = make(u, r)
+        p0 = jnp.full((r,), 0.5)
+        cfgc = ClockConfig(max_rounds=cap, alpha=0.6, delta=0.25)
+        run = lambda: clock_auction(prob, p0, cfgc).prices.block_until_ready()
+        run()  # compile
+        t0 = time.perf_counter()
+        res = clock_auction(prob, p0, cfgc)
+        res.prices.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append((u, r, dt, int(res.rounds), bool(res.converged)))
+    for u, r, dt, rounds, conv in rows:
+        print(f"#   {u}x{r}: {dt*1e3:.1f} ms, {rounds} rounds ({rounds/dt:.0f}/s), "
+              f"converged={conv}", file=sys.stderr)
+    base = rows[0][2]
+    return base * 1e6, round(120.0 / base, 0)
+
+
+def bid_eval_round():
+    """Settlement hot loop: one proxy-evaluation round at 100k bids × 1k
+    pools (jnp path on CPU; the Pallas kernel is the TPU-fused twin).
+    derived: bids/s."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    U, B, R = 100_000, 4, 1_000
+    bundles = jnp.asarray(rng.normal(size=(U, B, R)).astype(np.float32))
+    mask = jnp.asarray(rng.random((U, B)) < 0.9)
+    pi = jnp.asarray(rng.normal(size=(U,)).astype(np.float32) * 5)
+    prices = jnp.asarray(np.abs(rng.normal(size=(R,))).astype(np.float32))
+    import jax
+
+    f = jax.jit(lambda *a: ops.bid_eval(*a, backend="jnp")[0])
+    f(bundles, mask, pi, prices).block_until_ready()
+    us = _timeit(lambda: f(bundles, mask, pi, prices).block_until_ready(), n=3, warmup=1)
+    return us, round(U / (us / 1e6), 0)
+
+
+def roofline_summary():
+    """§Roofline — aggregate the dry-run matrix artifacts.
+    derived: count of single-pod cells whose compile succeeded."""
+    t0 = time.perf_counter()
+    files = sorted(glob.glob(os.path.join("experiments", "dryrun", "*__16x16.json")))
+    n_ok = 0
+    print("# roofline: arch, shape, bottleneck, t_comp, t_mem, t_coll, useful, peak_frac", file=sys.stderr)
+    for path in files:
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or not rec.get("roofline"):
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        print(
+            f"#   {r['arch']}, {r['shape']}, {r['bottleneck']}, "
+            f"{r['t_compute']:.3f}s, {r['t_memory']:.3f}s, {r['t_collective']:.3f}s, "
+            f"{r['useful_ratio']:.2f}, {r['peak_fraction']:.4f}",
+            file=sys.stderr,
+        )
+    return (time.perf_counter() - t0) * 1e6, n_ok
+
+
+BENCHES = {
+    "fig2_weighting": fig2_weighting,
+    "table1_premiums": table1_premiums,
+    "fig6_price_change": fig6_price_change,
+    "fig7_utilization": fig7_utilization,
+    "auction_scaling": auction_scaling,
+    "bid_eval_round": bid_eval_round,
+    "roofline_summary": roofline_summary,
+}
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in want:
+        key = next((k for k in BENCHES if k.startswith(name)), None)
+        if key is None:
+            print(f"# unknown benchmark {name}", file=sys.stderr)
+            continue
+        us, derived = BENCHES[key]()
+        print(f"{key},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Elastic re-sharding: move a job's state onto a different mesh.
+
+Used when the market re-provisions a job between auction epochs (more or
+fewer chips → new (data, model) factorization) and when the supervisor
+restarts after losing devices.  The checkpoint holds mesh-agnostic host
+arrays; this module computes the new shardings and re-places the state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from ..models import ModelConfig, get_api
+from ..models.params import validated_pspec_tree
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules=None):
+    decls = get_api(cfg).decls(cfg)
+    pspecs = validated_pspec_tree(decls, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+
+def reshard(tree, shardings):
+    """Re-place every leaf with the given shardings (cross-mesh OK: goes
+    through host when layouts are incompatible)."""
+
+    def per_leaf(x, sh):
+        try:
+            return jax.device_put(x, sh)
+        except ValueError:
+            return jax.device_put(jax.device_get(x), sh)
+
+    return jax.tree_util.tree_map(per_leaf, tree, shardings)
+
+
+def elastic_restore(checkpointer, cfg: ModelConfig, mesh, target_tree, rules=None):
+    """Restore the latest checkpoint onto ``mesh`` (any shape)."""
+    sh = param_shardings(cfg, mesh, rules)
+    return checkpointer.restore_latest(target_tree, sh)

@@ -1,0 +1,35 @@
+"""Assigned architecture configs (--arch <id>) + the input-shape set."""
+from __future__ import annotations
+
+import importlib
+
+from .shapes import SHAPES, ShapeSpec, applicable
+
+_MODULES = {
+    "pixtral-12b": "pixtral_12b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "minitron-8b": "minitron_8b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "rwkv6-7b": "rwkv6_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-medium": "whisper_medium",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str):
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str):
+    return _mod(arch).SMOKE

@@ -1,0 +1,16 @@
+"""qwen1.5-110b [dense]: QKV bias, GQA.
+80L d_model=8192 64H (kv=8, head_dim 128) d_ff=49152 vocab=152064.
+[hf:Qwen/Qwen1.5-110B; hf]"""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=49152, vocab_size=152064, qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=160, vocab_size=512, qkv_bias=True, act_dtype="float32",
+)

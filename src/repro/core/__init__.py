@@ -1,0 +1,61 @@
+"""Market-economy provisioning core (the paper's contribution).
+
+Public API:
+  - types: ResourcePool, AuctionProblem, AuctionResult, pack_bids
+  - reserve: ExpWeighting / LogisticWeighting / PiecewisePowerWeighting,
+    reserve_prices
+  - auction: clock_auction, ClockConfig, proxy_demand, verify_system
+  - bidlang: Res / All / OneOf bid trees, flatten
+  - economy: Economy, Agent — multi-epoch market simulation
+  - provisioner: quota → device grants → mesh shapes
+"""
+from .types import (
+    AuctionProblem,
+    AuctionResult,
+    ResourcePool,
+    operator_supply_bids,
+    pack_bids,
+)
+from .reserve import (
+    CURVE_FAMILIES,
+    DEFAULT_WEIGHTING,
+    ExpWeighting,
+    LogisticWeighting,
+    PiecewisePowerWeighting,
+    reserve_prices,
+)
+from .auction import (
+    ClockConfig,
+    bundle_costs,
+    clock_auction,
+    proxy_demand,
+    surplus_and_trade,
+    verify_system,
+)
+from .bidlang import All, BundleExplosion, OneOf, Res, flatten, pool_index
+
+__all__ = [
+    "AuctionProblem",
+    "AuctionResult",
+    "ResourcePool",
+    "operator_supply_bids",
+    "pack_bids",
+    "CURVE_FAMILIES",
+    "DEFAULT_WEIGHTING",
+    "ExpWeighting",
+    "LogisticWeighting",
+    "PiecewisePowerWeighting",
+    "reserve_prices",
+    "ClockConfig",
+    "bundle_costs",
+    "clock_auction",
+    "proxy_demand",
+    "surplus_and_trade",
+    "verify_system",
+    "All",
+    "BundleExplosion",
+    "OneOf",
+    "Res",
+    "flatten",
+    "pool_index",
+]

@@ -1,0 +1,380 @@
+"""Multi-epoch market economy simulation (paper §V).
+
+Models the experimental Google-internal economy: engineering teams (here:
+training/serving jobs) hold resources in clusters, enter buy/sell bids each
+epoch, and a clock auction with congestion-weighted reserve prices settles
+prices and allocations.  Reproduces the paper's reported dynamics:
+
+* migration from congested to under-utilized pools (Figs. 6-7);
+* bid premiums γ_u shrinking as bidders learn market prices (Table I);
+* traders selling out of expensive clusters to exploit price differentials;
+* some agents paying large premiums to stay (high relocation cost).
+
+Agents are intentionally simple — belief-tracking bidders with private
+values, relocation costs, and decaying bid margins — because the paper's
+observed behaviors emerge from the *mechanism*, not from agent cleverness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .auction import ClockConfig, clock_auction, verify_system, surplus_and_trade
+from .reserve import DEFAULT_WEIGHTING, WeightingFn
+from .types import AuctionProblem, ResourcePool, pack_bids
+
+
+@dataclasses.dataclass
+class Agent:
+    """One engineering team / job in the economy."""
+
+    name: str
+    req: np.ndarray  # (num_rtypes,) per-cluster resource requirement template
+    value: float  # private $ value per epoch of having the bundle
+    home: int  # current cluster index (-1 = unplaced)
+    relocation_cost: float = 0.0  # $ cost to move to another cluster
+    mobility: float = 1.0  # fraction of clusters it can run in
+    margin0: float = 1.0  # initial bid margin over believed cost (wild bids)
+    margin_decay: float = 0.30  # per-epoch multiplicative margin decay
+    arbitrage: float = 0.0  # prob. of offering holdings when home is pricey
+    budget: float = np.inf
+
+    # mutable state
+    placed: int = -1  # cluster currently holding its resources
+    epoch: int = 0
+
+    def margin(self) -> float:
+        return self.margin0 * (self.margin_decay**self.epoch)
+
+
+@dataclasses.dataclass
+class EpochStats:
+    epoch: int
+    prices: np.ndarray  # (R,) settled unit prices
+    reserve: np.ndarray  # (R,) reserve (starting) prices
+    psi: np.ndarray  # (R,) pre-auction utilization
+    price_ratio: np.ndarray  # (R,) settled / former-fixed-price (paper Fig. 6)
+    gamma_median: float  # Table I
+    gamma_mean: float  # Table I
+    pct_settled: float  # Table I
+    buy_util_percentiles: np.ndarray  # Fig. 7: util %ile of settled buys
+    sell_util_percentiles: np.ndarray  # Fig. 7: util %ile of settled offers
+    migrations: int
+    surplus: float
+    value_of_trade: float
+    rounds: int
+    converged: bool
+    system_ok: bool
+
+
+class Economy:
+    """Periodic clock-auction economy over clusters × resource types."""
+
+    def __init__(
+        self,
+        clusters: Sequence[str],
+        rtypes: Sequence[str],
+        capacity: np.ndarray,  # (num_clusters, num_rtypes)
+        base_cost: np.ndarray,  # (num_rtypes,) former fixed $ per unit
+        agents: Sequence[Agent],
+        weighting: WeightingFn = DEFAULT_WEIGHTING,
+        clock: ClockConfig = ClockConfig(),
+        seed: int = 0,
+        operator_lots: int = 8,
+    ):
+        self.clusters = list(clusters)
+        self.rtypes = list(rtypes)
+        self.capacity = np.asarray(capacity, dtype=np.float64)
+        self.base_cost_rt = np.asarray(base_cost, dtype=np.float64)
+        self.agents = list(agents)
+        self.weighting = weighting
+        self.clock = clock
+        self.rng = np.random.default_rng(seed)
+        self.operator_lots = operator_lots
+        self.C, self.T = self.capacity.shape
+        self.R = self.C * self.T
+        # usage[c, t]: units currently held by placed agents
+        self.usage = np.zeros_like(self.capacity)
+        for a in self.agents:
+            if a.placed >= 0:
+                self.usage[a.placed] += a.req
+        self.usage = np.minimum(self.usage, self.capacity)
+        # every agent's price belief starts at the former fixed prices
+        self.belief = np.tile(self.base_cost_rt, self.C)  # (R,)
+        self.price_history: list[np.ndarray] = []
+
+    # -- pool bookkeeping ----------------------------------------------------
+    def pool_idx(self, c: int, t: int) -> int:
+        return c * self.T + t
+
+    def pools(self) -> list[ResourcePool]:
+        psi = self.utilization()
+        out = []
+        for c, cname in enumerate(self.clusters):
+            for t, tname in enumerate(self.rtypes):
+                free = max(self.capacity[c, t] - self.usage[c, t], 0.0)
+                out.append(
+                    ResourcePool(
+                        cluster=cname,
+                        rtype=tname,
+                        base_cost=float(self.base_cost_rt[t]),
+                        utilization=float(psi[c, t]),
+                        supply=float(free),
+                    )
+                )
+        return out
+
+    def utilization(self) -> np.ndarray:
+        return np.clip(self.usage / np.maximum(self.capacity, 1e-9), 0.0, 1.0)
+
+    def util_percentile(self, c: int) -> float:
+        """Percentile rank of cluster c's mean utilization across clusters."""
+        m = self.utilization().mean(axis=1)
+        return 100.0 * (m < m[c] - 1e-12).mean()
+
+    # -- preliminary prices (paper Fig. 5) ------------------------------------
+    def preview_prices(self) -> np.ndarray:
+        """Provisional settlement prices for the *current* bid book — the
+        market front end shows these during the bid-collection window so
+        teams can react before the final, binding run."""
+        from .reserve import reserve_prices
+
+        state = self.rng.bit_generator.state  # don't consume epoch randomness
+        stats = self.run_epoch(dry_run=True)
+        self.rng.bit_generator.state = state
+        return stats.prices
+
+    # -- one auction epoch ---------------------------------------------------
+    def run_epoch(self, dry_run: bool = False) -> EpochStats:
+        from .reserve import reserve_prices
+
+        pools = self.pools()
+        psi_flat = np.array([p.utilization for p in pools])
+        tilde_p = reserve_prices(pools, self.weighting)
+        base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
+
+        bundle_lists: list[list[np.ndarray]] = []
+        pi_rows: list[np.ndarray] = []  # per-bundle π (vector-π extension)
+        kinds: list[tuple] = []  # (agent_idx, "buy"/"sell"/"op", cluster list)
+
+        # (a) operator sells spare capacity in lots at reserve
+        for r, pool in enumerate(pools):
+            if pool.supply <= 1e-9:
+                continue
+            lot = pool.supply / self.operator_lots
+            for _ in range(self.operator_lots):
+                q = np.zeros((self.R,), np.float32)
+                q[r] = -lot
+                bundle_lists.append([q])
+                pi_rows.append(np.array([-lot * tilde_p[r]], np.float32))
+                kinds.append((-1, "op", [r // self.T]))
+
+        # (b) agent buy bids (XOR across reachable clusters)
+        max_b = 1
+        for i, a in enumerate(self.agents):
+            wants_placement = a.placed < 0
+            sells = (
+                a.placed >= 0
+                and a.arbitrage > 0
+                and self.rng.random() < a.arbitrage
+                and psi_flat[self.pool_idx(a.placed, 0)] > 0.75
+            )
+            if sells:
+                # trader: offer holdings at home, seek to re-buy elsewhere
+                q = np.zeros((self.R,), np.float32)
+                for t in range(self.T):
+                    q[self.pool_idx(a.placed, t)] = -a.req[t]
+                exp_rev = float(
+                    sum(
+                        a.req[t] * self.belief[self.pool_idx(a.placed, t)]
+                        for t in range(self.T)
+                    )
+                )
+                bundle_lists.append([q])
+                pi_rows.append(np.array([-exp_rev * (1.0 - 0.15)], np.float32))
+                kinds.append((i, "sell", [a.placed]))
+                wants_placement = True  # now needs a new home
+            if not wants_placement:
+                continue
+            n_reach = max(1, int(round(a.mobility * self.C)))
+            order = self.rng.permutation(self.C)
+            reach = sorted(
+                order[:n_reach].tolist(),
+                key=lambda c: 0 if c == a.home else 1,
+            )
+            if a.home >= 0 and a.home not in reach:
+                reach = [a.home] + reach[: max(0, n_reach - 1)]
+            bundles, pis = [], []
+            for c in reach:
+                q = np.zeros((self.R,), np.float32)
+                for t in range(self.T):
+                    q[self.pool_idx(c, t)] = a.req[t]
+                believed = float(
+                    sum(a.req[t] * self.belief[self.pool_idx(c, t)] for t in range(self.T))
+                )
+                raw_value = a.value - (a.relocation_cost if c != a.home else 0.0)
+                # bid: value capped by belief*(1+margin) — early epochs bid
+                # near private value (wild), later epochs track the market.
+                pi = min(raw_value, believed * (1.0 + a.margin()), a.budget)
+                bundles.append(q)
+                pis.append(pi)
+            bundle_lists.append(bundles)
+            pi_rows.append(np.asarray(pis, np.float32))
+            kinds.append((i, "buy", reach))
+            max_b = max(max_b, len(bundles))
+
+        # pad π rows to rectangle (vector-π mode)
+        U = len(bundle_lists)
+        max_b = max(max_b, max(len(b) for b in bundle_lists))
+        pi_mat = np.full((U, max_b), -np.inf, np.float32)
+        for u, row in enumerate(pi_rows):
+            pi_mat[u, : len(row)] = row
+
+        problem = pack_bids(
+            bundle_lists, [0.0] * U, base_cost=base_cost_flat
+        )
+        problem = AuctionProblem(
+            bundles=problem.bundles,
+            bundle_mask=problem.bundle_mask,
+            pi=jnp.asarray(pi_mat),
+            base_cost=problem.base_cost,
+            supply_scale=problem.supply_scale,
+        )
+        result = clock_auction(problem, jnp.asarray(tilde_p), self.clock)
+        sys_ok = all(verify_system(problem, result).values())
+        surplus, trade = surplus_and_trade(problem, result)
+
+        # -- settle: apply allocations, record stats -------------------------
+        prices = np.asarray(result.prices)
+        if dry_run:
+            return EpochStats(
+                epoch=len(self.price_history), prices=prices,
+                reserve=np.asarray(tilde_p), psi=psi_flat,
+                price_ratio=prices / base_cost_flat,
+                gamma_median=float("nan"), gamma_mean=float("nan"),
+                pct_settled=float("nan"),
+                buy_util_percentiles=np.empty(0), sell_util_percentiles=np.empty(0),
+                migrations=0, surplus=float(surplus), value_of_trade=float(trade),
+                rounds=int(result.rounds), converged=bool(result.converged),
+                system_ok=sys_ok,
+            )
+        won = np.asarray(result.won)
+        chosen = np.asarray(result.chosen_bundle)
+        payments = np.asarray(result.payments)
+
+        migrations = 0
+        gammas: list[float] = []
+        buy_util_pct: list[float] = []
+        sell_util_pct: list[float] = []
+        util_pct_by_cluster = {c: self.util_percentile(c) for c in range(self.C)}
+        n_agent_bids = 0
+        n_agent_wins = 0
+        for u, (aidx, kind, cluster_list) in enumerate(kinds):
+            if kind == "op":
+                continue
+            n_agent_bids += 1
+            if not won[u]:
+                continue
+            n_agent_wins += 1
+            a = self.agents[aidx]
+            pay = float(payments[u])
+            pi_u = float(pi_mat[u, max(chosen[u], 0)])
+            if abs(pay) > 1e-9:
+                gammas.append(abs(pi_u - pay) / abs(pay))
+            if kind == "sell":
+                c = cluster_list[0]
+                self.usage[c] = np.maximum(self.usage[c] - a.req, 0.0)
+                a.placed = -1
+                sell_util_pct.append(util_pct_by_cluster[c])
+            else:  # buy
+                c = cluster_list[chosen[u]]
+                self.usage[c] = self.usage[c] + a.req
+                if a.placed >= 0 and a.placed != c:
+                    self.usage[a.placed] = np.maximum(self.usage[a.placed] - a.req, 0.0)
+                if a.home != c and a.home >= 0:
+                    migrations += 1
+                a.placed = c
+                a.home = c
+                buy_util_pct.append(util_pct_by_cluster[c])
+        self.usage = np.minimum(self.usage, self.capacity)
+
+        # -- learning: beliefs drift toward settled prices --------------------
+        self.belief = 0.25 * self.belief + 0.75 * prices
+        for a in self.agents:
+            a.epoch += 1
+        self.price_history.append(prices)
+
+        return EpochStats(
+            epoch=len(self.price_history) - 1,
+            prices=prices,
+            reserve=np.asarray(tilde_p),
+            psi=psi_flat,
+            price_ratio=prices / base_cost_flat,
+            gamma_median=float(np.median(gammas)) if gammas else float("nan"),
+            gamma_mean=float(np.mean(gammas)) if gammas else float("nan"),
+            pct_settled=100.0 * n_agent_wins / max(n_agent_bids, 1),
+            buy_util_percentiles=np.asarray(buy_util_pct),
+            sell_util_percentiles=np.asarray(sell_util_pct),
+            migrations=migrations,
+            surplus=float(surplus),
+            value_of_trade=float(trade),
+            rounds=int(result.rounds),
+            converged=bool(result.converged),
+            system_ok=sys_ok,
+        )
+
+
+def make_fleet_economy(
+    num_clusters: int = 6,
+    num_agents: int = 48,
+    seed: int = 0,
+    congested_frac: float = 0.4,
+    rtypes: Sequence[str] = ("tpu_chips", "hbm_gb", "ici_gbps"),
+    base_cost: Sequence[float] = (10.0, 0.05, 0.2),
+) -> Economy:
+    """A planet-wide TPU fleet: clusters with heterogeneous congestion, agents
+    whose demand vectors look like LM training/serving jobs."""
+    rng = np.random.default_rng(seed)
+    T = len(rtypes)
+    capacity = np.zeros((num_clusters, T))
+    for c in range(num_clusters):
+        chips = float(rng.choice([1024, 2048, 4096]))
+        capacity[c] = [chips, chips * 16.0, chips * 4 * 50.0]  # 16GB HBM, 4 links
+    agents = []
+    n_congested = int(round(congested_frac * num_clusters))
+    for i in range(num_agents):
+        chips = float(rng.choice([64, 128, 256, 512]))
+        req = np.array([chips, chips * rng.uniform(8, 16), chips * rng.uniform(40, 200)])
+        cost_est = float((req * np.asarray(base_cost)).sum())
+        home = int(rng.integers(0, n_congested)) if rng.random() < 0.7 else int(
+            rng.integers(0, num_clusters)
+        )
+        placed = home if rng.random() < 0.6 else -1
+        agents.append(
+            Agent(
+                name=f"job-{i}",
+                req=req,
+                value=cost_est * rng.uniform(1.2, 3.5),
+                home=home,
+                placed=placed,
+                relocation_cost=cost_est * rng.uniform(0.02, 0.8),
+                mobility=float(rng.uniform(0.3, 1.0)),
+                margin0=float(rng.uniform(0.5, 2.0)),
+                arbitrage=float(rng.uniform(0.0, 0.5)),
+            )
+        )
+    eco = Economy(
+        clusters=[f"cluster-{c}" for c in range(num_clusters)],
+        rtypes=rtypes,
+        capacity=capacity,
+        base_cost=np.asarray(base_cost),
+        agents=agents,
+        seed=seed + 1,
+    )
+    # pre-load congestion into the first n_congested clusters
+    for c in range(n_congested):
+        eco.usage[c] = np.maximum(eco.usage[c], 0.88 * eco.capacity[c])
+    return eco

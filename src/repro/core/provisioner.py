@@ -1,0 +1,121 @@
+"""Quota → device grants → job meshes.
+
+This is the bridge the paper stops short of: winning auction allocations
+(chips/HBM/ICI quota per cluster) become concrete JAX device meshes that the
+training/serving runtime consumes.  Between auction epochs, a job whose grant
+changed is elastically re-sharded (``repro.checkpoint.elastic``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from .types import AuctionResult
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGrant:
+    """Chips granted to one job in one cluster for one epoch."""
+
+    job: str
+    cluster: str
+    chips: int
+    hbm_gb: float = 0.0
+    ici_gbps: float = 0.0
+    unit_price: float = 0.0  # settled $/chip — for charge-back accounting
+
+
+def plan_mesh_shape(
+    chips: int, min_model: int = 1, max_model: int = 256
+) -> tuple[int, int]:
+    """Factor a chip grant into (data, model) mesh axes.
+
+    Picks the smallest power-of-two model axis ≥ ``min_model`` that divides the
+    grant (TP just wide enough for the model to fit; the rest to DP, which
+    scales throughput linearly and keeps the all-reduce on the fastest axis).
+    """
+    if chips <= 0:
+        raise ValueError("empty grant")
+    model = 1 << max(0, math.ceil(math.log2(max(min_model, 1))))
+    while model <= min(chips, max_model):
+        if chips % model == 0:
+            return chips // model, model
+        model *= 2
+    # fall back: largest power-of-two ≤ chips
+    model = 1 << int(math.log2(chips))
+    return chips // model, model
+
+
+def grants_from_allocation(
+    result: AuctionResult,
+    job_names: Sequence[str],
+    pool_clusters: Sequence[str],
+    pool_rtypes: Sequence[str],
+    user_jobs: Sequence[int],
+) -> list[DeviceGrant]:
+    """Convert settled allocations (U, R) into per-job DeviceGrants.
+
+    ``user_jobs[u]`` maps auction user u to a job index (-1 = operator).
+    """
+    alloc = np.asarray(result.allocations)
+    prices = np.asarray(result.prices)
+    grants: list[DeviceGrant] = []
+    for u in range(alloc.shape[0]):
+        j = user_jobs[u]
+        if j < 0 or not bool(np.asarray(result.won)[u]):
+            continue
+        by_cluster: dict[str, dict[str, float]] = {}
+        for r in range(alloc.shape[1]):
+            q = float(alloc[u, r])
+            if q <= 0:
+                continue
+            d = by_cluster.setdefault(pool_clusters[r], {})
+            d[pool_rtypes[r]] = d.get(pool_rtypes[r], 0.0) + q
+            d.setdefault("_price_chips", prices[r] if pool_rtypes[r] == "tpu_chips" else 0.0)
+        for cluster, d in by_cluster.items():
+            chips = int(round(d.get("tpu_chips", 0.0)))
+            if chips <= 0:
+                continue
+            grants.append(
+                DeviceGrant(
+                    job=job_names[j],
+                    cluster=cluster,
+                    chips=chips,
+                    hbm_gb=d.get("hbm_gb", 0.0),
+                    ici_gbps=d.get("ici_gbps", 0.0),
+                    unit_price=float(d.get("_price_chips", 0.0)),
+                )
+            )
+    return grants
+
+
+def grant_to_mesh(
+    grant: DeviceGrant,
+    min_model: int = 1,
+    devices: Sequence | None = None,
+) -> jax.sharding.Mesh:
+    """Build a (data, model) mesh over the granted chips.
+
+    On real hardware, ``devices`` is the sub-slice assigned by the cluster
+    scheduler; in tests/examples it defaults to however many local (or
+    XLA-faked) devices are available, truncated to the grant.
+    """
+    data, model = plan_mesh_shape(grant.chips, min_model=min_model)
+    devs = list(devices if devices is not None else jax.devices())
+    need = data * model
+    if len(devs) < need:
+        # degrade gracefully: shrink DP until the grant fits local devices
+        # (CPU container has 1 device; dry-run fakes 512).
+        while data > 1 and data * model > len(devs):
+            data //= 2
+        need = data * model
+        if need > len(devs):
+            model = max(1, len(devs))
+            data = 1
+            need = model
+    arr = np.asarray(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))

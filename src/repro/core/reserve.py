@@ -1,0 +1,113 @@
+"""Congestion-weighted reserve pricing (paper §IV).
+
+Reserve price for one unit of pool r:  ``p̃_r = φ_r(ψ(r)) · c(r)``  (eq. 4),
+where ψ(r) is pre-auction utilization and c(r) the known base cost.
+
+Every weighting curve in this module satisfies the paper's five §IV.A
+properties (property-tested in ``tests/test_reserve.py``):
+
+  1. φ is monotonically increasing in ψ;
+  2. φ(ψ) > 1 for over-utilized pools   (ψ > target);
+  3. φ(ψ) ≤ 1 for under-utilized pools  (ψ ≤ target);
+  4. relative price differences are much larger between highly congested
+     levels (99% vs 80%) than between under-utilized levels (40% vs 15%);
+  5. φ(1) = k · φ(0) for a fixed constant k (bounds the budget impact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .types import ResourcePool
+
+WeightingFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpWeighting:
+    """φ(ψ) = k^(ψ^γ − target^γ).
+
+    log φ is a convex power of ψ, so the curve is flat among under-utilized
+    pools and steep among congested ones (property 4).  φ(target) = 1 splits
+    properties 2/3, and φ(1)/φ(0) = k^(1) / k^(0) = k gives property 5.
+    """
+
+    k: float = 8.0  # φ(100%) / φ(0%)
+    target: float = 0.6  # utilization at which φ crosses 1.0
+    gamma: float = 3.0  # convexity; needs ≈3 so the 99-vs-80% spread clearly
+    #                     dominates the 40-vs-15% spread (§IV.A property 4)
+
+    def __call__(self, psi):
+        psi = jnp.clip(jnp.asarray(psi, dtype=jnp.float32), 0.0, 1.0)
+        return jnp.power(self.k, jnp.power(psi, self.gamma) - self.target**self.gamma)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticWeighting:
+    """log φ follows a normalized sigmoid centred at ``target``.
+
+    ŝ(ψ) = (σ(s(ψ−t)) − σ(−st)) / (σ(s(1−t)) − σ(−st)) ∈ [0, 1] with
+    ŝ(0)=0, ŝ(1)=1;   φ(ψ) = k^(ŝ(ψ) − ŝ(t)).
+    """
+
+    k: float = 8.0
+    target: float = 0.85  # crossing high up: the sigmoid's steep region then
+    #                       covers 80→99% utilization (§IV.A property 4)
+    steepness: float = 10.0
+
+    def _shat(self, psi):
+        s, t = self.steepness, self.target
+        sig = lambda x: 1.0 / (1.0 + jnp.exp(-x))
+        lo, hi = sig(-s * t), sig(s * (1.0 - t))
+        return (sig(s * (psi - t)) - lo) / (hi - lo)
+
+    def __call__(self, psi):
+        psi = jnp.clip(jnp.asarray(psi, dtype=jnp.float32), 0.0, 1.0)
+        t = jnp.asarray(self.target, dtype=jnp.float32)
+        return jnp.power(self.k, self._shat(psi) - self._shat(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class PiecewisePowerWeighting:
+    """Flat-ish below target, power-law blow-up above (paper Fig. 2 'hockey stick').
+
+    φ(ψ) = φ0 + (1−φ0)·(ψ/t)            for ψ ≤ t   (gentle linear rise to 1)
+    φ(ψ) = 1 + (k·φ0 − 1)·((ψ−t)/(1−t))^γ  for ψ > t (convex blow-up to k·φ0)
+    """
+
+    k: float = 8.0
+    target: float = 0.6
+    gamma: float = 3.0
+    phi0: float = 0.5  # φ(0)
+
+    def __call__(self, psi):
+        psi = jnp.clip(jnp.asarray(psi, dtype=jnp.float32), 0.0, 1.0)
+        t, g, p0 = self.target, self.gamma, self.phi0
+        below = p0 + (1.0 - p0) * (psi / t)
+        above = 1.0 + (self.k * p0 - 1.0) * jnp.power(
+            jnp.maximum(psi - t, 0.0) / (1.0 - t), g
+        )
+        return jnp.where(psi <= t, below, above)
+
+
+DEFAULT_WEIGHTING = ExpWeighting()
+
+CURVE_FAMILIES: dict[str, WeightingFn] = {
+    "exp": ExpWeighting(),
+    "logistic": LogisticWeighting(),
+    "piecewise": PiecewisePowerWeighting(),
+}
+
+
+def reserve_prices(
+    pools: Sequence[ResourcePool],
+    weighting: WeightingFn | None = None,
+) -> np.ndarray:
+    """p̃_r = φ_r(ψ(r)) · c(r)  for every pool (eq. 4)."""
+    weighting = weighting or DEFAULT_WEIGHTING
+    psi = np.asarray([p.utilization for p in pools], dtype=np.float32)
+    cost = np.asarray([p.base_cost for p in pools], dtype=np.float32)
+    return np.asarray(weighting(psi)) * cost

@@ -1,0 +1,150 @@
+"""Core datatypes for the market-economy provisioning layer.
+
+Terminology follows the paper (Stokely et al.):
+
+* A *resource pool* ``r`` is a (cluster, resource-type) pair — e.g.
+  ``("cluster-3", "tpu_chips")`` — with a known base cost ``c(r)`` and a
+  pre-auction utilization ``psi(r)``.
+* A *user* ``u`` submits one bid ``B_u = {Q_u, pi_u}``: an XOR-set of bundle
+  vectors over the R pools (positive components = buy, negative = sell) and a
+  scalar willingness-to-pay (negative = minimum acceptable revenue).
+
+Everything auction-facing is stored densely so the settlement loop is a pure
+JAX program: bundles ``(U, B, R)`` float32, a validity mask ``(U, B)``, and
+``pi (U,)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourcePool:
+    """One sellable pool: a (cluster, resource-type) pair."""
+
+    cluster: str
+    rtype: str  # "tpu_chips" | "hbm_gb" | "ici_gbps" | "cpu" | "ram_gb" | "disk_tb"
+    base_cost: float  # c(r): $ per unit per epoch
+    utilization: float  # psi(r) in [0, 1], pre-auction
+    supply: float = 0.0  # operator-sellable units this epoch
+
+    @property
+    def name(self) -> str:
+        return f"{self.cluster}/{self.rtype}"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AuctionProblem:
+    """Dense, device-ready encoding of all bids for one auction.
+
+    Attributes:
+      bundles: (U, B, R) quantities; row ``u, b`` is the b-th XOR alternative of
+        user u.  Positive = demanded, negative = offered.  Padded rows are 0.
+      bundle_mask: (U, B) True for valid XOR alternatives.
+      pi: (U,) max willingness-to-pay (buyers, +) / min acceptable (sellers, −).
+      base_cost: (R,) c(r), used for price normalization.
+      supply_scale: (R,) normalization for excess demand (≈ total tradeable
+        units of r); keeps the price-update step dimensionless.
+    """
+
+    bundles: jax.Array
+    bundle_mask: jax.Array
+    pi: jax.Array
+    base_cost: jax.Array
+    supply_scale: jax.Array
+
+    @property
+    def num_users(self) -> int:
+        return self.bundles.shape[0]
+
+    @property
+    def num_bundles(self) -> int:
+        return self.bundles.shape[1]
+
+    @property
+    def num_resources(self) -> int:
+        return self.bundles.shape[2]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AuctionResult:
+    """Output of one clock auction settlement."""
+
+    prices: jax.Array  # (R,) final uniform unit prices p*
+    allocations: jax.Array  # (U, R) awarded bundle (0 if lost)
+    chosen_bundle: jax.Array  # (U,) int index into Q_u, -1 if lost
+    won: jax.Array  # (U,) bool
+    payments: jax.Array  # (U,) x_uᵀ p*  (negative = revenue to seller)
+    excess_demand: jax.Array  # (R,) z at convergence (≤ 0 iff converged)
+    rounds: jax.Array  # () int32 — clock rounds executed
+    converged: jax.Array  # () bool
+
+    def premium(self, pi: jax.Array) -> jax.Array:
+        """Paper eq. (5): gamma_u = |pi_u − x_uᵀp| / |x_uᵀp| for winners."""
+        pay = self.payments
+        denom = jnp.where(jnp.abs(pay) > 0, jnp.abs(pay), 1.0)
+        gamma = jnp.abs(pi - pay) / denom
+        return jnp.where(self.won & (jnp.abs(pay) > 0), gamma, jnp.nan)
+
+
+def pack_bids(
+    bundle_lists: Sequence[Sequence[np.ndarray]],
+    pis: Sequence[float],
+    base_cost: np.ndarray,
+    supply_scale: np.ndarray | None = None,
+    dtype=jnp.float32,
+) -> AuctionProblem:
+    """Pack per-user XOR bundle lists into a dense AuctionProblem."""
+    num_users = len(bundle_lists)
+    num_res = int(np.asarray(base_cost).shape[0])
+    max_b = max((len(bl) for bl in bundle_lists), default=1) or 1
+    bundles = np.zeros((num_users, max_b, num_res), dtype=np.float32)
+    mask = np.zeros((num_users, max_b), dtype=bool)
+    for u, bl in enumerate(bundle_lists):
+        for b, q in enumerate(bl):
+            bundles[u, b] = np.asarray(q, dtype=np.float32)
+            mask[u, b] = True
+    if supply_scale is None:
+        # total offered + demanded volume per resource, floored at 1.
+        supply_scale = np.maximum(np.abs(bundles).sum(axis=(0, 1)), 1.0)
+    return AuctionProblem(
+        bundles=jnp.asarray(bundles, dtype=dtype),
+        bundle_mask=jnp.asarray(mask),
+        pi=jnp.asarray(np.asarray(pis, dtype=np.float32)),
+        base_cost=jnp.asarray(np.asarray(base_cost, dtype=np.float32)),
+        supply_scale=jnp.asarray(np.asarray(supply_scale, dtype=np.float32)),
+    )
+
+
+def operator_supply_bids(
+    pools: Sequence[ResourcePool],
+    reserve_prices: np.ndarray,
+    lots: int = 1,
+) -> tuple[list[list[np.ndarray]], list[float]]:
+    """Encode operator supply as pure-seller users (paper §II).
+
+    Each pool's supply is split into ``lots`` equal sell bids so the market can
+    clear partial supply (the paper's no-scaling constraint applies per bid).
+    A seller proxy stays in whenever p_r ≥ reserve, because
+    qᵀp = −(supply/lots)·p_r ≤ pi = −(supply/lots)·reserve_r  ⇔  p_r ≥ reserve_r.
+    """
+    bundle_lists: list[list[np.ndarray]] = []
+    pis: list[float] = []
+    num_res = len(pools)
+    for r, pool in enumerate(pools):
+        if pool.supply <= 0:
+            continue
+        lot = pool.supply / lots
+        for _ in range(lots):
+            q = np.zeros((num_res,), dtype=np.float32)
+            q[r] = -lot
+            bundle_lists.append([q])
+            pis.append(float(-lot * reserve_prices[r]))
+    return bundle_lists, pis

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the settlement + SSM hot spots, with jnp oracles.
+
+- clock_bid_eval: fused bidder-proxy evaluation (the paper's settlement loop)
+- wkv6: chunked RWKV-6 linear recurrence (assigned ssm architecture)
+- ops: jit'd wrappers with jnp/pallas/interpret backend switch
+- ref: pure-jnp oracles (also the dry-run compile path)
+"""
+from . import ops, ref  # noqa: F401

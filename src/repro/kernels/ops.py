@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels with a pure-jnp fallback.
+
+``backend``:
+  * "jnp"      — pure-JAX reference path (default off-TPU; what the multi-pod
+                 dry-run compiles, since Pallas custom calls target TPU);
+  * "pallas"   — compiled Pallas kernel (TPU);
+  * "interpret"— Pallas interpreter (CPU correctness testing).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import clock_bid_eval as _cbe
+from . import wkv6 as _wkv6
+
+Backend = Literal["jnp", "pallas", "interpret"]
+
+
+def default_backend() -> Backend:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def bid_eval(bundles, mask, pi, prices, backend: Backend | None = None):
+    """(z, chosen) — one clock-auction proxy round.  See kernels.ref.bid_eval."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return ref.bid_eval(bundles, mask, pi, prices)
+    return _cbe.bid_eval(bundles, mask, pi, prices, interpret=backend == "interpret")
+
+
+def bid_demand_fn(backend: Backend | None = None):
+    """Adapter with the auction's DemandFn signature (x, chosen, active)."""
+
+    def demand(bundles, mask, pi, prices):
+        if pi.ndim != 1:
+            # vector-π extension is served by the jnp path only
+            from ..core.auction import proxy_demand
+
+            return proxy_demand(bundles, mask, pi, prices)
+        _, chosen = bid_eval(bundles, mask, pi, prices, backend)
+        active = chosen >= 0
+        sel = jnp.take_along_axis(
+            bundles, jnp.maximum(chosen, 0)[:, None, None], axis=1
+        )[:, 0, :]
+        x = sel.astype(jnp.float32) * active[:, None]
+        return x, chosen, active
+
+    return demand
+
+
+def wkv6(r, k, v, w, u, state=None, chunk: int = 32, backend: Backend | None = None):
+    """Chunked RWKV-6 recurrence.  See kernels.ref.wkv6 for semantics."""
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return ref.wkv6(r, k, v, w, u, state)
+    return _wkv6.wkv6(
+        r, k, v, w, u, state, chunk=chunk, interpret=backend == "interpret"
+    )

@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+They are also the implementations the multi-pod dry-run compiles — Pallas
+custom calls target TPU, and this container's CPU backend exercises kernels
+only in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# clock_bid_eval: one round of bidder-proxy evaluation (paper eq. 1-2)
+# ---------------------------------------------------------------------------
+
+
+def bid_eval(
+    bundles: jax.Array,  # (U, B, R) float
+    mask: jax.Array,  # (U, B) bool/int — valid XOR alternatives
+    pi: jax.Array,  # (U,) float — scalar willingness-to-pay
+    prices: jax.Array,  # (R,) float
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (z (R,) excess demand, chosen (U,) int32 with -1 = dropped out).
+
+    chosen = argmin-cost valid bundle if affordable at ``prices`` else -1;
+    z = sum over users of the selected bundles.
+    """
+    costs = jnp.einsum(
+        "ubr,r->ub",
+        bundles.astype(jnp.float32),
+        prices.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    costs = jnp.where(mask.astype(bool), costs, jnp.inf)
+    # first-minimum index (tie-break identical to the kernel's iota-min trick)
+    cost_hat = jnp.min(costs, axis=1)
+    B = costs.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, costs.shape, 1)
+    bhat = jnp.min(jnp.where(costs == cost_hat[:, None], iota, B), axis=1)
+    bhat = jnp.minimum(bhat, B - 1)
+    active = cost_hat <= pi.astype(jnp.float32)
+    sel = jnp.take_along_axis(bundles, bhat[:, None, None], axis=1)[:, 0, :]
+    sel = sel.astype(jnp.float32) * active[:, None]
+    z = sel.sum(axis=0)
+    chosen = jnp.where(active, bhat, -1).astype(jnp.int32)
+    return z, chosen
+
+
+# ---------------------------------------------------------------------------
+# wkv6: RWKV-6 linear recurrence with data-dependent decay (chunked oracle
+# uses the plain sequential form; the kernel's chunked algebra must match it)
+# ---------------------------------------------------------------------------
+
+
+def wkv6(
+    r: jax.Array,  # (T, H, K)  receptance
+    k: jax.Array,  # (T, H, K)  key
+    v: jax.Array,  # (T, H, V)  value
+    w: jax.Array,  # (T, H, K)  per-token decay in (0, 1)
+    u: jax.Array,  # (H, K)     bonus for the current token
+    state: jax.Array | None = None,  # (H, K, V) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV-6 oracle.
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+    Returns (o (T, H, V), final state (H, K, V)).  All math in fp32.
+    """
+    T, H, K = r.shape
+    V = v.shape[-1]
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((H, K, V), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (H,K),(H,K),(H,V),(H,K)
+        kv = kt[:, :, None] * vt[:, None, :]  # (H, K, V)
+        o = jnp.einsum("hk,hkv->hv", rt, s + uf[:, :, None] * kv)
+        s_new = wt[:, :, None] * s + kv
+        return s_new, o
+
+    s_fin, o = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return o, s_fin
+
+
+def wkv6_chunked(
+    r: jax.Array,  # (T, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (T, H, V)
+    w: jax.Array,  # (T, H, K)
+    u: jax.Array,  # (H, K)
+    state: jax.Array | None = None,
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked jnp WKV-6 — same log-space algebra as the Pallas kernel.
+
+    O(1) compile depth (scan over T/L chunks), MXU-shaped matmuls inside the
+    chunk.  This is the path the training graph and the multi-pod dry-run
+    lower; the Pallas kernel is its TPU-fused twin.
+    """
+    T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    Tp = (T + L - 1) // L * L
+    pad = Tp - T
+
+    def pad_t(x, fill):
+        return (
+            x
+            if pad == 0
+            else jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0
+            )
+        )
+
+    rf = pad_t(r.astype(jnp.float32), 0).reshape(Tp // L, L, H, K)
+    kf = pad_t(k.astype(jnp.float32), 0).reshape(Tp // L, L, H, K)
+    vf = pad_t(v.astype(jnp.float32), 0).reshape(Tp // L, L, H, V)
+    wf = pad_t(w.astype(jnp.float32), 1).reshape(Tp // L, L, H, K)
+    uf = u.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((H, K, V), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+    eye = jnp.eye(L, dtype=jnp.float32)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, wc = inp  # (L,H,K) etc.
+        lw = jnp.log(jnp.maximum(wc, 1e-38))
+        cs = jnp.cumsum(lw, axis=0)
+        cs_ex = cs - lw
+        r_dec = rc * jnp.exp(cs_ex)
+        o_state = jnp.einsum("lhk,hkv->lhv", r_dec, s)
+        dif = jnp.minimum(cs_ex[:, None] - cs[None, :], 0.0)  # (L,L,H,K)
+        dec = jnp.exp(dif) * tri[:, :, None, None]
+        scores = jnp.einsum("lhk,mhk,lmhk->hlm", rc, kc, dec)
+        diag = jnp.einsum("lhk,hk,lhk->hl", rc, uf, kc)
+        scores = scores + eye[None] * diag[:, :, None]
+        o_intra = jnp.einsum("hlm,mhv->lhv", scores, vc)
+        total = cs[-1]
+        k_dec = kc * jnp.exp(total[None] - cs)
+        s_new = jnp.exp(total)[:, :, None] * s + jnp.einsum("lhk,lhv->hkv", k_dec, vc)
+        return s_new, o_state + o_intra
+
+    s_fin, o = jax.lax.scan(chunk_step, s0, (rf, kf, vf, wf))
+    return o.reshape(Tp, H, V)[:T], s_fin

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: chunked RWKV-6 (WKV) linear recurrence.
+
+The recurrence  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t,
+               o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+is sequential in t; the naive form does T tiny (K×V) updates and starves the
+MXU.  This kernel uses the standard chunked reformulation adapted to TPU:
+
+Within a chunk of L tokens (cs = inclusive cumsum of log w, cs_ex = exclusive):
+
+  o_t  =  (r_t ⊙ e^{cs_ex[t]}) · S_chunk_start                  (MXU matmul)
+        + Σ_{s<t} [Σ_k r_t[k] k_s[k] e^{cs_ex[t,k] − cs[s,k]}] v_s
+        + (r_t ⊙ u · k_t) v_t                                   (diag bonus)
+  S_next = diag(e^{cs[L-1]}) S + (k ⊙ e^{cs[L-1] − cs})ᵀ v      (MXU matmul)
+
+All exponents are ≤ 0 (decays are in (0,1)), so the log-space form never
+overflows — unlike the k/∏w rescaling trick, which blows up for strong decay.
+The intra-chunk score tensor is the one VPU-heavy term: an (L, L, K) exp —
+kept ≤ 1 MB in VMEM by the chunk/head-block choice (L=32..64, K,V ≤ 128 per
+head).  The grid is (batch·heads, T/L); the running state lives in an fp32
+VMEM scratch that persists across the sequential chunk dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref, s_scr):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    r = r_ref[0].astype(jnp.float32)  # (L, K)
+    k = k_ref[0].astype(jnp.float32)  # (L, K)
+    v = v_ref[0].astype(jnp.float32)  # (L, V)
+    w = w_ref[0].astype(jnp.float32)  # (L, K) decays in (0, 1]
+    u = u_ref[0].astype(jnp.float32)  # (1, K)
+
+    @pl.when(c == 0)
+    def _load_state():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    s = s_scr[...]  # (K, V)
+
+    lw = jnp.log(jnp.maximum(w, 1e-38))  # (L, K), ≤ 0
+    cs = jnp.cumsum(lw, axis=0)  # inclusive
+    cs_ex = cs - lw  # exclusive
+
+    # contribution of the carried-in state
+    r_dec = r * jnp.exp(cs_ex)  # (L, K), decay ≤ 1
+    o_state = jax.lax.dot_general(
+        r_dec, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, V)
+
+    # intra-chunk: scores[t, s] = Σ_k r[t,k] k[s,k] e^{cs_ex[t,k] − cs[s,k]}, s < t
+    L = r.shape[0]
+    dif = cs_ex[:, None, :] - cs[None, :, :]  # (L, L, K); ≤ 0 for s ≤ t-1
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) > jax.lax.broadcasted_iota(
+        jnp.int32, (L, L), 1
+    )
+    dec = jnp.exp(jnp.minimum(dif, 0.0)) * tri[:, :, None]
+    scores = jnp.sum(r[:, None, :] * k[None, :, :] * dec, axis=2)  # (L, L)
+    # diagonal bonus term
+    diag = jnp.sum(r * u * k, axis=1)  # (L,)
+    eye = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        == jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    ).astype(jnp.float32)
+    scores = scores + eye * diag[:, None]
+    o_intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, V)
+
+    o_ref[0] = (o_state + o_intra).astype(o_ref.dtype)
+
+    # state propagation to the next chunk
+    total = cs[-1:, :]  # (1, K)
+    k_dec = k * jnp.exp(total - cs)  # (L, K), factors ≤ 1
+    s_new = jnp.exp(total).T * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (K, V)
+    s_scr[...] = s_new
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        sout_ref[0] = s_new.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(
+    r: jax.Array,  # (T, H, K)
+    k: jax.Array,  # (T, H, K)
+    v: jax.Array,  # (T, H, V)
+    w: jax.Array,  # (T, H, K)
+    u: jax.Array,  # (H, K)
+    state: jax.Array | None = None,  # (H, K, V)
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked WKV-6. Returns (o (T, H, V) fp32, final state (H, K, V) fp32)."""
+    T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    Tp = (T + L - 1) // L * L
+    nc = Tp // L
+
+    def pad_t(x, fill):
+        if x.shape[0] == Tp:
+            return x
+        pad = jnp.full((Tp - T,) + x.shape[1:], fill, x.dtype)
+        return jnp.concatenate([x, pad], axis=0)
+
+    # head-major layout (H, T, K) so each grid row streams one head
+    rt = pad_t(r, 0).transpose(1, 0, 2)
+    kt = pad_t(k, 0).transpose(1, 0, 2)
+    vt = pad_t(v, 0).transpose(1, 0, 2)
+    wt = pad_t(w, 1).transpose(1, 0, 2)  # pad decay with 1 (log w = 0)
+    s0 = jnp.zeros((H, K, V), jnp.float32) if state is None else state.astype(jnp.float32)
+
+    o, s_fin = pl.pallas_call(
+        _wkv6_kernel,
+        grid=(H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L, V), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, L, K), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, 1, K), lambda h, c: (h, 0, 0)),
+            pl.BlockSpec((1, K, V), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, V), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, V), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, Tp, V), jnp.float32),
+            jax.ShapeDtypeStruct((H, K, V), jnp.float32),
+        ],
+        # running state, persists across the sequential chunk grid dimension
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u.reshape(H, 1, K), s0)
+    return o.transpose(1, 0, 2)[:T], s_fin

@@ -1,0 +1,330 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) -----------
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gc  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCH_IDS, get_config  # noqa: E402
+from ..configs.shapes import SHAPES, ShapeSpec, applicable  # noqa: E402
+from ..models import get_api  # noqa: E402
+from ..models.params import count_params  # noqa: E402
+from ..roofline import analysis as ra  # noqa: E402
+from ..roofline.hlo_parse import collective_stats  # noqa: E402
+from ..sharding import use_mesh  # noqa: E402
+from ..train.optimizer import AdamW, Adafactor  # noqa: E402
+from ..train.train_step import make_train_step  # noqa: E402
+from .mesh import axis_size, data_axes, make_production_mesh  # noqa: E402
+from . import specs as sp  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without hardware: XLA's SPMD
+partitioner must accept every sharding, insert a valid collective schedule,
+and produce a memory/cost analysis.  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40-cell matrix
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# -- scan-depth cost correction ------------------------------------------------
+#
+# XLA's cost analysis counts a while/scan body ONCE, not × trip count (probed
+# and confirmed on this backend).  Since layers are scan-stacked, per-cell
+# totals are affine in each scanned segment's depth:  C(n) = b + Σ nᵢ·cᵢ.
+# We recover the slopes by compiling 1-layer and 2-layer probe variants and
+# extrapolate to the real depth.  Probes share the cell's mesh + shardings.
+
+
+def segment_counts(cfg) -> dict[str, int]:
+    if cfg.family == "audio":
+        return {"enc": cfg.encdec.encoder_layers, "dec": cfg.num_layers}
+    if cfg.family == "hybrid":
+        plen = len(cfg.griffin.pattern)
+        return {"units": cfg.num_layers // plen}
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        return {
+            "dense": cfg.moe.first_dense_layers,
+            "moe": cfg.num_layers - cfg.moe.first_dense_layers,
+        }
+    return {"layers": cfg.num_layers}
+
+
+def with_segments(cfg, counts: dict[str, int]):
+    if cfg.family == "audio":
+        return cfg.replace(
+            num_layers=counts["dec"],
+            encdec=dataclasses.replace(cfg.encdec, encoder_layers=counts["enc"]),
+        )
+    if cfg.family == "hybrid":
+        plen = len(cfg.griffin.pattern)
+        tail = cfg.num_layers % plen
+        return cfg.replace(num_layers=counts["units"] * plen + tail)
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        return cfg.replace(
+            num_layers=counts["dense"] + counts["moe"],
+            moe=dataclasses.replace(cfg.moe, first_dense_layers=counts["dense"]),
+        )
+    return cfg.replace(num_layers=counts["layers"])
+
+
+def adjust_cfg(cfg, shape: ShapeSpec, mesh):
+    dp = axis_size(mesh, *data_axes(mesh))
+    if cfg.moe is not None:
+        tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+        groups = dp if tokens % dp == 0 else 1
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, groups=groups))
+    if shape.kind == "train":
+        # full remat per scanned block: saves only layer-boundary activations
+        # ("dots" would pin fp32 S x S attention logits -> 50+GB/chip temps)
+        cfg = cfg.replace(remat="full")
+    return cfg
+
+
+def n_active_params(cfg, n_total: int) -> int:
+    if cfg.moe is None:
+        return n_total
+    m = cfg.moe
+    n_moe_layers = cfg.num_layers - m.first_dense_layers
+    routed = n_moe_layers * 3 * cfg.d_model * m.expert_ff * m.num_experts
+    return int(n_total - routed * (1.0 - m.top_k / m.num_experts))
+
+
+def _compile_cell(cfg, shape: ShapeSpec, mesh, rules):
+    """Lower + compile one step program; returns (compiled, t_lower, t_compile)."""
+    api = get_api(cfg)
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            opt = Adafactor() if cfg.family == "moe" else AdamW()
+            cell = sp.build_cell(cfg, shape, mesh, optimizer=opt)
+            step = make_train_step(cfg, opt)
+            state_abs = {"opt": cell.extra_abs[0]}
+            state_sh = {"opt": cell.extra_sh[0]}
+            jitted = jax.jit(
+                step,
+                in_shardings=(cell.params_sh, state_sh, cell.batch_sh),
+                # outputs must mirror the inputs or the partitioner inserts
+                # full rematerializations to honor its propagated layout
+                out_shardings=(cell.params_sh, state_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(cell.params_abs, state_abs, cell.batch_abs)
+        elif shape.kind == "prefill":
+            cell = sp.build_cell(cfg, shape, mesh)
+            fn = lambda params, batch: api.prefill(params, batch, cfg)
+            jitted = jax.jit(fn, in_shardings=(cell.params_sh, cell.batch_sh))
+            lowered = jitted.lower(cell.params_abs, cell.batch_abs)
+        else:  # decode
+            cell = sp.build_cell(cfg, shape, mesh)
+            cache_abs, idx_abs = cell.extra_abs
+            cache_sh, idx_sh = cell.extra_sh
+            fn = lambda params, cache, tokens, idx: api.decode_step(
+                params, cache, tokens, idx, cfg
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(cell.params_sh, cache_sh, cell.batch_sh["tokens"], idx_sh),
+                out_shardings=(None, cache_sh),  # donated cache: identical layout
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                cell.params_abs, cache_abs, cell.batch_abs["tokens"], idx_abs
+            )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _costs(compiled) -> tuple[float, float, float, dict]:
+    """(flops, bytes, collective wire bytes, breakdown) — per-device module."""
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(coll.wire_bytes),
+        {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "hlo_lines": hlo.count("\n"),
+        },
+    )
+
+
+def depth_corrected_costs(cfg, shape: ShapeSpec, mesh, rules):
+    """Affine scan-depth extrapolation: compile 1-layer and (1+eᵢ)-layer
+    probes, return extrapolated (flops, bytes, wire) at the true depth plus
+    the collective breakdown of the base probe."""
+    segs = segment_counts(cfg)
+    ones = {k: 1 for k in segs}
+    base_cfg = with_segments(cfg, ones).replace(scan_layers=False)
+    c0, _, _ = _compile_cell(base_cfg, shape, mesh, rules)
+    f0, b0, w0, bk = _costs(c0)
+    del c0
+    gc.collect()
+    flops, bytes_, wire = f0, b0, w0
+    slopes = {}
+    for k in segs:
+        probe = dict(ones)
+        probe[k] = 2
+        ci, _, _ = _compile_cell(
+            with_segments(cfg, probe).replace(scan_layers=False), shape, mesh, rules
+        )
+        fi, bi, wi, _ = _costs(ci)
+        del ci
+        gc.collect()
+        slopes[k] = (fi - f0, bi - b0, wi - w0)
+        n = segs[k]
+        flops += (n - 1) * slopes[k][0]
+        bytes_ += (n - 1) * slopes[k][1]
+        wire += (n - 1) * slopes[k][2]
+    return flops, bytes_, wire, bk, {k: v[0] for k, v in slopes.items()}
+
+
+def lower_cell(arch: str, shape: ShapeSpec, multi_pod: bool, save_hlo: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    cfg = adjust_cfg(get_config(arch), shape, mesh)
+    api = get_api(cfg)
+    rules = {"batch": data_axes(mesh), "groups": data_axes(mesh)}
+
+    # 1) the deliverable: the FULL config must lower + compile on this mesh
+    compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh, rules)
+    mem = compiled.memory_analysis()
+    f_raw, b_raw, w_raw, bk_raw = _costs(compiled)
+    hlo = compiled.as_text() if save_hlo else None
+    mem_fields = {}
+    for f in (
+        "temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        mem_fields[f] = getattr(mem, f, None)
+    del compiled
+    gc.collect()
+
+    # 2) roofline terms (single-pod only): scan-depth-corrected costs
+    roof_row = None
+    if not multi_pod:
+        flops_dev, bytes_dev, wire_dev, _, flop_slopes = depth_corrected_costs(
+            cfg, shape, mesh, rules
+        )
+        n_total = count_params(api.decls(cfg))
+        n_active = n_active_params(cfg, n_total)
+        model_flops = ra.model_flops_estimate(cfg, shape, n_total, n_active)
+        roof = ra.analyze(
+            arch, shape.name, mesh_name, chips,
+            hlo_flops=flops_dev * chips,  # cost_analysis is per-device
+            hlo_bytes=bytes_dev * chips,
+            coll_bytes_per_chip=wire_dev,
+            model_flops=model_flops,
+        )
+        roof_row = roof.row()
+        roof_row["flop_slopes_per_layer"] = flop_slopes
+
+    record = {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "n_params": count_params(api.decls(cfg)),
+        "n_active": n_active_params(cfg, count_params(api.decls(cfg))),
+        "raw_cost_uncorrected": {"flops": f_raw, "bytes": b_raw, "wire": w_raw},
+        "memory_analysis": mem_fields,
+        "collectives": bk_raw,
+        "roofline": roof_row,
+    }
+    if save_hlo and hlo is not None:
+        record["hlo_path"] = os.path.join(
+            OUT_DIR, f"{arch}__{shape.name}__{mesh_name}.hlo.txt"
+        )
+        with open(record["hlo_path"], "w") as f:
+            f.write(hlo)
+    gc.collect()
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = ARCH_IDS if args.all else [args.arch]
+    shapes = list(SHAPES.values()) if args.all or not args.shape else [SHAPES[args.shape]]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            cfg = get_config(arch)
+            ok, why = applicable(cfg, shape)
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape.name}__{mesh_name}"
+                if not ok:
+                    rec = {
+                        "arch": arch, "shape": shape.name, "mesh": mesh_name,
+                        "status": "skip", "reason": why,
+                    }
+                    print(f"[SKIP] {tag}: {why}", flush=True)
+                else:
+                    try:
+                        rec = lower_cell(arch, shape, mp, save_hlo=args.save_hlo)
+                        r = rec.get("roofline")
+                        extra = (
+                            f" flops {r['hlo_flops']:.3e} bytes {r['hlo_bytes']:.3e}"
+                            f" coll/chip {r['coll_bytes_per_chip']:.3e} -> {r['bottleneck']}"
+                            if r else " (shardability only)"
+                        )
+                        print(
+                            f"[OK]   {tag}: lower {rec['lower_s']}s compile {rec['compile_s']}s"
+                            + extra,
+                            flush=True,
+                        )
+                    except Exception as e:  # record failures — they are bugs
+                        rec = {
+                            "arch": arch, "shape": shape.name, "mesh": mesh_name,
+                            "status": "fail", "error": f"{type(e).__name__}: {e}",
+                            "trace": traceback.format_exc()[-4000:],
+                        }
+                        print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                with open(os.path.join(OUT_DIR, f"{tag}.json"), "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                results.append(rec)
+                gc.collect()
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\ndry-run matrix: {n_ok} ok / {n_skip} skip / {n_fail} fail", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 TPU v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis crosses
+the slower inter-pod fabric and defaults to pure data parallelism (one
+gradient all-reduce per step crosses it), switchable to pipeline stages.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before anything initializes jax).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh):
+    """Axes that carry pure data parallelism (includes ``pod`` when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: jax.sharding.Mesh, *names: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for n in names:
+        out *= sizes.get(n, 1)
+    return out

@@ -1,0 +1,206 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every dry-run input.
+
+Nothing here allocates device memory: params, optimizer state, batches and
+KV caches are all abstract (``jax.eval_shape`` / ``ShapeDtypeStruct``), so a
+671B-parameter cell lowers on a laptop-sized host.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import ShapeSpec
+from ..models import ModelConfig, get_api
+from ..models.params import abstract_params, validated_pspec_tree
+from .mesh import axis_size, data_axes
+
+
+def _dp(mesh) -> tuple:
+    """The composite batch-sharding axes, e.g. ("pod","data") multi-pod."""
+    return data_axes(mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for this (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        # one new token; the seq_len lives in the KV cache, for every family
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.family == "audio":
+        specs = {
+            "frames": jax.ShapeDtypeStruct((B, cfg.encdec.num_frames, cfg.d_model), cfg.adt()),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+    text = S - cfg.vlm_patches if cfg.vlm_patches else S
+    specs = {"tokens": jax.ShapeDtypeStruct((B, text), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, text), jnp.int32)
+    if cfg.vlm_patches:
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vlm_patches, cfg.d_model), cfg.adt()
+        )
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = _dp(mesh)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        B = v.shape[0]
+        if B % axis_size(mesh, *dp) == 0:
+            lead = dp
+        elif B % axis_size(mesh, "data") == 0:
+            lead = "data"
+        else:
+            lead = None  # e.g. long_500k's global_batch=1
+        out[k] = NamedSharding(mesh, P(lead, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, abstract_cache, mesh):
+    """KV/state cache PartitionSpecs by leaf name + divisibility.
+
+    batch → data axes; kv heads → model when they divide; otherwise the
+    sequence dim shards over model (flash-decode style — GSPMD inserts the
+    partial-softmax collectives).  MLA latent caches always seq-shard (no
+    head dim to split).
+    """
+    dp = _dp(mesh)
+    m = axis_size(mesh, "model")
+
+    def leaf_spec(path, leaf) -> NamedSharding:
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        shp = leaf.shape
+        if name in ("k", "v"):  # (L?, B, S, KVH, hd)
+            lead = [None] * (len(shp) - 4)
+            kvh, seq = shp[-2], shp[-3]
+            if kvh % m == 0:
+                spec = lead + [dp, None, "model", None]
+            elif seq % m == 0:
+                spec = lead + [dp, "model", None, None]
+            else:
+                spec = lead + [dp, None, None, None]
+        elif name in ("ckv", "krope"):  # (L, B, S, lat)
+            seq = shp[-2]
+            spec = [None, dp, "model" if seq % m == 0 else None, None]
+        elif name == "wkv":  # (L, B, H, K, V)
+            spec = [None, dp, "model" if shp[-3] % m == 0 else None, None, None]
+        elif name in ("tm_shift", "cm_shift"):  # (L, B, D)
+            spec = [None, dp, "model" if shp[-1] % m == 0 else None]
+        elif name == "lru":  # (..., B, W)
+            spec = [None] * (len(shp) - 2) + [dp, "model" if shp[-1] % m == 0 else None]
+        elif name == "conv":  # (..., B, K-1, W)
+            spec = [None] * (len(shp) - 3) + [dp, None, "model" if shp[-1] % m == 0 else None]
+        else:
+            spec = [dp] + [None] * (len(shp) - 1)
+        # final divisibility guard on the batch axes
+        dsz = axis_size(mesh, *dp)
+        for i, s in enumerate(spec):
+            if s == dp and shp[i] % dsz != 0:
+                spec[i] = "data" if shp[i] % axis_size(mesh, "data") == 0 else None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract_cache)
+
+
+@dataclasses.dataclass
+class CellSpecs:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    params_abs: dict
+    params_sh: dict
+    batch_abs: dict
+    batch_sh: dict
+    extra_abs: tuple  # opt state / cache / idx
+    extra_sh: tuple
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, optimizer=None) -> CellSpecs:
+    api = get_api(cfg)
+    decls = api.decls(cfg)
+    params_abs = abstract_params(decls, jnp.bfloat16)
+    # Weight layout by step kind (§Perf iterations 2.1/2.6/5.1):
+    #   train   — FSDP: d_model over data on top of Megatron TP (weight
+    #             gathers ≪ activation+gradient traffic, and fwd+bwd must
+    #             fit optimizer state anyway);
+    #   prefill/decode — inference wants weights *resident*: attention and
+    #             router weights replicate across data (no per-step gathers),
+    #             experts stay fully sharded (model × data via expert_ff).
+    if shape.kind in ("decode", "prefill"):
+        rules = {"embed": None, "expert_embed": None, "expert_ff": "data"}
+    else:
+        rules = {"embed": "data", "expert_embed": "data", "expert_ff": None}
+    pspecs = validated_pspec_tree(decls, mesh, rules)
+    params_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = batch_shardings(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        assert optimizer is not None
+        from ..train.optimizer import zero1_state_specs
+
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        z1 = zero1_state_specs(pspecs, params_abs, mesh, data_axes=_dp(mesh))
+
+        def opt_sh_tree(opt_tree_abs):
+            # m/v (AdamW) and vr/vc/v (Adafactor) mirror params; step replicated
+            def per(path, leaf):
+                names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+                if names and names[0] == "step":
+                    return NamedSharding(mesh, P())
+                # walk the param-spec tree by the path below the top-level key
+                sub = z1
+                for p in path[1:]:
+                    if isinstance(p, jax.tree_util.DictKey):
+                        if isinstance(sub, dict) and p.key in sub:
+                            sub = sub[p.key]
+                        elif p.key in ("vr", "vc", "v"):
+                            break
+                    elif isinstance(p, jax.tree_util.SequenceKey):
+                        sub = sub[p.idx]
+                if isinstance(sub, P):
+                    spec = tuple(sub)[: len(leaf.shape)]
+                    # drop entries that no longer divide (factored moments)
+                    fixed = []
+                    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                    for dim, s in zip(leaf.shape, list(spec) + [None] * len(leaf.shape)):
+                        if s is None:
+                            fixed.append(None)
+                            continue
+                        ns = s if isinstance(s, tuple) else (s,)
+                        tot = 1
+                        for n in ns:
+                            tot *= sizes.get(n, 1)
+                        fixed.append(s if dim % tot == 0 else None)
+                    return NamedSharding(mesh, P(*fixed))
+                return NamedSharding(mesh, P())
+
+            return jax.tree_util.tree_map_with_path(per, opt_tree_abs)
+
+        opt_sh = opt_sh_tree(opt_abs)
+        return CellSpecs(params_abs, params_sh, batch_abs, batch_sh, (opt_abs,), (opt_sh,))
+
+    if shape.kind == "decode":
+        cache_abs = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cache_sh = cache_shardings(cfg, cache_abs, mesh)
+        idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        idx_sh = NamedSharding(mesh, P())
+        return CellSpecs(
+            params_abs, params_sh, batch_abs, batch_sh,
+            (cache_abs, idx_abs), (cache_sh, idx_sh),
+        )
+
+    return CellSpecs(params_abs, params_sh, batch_abs, batch_sh, (), ())

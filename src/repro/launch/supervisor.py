@@ -1,0 +1,79 @@
+"""Fault-tolerant supervisor: run the trainer, restart on crash or hang.
+
+Policies:
+  * crash (non-zero exit, incl. the trainer's NaN-guard code 3) → restart
+    from the latest checkpoint, up to --max-restarts;
+  * hang/straggler (heartbeat file older than --deadline seconds) → kill and
+    restart (step-level straggler mitigation; the provisioning-level story is
+    the market's congestion pricing, see DESIGN.md §5);
+  * each restart resumes exactly (checkpoint + step-pure data pipeline).
+
+    PYTHONPATH=src python -m repro.launch.supervisor --ckpt-dir /tmp/run1 -- \
+        --arch qwen3-1.7b --smoke --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def run_supervised(
+    trainer_args: list[str],
+    ckpt_dir: str,
+    max_restarts: int = 3,
+    deadline_s: float = 300.0,
+    poll_s: float = 2.0,
+    python: str = sys.executable,
+) -> int:
+    hb = os.path.join(tempfile.mkdtemp(prefix="repro_hb_"), "heartbeat")
+    restarts = 0
+    while True:
+        cmd = [
+            python, "-m", "repro.launch.train",
+            "--ckpt-dir", ckpt_dir, "--heartbeat", hb, *trainer_args,
+        ]
+        print(f"[supervisor] launching (attempt {restarts + 1}): {' '.join(cmd)}", flush=True)
+        env = dict(os.environ)
+        proc = subprocess.Popen(cmd, env=env)
+        verdict = None
+        while verdict is None:
+            try:
+                rc = proc.wait(timeout=poll_s)
+                verdict = ("exit", rc)
+            except subprocess.TimeoutExpired:
+                if os.path.exists(hb) and time.time() - os.path.getmtime(hb) > deadline_s:
+                    print("[supervisor] heartbeat stale — killing straggler", flush=True)
+                    proc.kill()
+                    proc.wait()
+                    verdict = ("hang", None)
+        kind, rc = verdict
+        if kind == "exit" and rc == 0:
+            print("[supervisor] trainer finished cleanly", flush=True)
+            return 0
+        restarts += 1
+        if restarts > max_restarts:
+            print(f"[supervisor] giving up after {max_restarts} restarts", flush=True)
+            return 1
+        print(f"[supervisor] restarting ({kind}, rc={rc})", flush=True)
+        # fault injection only fires once: clear it for the retry
+        env.pop("FAULT_STEP", None)
+        os.environ.pop("FAULT_STEP", None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--deadline", type=float, default=300.0)
+    ap.add_argument("trainer_args", nargs=argparse.REMAINDER)
+    args = ap.parse_args()
+    rest = [a for a in args.trainer_args if a != "--"]
+    return run_supervised(rest, args.ckpt_dir, args.max_restarts, args.deadline)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Model zoo substrate: params system, shared layers, per-family blocks."""
+from .config import (
+    EncDecCfg,
+    GriffinCfg,
+    MLACfg,
+    MoECfg,
+    ModelConfig,
+    RWKVCfg,
+)
+from .registry import ModelAPI, get_api, make_batch
+
+__all__ = [
+    "EncDecCfg",
+    "GriffinCfg",
+    "MLACfg",
+    "MoECfg",
+    "ModelConfig",
+    "RWKVCfg",
+    "ModelAPI",
+    "get_api",
+    "make_batch",
+]

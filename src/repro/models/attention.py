@@ -1,0 +1,272 @@
+"""GQA / MQA attention: training (full-seq causal), decode (KV cache), cross.
+
+Covers the zoo's attention variants with one implementation:
+  * grouped-query attention, any H/KVH ratio (incl. MQA kv=1 for griffin);
+  * optional per-head qk RMS-norm (qwen3), QKV bias (qwen2 / qwen1.5);
+  * sliding-window masks (recurrentgemma local attention);
+  * cross-attention with precomputed encoder KV (whisper);
+  * decode path writing one token into a (B, S_max, KVH, hd) cache.
+
+Decode sharding: when KVH ≥ model-axis size the cache shards over heads; for
+small-KV models the ``kv_seq`` logical axis maps to ``model`` instead and the
+softmax/weighted-sum reductions over the sharded length lower to GSPMD
+all-reduces — distributed flash-decode without hand-written collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import replicate, shard, shard_cache_kv, shard_decode_logits
+from .config import ModelConfig
+from .layers import apply_rope, matmul, rmsnorm, rope_angles
+from .params import ParamDecl
+
+NEG_INF = -2.0e38
+
+
+def attn_decls(
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+) -> dict:
+    d = {
+        "wq": ParamDecl((d_model, num_heads, head_dim), ("embed", "heads", "qk_head_dim")),
+        "wk": ParamDecl((d_model, num_kv_heads, head_dim), ("embed", "kv_heads", "qk_head_dim")),
+        "wv": ParamDecl((d_model, num_kv_heads, head_dim), ("embed", "kv_heads", "v_head_dim")),
+        "wo": ParamDecl((num_heads, head_dim, d_model), ("heads", "v_head_dim", "embed")),
+    }
+    if qkv_bias:
+        d["bq"] = ParamDecl((num_heads, head_dim), ("heads", "qk_head_dim"), init="zeros")
+        d["bk"] = ParamDecl((num_kv_heads, head_dim), ("kv_heads", "qk_head_dim"), init="zeros")
+        d["bv"] = ParamDecl((num_kv_heads, head_dim), ("kv_heads", "v_head_dim"), init="zeros")
+    if qk_norm:
+        d["q_norm"] = ParamDecl((head_dim,), ("qk_head_dim",), init="ones")
+        d["k_norm"] = ParamDecl((head_dim,), ("qk_head_dim",), init="ones")
+    return d
+
+
+def cache_write(cache: jax.Array, new: jax.Array, idx) -> jax.Array:
+    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at position idx.
+
+    Uses a one-hot select instead of dynamic_update_slice: a DUS with a
+    *dynamic* start on a sharded sequence dim forces the SPMD partitioner to
+    all-gather the whole cache (GBs per layer per token); the elementwise
+    select stays shard-local under any layout.
+    """
+    T = cache.shape[1]
+    hot = jnp.arange(T, dtype=jnp.int32) == idx
+    hot = hot.reshape((1, T) + (1,) * (cache.ndim - 2))
+    return jnp.where(hot, new.astype(cache.dtype), cache)
+
+
+def _mask(
+    q_pos: jax.Array,  # (B, S) int32
+    kv_len: int,
+    causal: bool,
+    window: int | None,
+) -> jax.Array:
+    """(B, S, T) boolean keep-mask."""
+    kv_pos = jnp.arange(kv_len, dtype=jnp.int32)
+    keep = jnp.ones((q_pos.shape[0], q_pos.shape[1], kv_len), bool)
+    if causal:
+        keep &= kv_pos[None, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        keep &= kv_pos[None, None, :] > q_pos[:, :, None] - window
+    return keep
+
+
+def mha(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, KVH, hd)
+    v: jax.Array,  # (B, T, KVH, hd)
+    keep: jax.Array | None,  # (B, S, T) or None (full attention)
+    grouped: bool = False,
+) -> jax.Array:
+    """Attention core; fp32 softmax; returns (B, S, H, hd).
+
+    Two GQA strategies, picked by the caller:
+
+    * training / prefill (``grouped=False``): expand KV heads to the query
+      head count after projection — clean 4D einsums that shard on the heads
+      axis (the 5D grouped form defeats the partitioner when TP > KVH and
+      materialized replicated S×S logits);
+    * decode (``grouped=True``): S=1 and the cache may be *sequence-sharded*
+      (KVH < TP).  Never expand the cache: the 5D grouped einsums contract
+      against the compact KV, the T-sharded softmax lowers to partial
+      max/sum all-reduces, and the tiny (B·H·hd) output is all-reduced —
+      instead of all-gathering the whole multi-GB cache every token.
+    """
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    if grouped and H != KVH:
+        g = H // KVH
+        # decode queries are tiny; replicate them so their head sharding can't
+        # force the partitioner to gather the sequence-sharded cache
+        qg = replicate(q).reshape(B, S, KVH, g, hd)
+        logits = jnp.einsum(
+            "bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32
+        ) * (hd**-0.5)
+        logits = shard_decode_logits(logits, heads_dim=1, seq_dim=4)
+        if keep is not None:
+            logits = jnp.where(keep[:, None, None, :, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum(
+            "bkgst,btkh->bskgh", w, v, preferred_element_type=jnp.float32
+        ).reshape(B, S, H, hd)
+        return out.astype(v.dtype)
+    if H != KVH:
+        g = H // KVH
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum(
+        "bsnh,btnh->bnst", q, k, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    if grouped:  # decode: stay consistent with the cache layout
+        logits = shard_decode_logits(logits, heads_dim=1, seq_dim=3)
+    else:
+        logits = shard(logits, "batch", "heads", None, "kv_seq")
+    if keep is not None:
+        logits = jnp.where(keep[:, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", w, v, preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+FLASH_MIN_KV = 8192  # blockwise path kicks in for long-context prefill
+
+
+def blockwise_mha(
+    q: jax.Array,  # (B, S, H, hd) — heads already expanded to match q
+    k: jax.Array,  # (B, T, H, hd)
+    v: jax.Array,  # (B, T, H, hd)
+    q_pos: jax.Array,  # (B, S)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block: int = 1024,
+) -> jax.Array:
+    """Flash-style attention: scan over KV blocks with running (max, sum, acc)
+    in fp32 — the S×T score matrix never materializes (O(S·block) live), which
+    removes the dominant memory-bytes term of the 32k-prefill cells.
+    Numerically identical to softmax(QKᵀ)V up to fp32 associativity."""
+    B, S, H, hd = q.shape  # hd = qk dim; v may differ (MLA: nope+rope vs v_dim)
+    T = k.shape[1]
+    hd_v = v.shape[-1]
+    blk = min(block, T)
+    Tp = (T + blk - 1) // blk * blk
+    pad = Tp - T
+    if pad:
+        k = jnp.concatenate([k, jnp.zeros((B, pad, H, hd), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, H, hd_v), v.dtype)], axis=1)
+    nb = Tp // blk
+    scale = hd**-0.5
+    kb = k.reshape(B, nb, blk, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, blk, H, hd_v).transpose(1, 0, 2, 3, 4)
+    kv_pos = jnp.arange(Tp, dtype=jnp.int32).reshape(nb, blk)
+
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd_v), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, pos = xs  # (B,blk,H,hd) ×2, (blk,)
+        s = jnp.einsum(
+            "bsnh,btnh->bnst", q, kblk, preferred_element_type=jnp.float32
+        ) * scale  # (B,H,S,blk)
+        keep = pos[None, None, :] < T
+        if causal:
+            keep = keep & (pos[None, None, :] <= q_pos[:, :, None])
+        if window is not None:
+            keep = keep & (pos[None, None, :] > q_pos[:, :, None] - window)
+        s = jnp.where(keep[:, None, :, :].transpose(0, 1, 2, 3), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * r + p.sum(axis=-1)
+        acc_new = acc * r[..., None] + jnp.einsum(
+            "bnst,btnh->bnsh", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kv_pos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)  # (B,S,H,hd)
+
+
+def attention(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    q_pos: jax.Array,  # (B, S) absolute positions
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    use_rope: bool = True,
+    x_kv: jax.Array | None = None,  # cross-attention source (B, T, D)
+    cache: dict | None = None,  # {"k","v"}: (B, S_max, KVH, hd)
+    cache_idx: jax.Array | None = None,  # scalar write position
+) -> tuple[jax.Array, dict | None]:
+    hd = cfg.hd()
+    q = matmul(x, p["wq"], "bsd,dnh->bsnh")
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+
+    if cache is not None and cache_idx is None:
+        # cross-attention decode: KV was precomputed at prefill, reuse as-is.
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        keep = None
+    else:
+        src = x if x_kv is None else x_kv
+        k = matmul(src, p["wk"], "btd,dnh->btnh")
+        v = matmul(src, p["wv"], "btd,dnh->btnh")
+        if "bk" in p:
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+        if "k_norm" in p:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+        if use_rope and x_kv is None:
+            cos_q, sin_q = rope_angles(q_pos, hd, cfg.rope_theta)
+            q = apply_rope(q, cos_q, sin_q)
+            k = apply_rope(k, cos_q, sin_q)  # self-attn: same positions
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        if cache is not None:
+            # self-attention decode: append this step's K/V at cache_idx
+            ck = shard_cache_kv(cache_write(cache["k"], k, cache_idx))
+            cv = shard_cache_kv(cache_write(cache["v"], v, cache_idx))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            keep = _mask(q_pos, k.shape[1], causal=True, window=window)
+            out = mha(q, k, v, keep, grouped=True)
+            out = matmul(out, p["wo"], "bsnh,nhd->bsd")
+            return out, new_cache
+        elif x_kv is not None:
+            new_cache = None
+            keep = None  # cross-attention training: attend to every frame
+        else:
+            new_cache = None
+            if causal and k.shape[1] >= FLASH_MIN_KV:
+                # long-context prefill/train: blockwise attention, no S×T
+                # score materialization
+                if q.shape[2] != k.shape[2]:
+                    g = q.shape[2] // k.shape[2]
+                    k = jnp.repeat(k, g, axis=2)
+                    v = jnp.repeat(v, g, axis=2)
+                q = shard(q, "batch", "seq", "heads", None)
+                out = blockwise_mha(q, k, v, q_pos, causal=True, window=window)
+                out = matmul(out, p["wo"], "bsnh,nhd->bsd")
+                return out, None
+            keep = _mask(q_pos, k.shape[1], causal=causal, window=window)
+    q = shard(q, "batch", "seq", "heads", None)
+
+    out = mha(q, k, v, keep)
+    out = matmul(out, p["wo"], "bsnh,nhd->bsd")
+    return out, new_cache

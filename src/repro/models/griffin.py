@@ -1,0 +1,185 @@
+"""RecurrentGemma / Griffin blocks: RG-LRU recurrence + local sliding-window
+attention in a 2:1 pattern (arXiv:2402.19427).
+
+Recurrent block:  x → [linear_y → GeLU] ⊙ [linear_x → causal depthwise conv
+(width 4) → RG-LRU] → linear_out.  RG-LRU gates are block-diagonal (one block
+per head, as in the released model):
+
+  r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+  a_t = exp(−c · softplus(Λ) · r_t)
+  h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan (log-depth in sequence length); decode is a
+single O(lru_width) step + a 3-sample conv tail + a rolling window KV cache —
+bounded state, which is why this hybrid runs the 500k long-context cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .attention import attn_decls, attention, mha
+from .config import ModelConfig
+from .layers import apply_rope, glu, glu_decls, matmul, rmsnorm, rope_angles
+from .params import ParamDecl
+
+LRU_BLOCKS = 10  # block-diagonal gate heads (recurrentgemma-2b)
+
+
+def _bdiag_decl(width: int) -> ParamDecl:
+    c = width // LRU_BLOCKS
+    return ParamDecl((LRU_BLOCKS, c, c), (None, "lru", None), scale=0.02)
+
+
+def rec_block_decls(cfg: ModelConfig) -> dict:
+    g = cfg.griffin
+    D, W = cfg.d_model, g.lru_width
+    return {
+        "wy": ParamDecl((D, W), ("embed", "lru")),
+        "wx": ParamDecl((D, W), ("embed", "lru")),
+        "conv_w": ParamDecl((g.conv_width, W), ("conv", "lru"), scale=0.1),
+        "conv_b": ParamDecl((W,), ("lru",), init="zeros"),
+        "gate_a": _bdiag_decl(W),
+        "gate_a_b": ParamDecl((W,), ("lru",), init="zeros"),
+        "gate_x": _bdiag_decl(W),
+        "gate_x_b": ParamDecl((W,), ("lru",), init="zeros"),
+        "lam": ParamDecl((W,), ("lru",), init="uniform_pm", scale=1.0),
+        "wo": ParamDecl((W, D), ("lru", "embed")),
+    }
+
+
+def _bdiag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    B, S, W = x.shape
+    h = x.reshape(B, S, LRU_BLOCKS, W // LRU_BLOCKS)
+    y = jnp.einsum("bshc,hce->bshe", h, w, preferred_element_type=jnp.float32)
+    return y.reshape(B, S, W) + b.astype(jnp.float32)
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Causal depthwise conv, width K.  tail: (B, K-1, W) decode carry."""
+    K = w.shape[0]
+    if tail is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        prev = tail.astype(x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+K-1, W)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[K - 1 - i].astype(x.dtype)
+        for i in range(K)
+    )
+    return out + b.astype(x.dtype), xp[:, -(K - 1) :, :]
+
+
+def rg_lru(
+    x: jax.Array,  # (B, S, W) fp32
+    p: dict,
+    c_scale: float,
+    h0: jax.Array | None,  # (B, W) fp32 decode carry
+) -> tuple[jax.Array, jax.Array]:
+    r = jax.nn.sigmoid(_bdiag(x, p["gate_a"], p["gate_a_b"]))
+    i = jax.nn.sigmoid(_bdiag(x, p["gate_x"], p["gate_x_b"]))
+    log_a = -c_scale * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    if x.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None], h
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hh, hh[:, -1]
+
+
+def recurrent_block(
+    x: jax.Array,  # (B, S, D) — already normed
+    p: dict,
+    cfg: ModelConfig,
+    state: dict | None = None,  # {"conv": (B,K-1,W), "lru": (B,W)}
+) -> tuple[jax.Array, dict]:
+    g = cfg.griffin
+    y = jax.nn.gelu(matmul(x, p["wy"], "bsd,dw->bsw").astype(jnp.float32))
+    xx = matmul(x, p["wx"], "bsd,dw->bsw")
+    xx = shard(xx, "batch", "seq", "lru")
+    xx, conv_tail = _conv1d(xx, p["conv_w"], p["conv_b"], state["conv"] if state else None)
+    h, lru_last = rg_lru(
+        xx.astype(jnp.float32), p, g.c_scale, state["lru"] if state else None
+    )
+    out = (h * y).astype(x.dtype)
+    out = matmul(out, p["wo"], "bsw,wd->bsd")
+    return out, {"conv": conv_tail.astype(x.dtype), "lru": lru_last}
+
+
+def griffin_attn_decode(
+    x: jax.Array,  # (B, 1, D) normed
+    p: dict,
+    cfg: ModelConfig,
+    pos: jax.Array,  # scalar absolute position
+    cache: dict,  # {"k","v"}: (B, W, KVH, hd) rolling window
+) -> tuple[jax.Array, dict]:
+    hd = cfg.hd()
+    W = cache["k"].shape[1]
+    B = x.shape[0]
+    q = matmul(x, p["wq"], "bsd,dnh->bsnh")
+    k = matmul(x, p["wk"], "bsd,dnh->bsnh")
+    v = matmul(x, p["wv"], "bsd,dnh->bsnh")
+    q_pos = jnp.full((B, 1), pos, jnp.int32)
+    cos, sin = rope_angles(q_pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    ck = jnp.concatenate([cache["k"][:, 1:], k.astype(cache["k"].dtype)], axis=1)
+    cv = jnp.concatenate([cache["v"][:, 1:], v.astype(cache["v"].dtype)], axis=1)
+    kv_pos = pos - W + 1 + jnp.arange(W, dtype=jnp.int32)
+    keep = jnp.broadcast_to((kv_pos >= 0)[None, None, :], (B, 1, W))
+    out = mha(q, ck, cv, keep)
+    out = matmul(out, p["wo"], "bsnh,nhd->bsd")
+    return out, {"k": ck, "v": cv}
+
+
+def griffin_layer_decls(cfg: ModelConfig, kind: str) -> dict:
+    d = {
+        "ln1": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": glu_decls(cfg.d_model, cfg.d_ff),
+    }
+    if kind == "rec":
+        d["rec"] = rec_block_decls(cfg)
+    else:
+        d["attn"] = attn_decls(
+            cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd()
+        )
+    return d
+
+
+def griffin_layer(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    kind: str,
+    q_pos: jax.Array,
+    *,
+    state: dict | None = None,
+    pos: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        t_out, new_state = recurrent_block(h, p["rec"], cfg, state)
+    elif state is not None:
+        t_out, new_state = griffin_attn_decode(h, p["attn"], cfg, pos, state)
+    else:
+        t_out, _ = attention(
+            h, p["attn"], cfg, q_pos, causal=True, window=cfg.griffin.window
+        )
+        new_state = None
+    x = x + t_out
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + glu(h, p["mlp"], act="gelu")
+    return x, new_state

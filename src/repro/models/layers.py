@@ -1,0 +1,105 @@
+"""Shared building blocks: norms, RoPE, GLU MLPs, embeddings, losses.
+
+Conventions across the zoo:
+  * activations bf16, all matmuls accumulate fp32 (``preferred_element_type``);
+  * norms and softmax in fp32;
+  * RoPE cos/sin computed from positions on the fly (no 500k-row tables);
+  * every matmul goes through ``matmul`` so dtype policy lives in one place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import shard
+from .params import ParamDecl
+
+
+def matmul(x: jax.Array, w: jax.Array, spec: str) -> jax.Array:
+    """einsum with fp32 accumulation, result cast back to x.dtype."""
+    return jnp.einsum(spec, x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin of shape positions.shape + (dim//2,), fp32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# -- GLU MLP -----------------------------------------------------------------
+
+
+def glu_decls(d_model: int, d_ff: int, act: str = "silu") -> dict:
+    d = {
+        "wg": ParamDecl((d_model, d_ff), ("embed", "ff")),
+        "wd": ParamDecl((d_ff, d_model), ("ff", "embed")),
+    }
+    if act != "relu2":  # gated variants need the second up-projection
+        d["wu"] = ParamDecl((d_model, d_ff), ("embed", "ff"))
+    return d
+
+
+def glu(x: jax.Array, p: dict, act: str = "silu") -> jax.Array:
+    g = matmul(x, p["wg"], "...d,df->...f")
+    g = shard(g, "batch", None, "ff") if g.ndim == 3 else g
+    if act == "relu2":  # nemotron/minitron: squared ReLU, non-gated
+        h = jnp.square(jax.nn.relu(g.astype(jnp.float32))).astype(x.dtype)
+    elif act == "silu":
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * matmul(x, p["wu"], "...d,df->...f")
+    elif act == "gelu":
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * matmul(x, p["wu"], "...d,df->...f")
+    else:
+        raise ValueError(act)
+    return matmul(h, p["wd"], "...f,fd->...d")
+
+
+# -- embeddings / head / loss -------------------------------------------------
+
+
+def embed_decls(vocab: int, d_model: int) -> ParamDecl:
+    return ParamDecl((vocab, d_model), ("vocab", "embed"), init="embed", scale=0.02)
+
+
+def embed_lookup(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    # one-hot matmul: gathers over a vocab-sharded table lower to a masked
+    # local lookup + all-reduce under GSPMD (vs a slow cross-shard gather).
+    return jnp.asarray(table)[tokens]
+
+
+def lm_logits(x: jax.Array, wout: jax.Array) -> jax.Array:
+    return matmul(x, wout, "...d,dv->...v")
+
+
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4
+) -> jax.Array:
+    """Mean token cross-entropy (fp32) with optional z-loss stabilizer.
+
+    Vocab-sharded-friendly: logsumexp and the label term are reductions over
+    the vocab dim, which GSPMD lowers to local reduce + all-reduce.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    true_logit = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - true_logit
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    return jnp.mean(nll)

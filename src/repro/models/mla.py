@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with compressed-KV decode cache.
+
+Training path expands K/V from the latent (dense matmuls, MXU-friendly).
+Decode path uses the *absorbed* formulation: q_nope is folded through the
+k-up projection so attention scores hit the (kv_lora)-dim latent cache
+directly, and values are reconstructed only after the softmax:
+
+  scores  = (q_nope · W_k_up) · c_kv  +  q_rope · k_rope
+  out     = (softmax · c_kv) · W_v_up
+
+The cache per token is kv_lora + rope_dim (= 576 for V3) instead of
+2·H·head_dim (= 32768) — the whole point of MLA for 32k-context serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import apply_rope, matmul, rmsnorm, rope_angles
+from .params import ParamDecl
+
+NEG_INF = -2.0e38
+
+
+def mla_decls(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    H, D = cfg.num_heads, cfg.d_model
+    qk = m.nope_dim + m.rope_dim
+    return {
+        "wq_down": ParamDecl((D, m.q_lora), ("embed", "lora")),
+        "q_ln": ParamDecl((m.q_lora,), ("lora",), init="ones"),
+        "wq_up": ParamDecl((m.q_lora, H, qk), ("lora", "heads", "qk_head_dim")),
+        "wkv_down": ParamDecl((D, m.kv_lora + m.rope_dim), ("embed", "lora")),
+        "kv_ln": ParamDecl((m.kv_lora,), ("lora",), init="ones"),
+        "wk_up": ParamDecl((m.kv_lora, H, m.nope_dim), ("lora", "heads", "qk_head_dim")),
+        "wv_up": ParamDecl((m.kv_lora, H, m.v_dim), ("lora", "heads", "v_head_dim")),
+        "wo": ParamDecl((H, m.v_dim, D), ("heads", "v_head_dim", "embed")),
+    }
+
+
+def _project_q(x, p, cfg):
+    m = cfg.mla
+    cq = rmsnorm(matmul(x, p["wq_down"], "bsd,dl->bsl"), p["q_ln"], cfg.norm_eps)
+    q = matmul(cq, p["wq_up"], "bsl,lnh->bsnh")  # (B,S,H,nope+rope)
+    return q[..., : m.nope_dim], q[..., m.nope_dim :]
+
+
+def _project_kv_latent(x, p, cfg, q_pos):
+    m = cfg.mla
+    ckv_full = matmul(x, p["wkv_down"], "bsd,dl->bsl")
+    ckv = rmsnorm(ckv_full[..., : m.kv_lora], p["kv_ln"], cfg.norm_eps)
+    krope = ckv_full[..., m.kv_lora :]
+    cos, sin = rope_angles(q_pos, m.rope_dim, cfg.rope_theta)
+    krope = apply_rope(krope[..., None, :], cos, sin)[..., 0, :]
+    return ckv, krope
+
+
+def mla_attention(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    q_pos: jax.Array,  # (B, S)
+    *,
+    cache: dict | None = None,  # {"ckv": (B,Smax,kv_lora), "krope": (B,Smax,rope)}
+    cache_idx: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    m = cfg.mla
+    H = cfg.num_heads
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+
+    q_nope, q_rope = _project_q(x, p, cfg)
+    cos, sin = rope_angles(q_pos, m.rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    q_nope = shard(q_nope, "batch", "seq", "heads", None)
+
+    ckv, krope = _project_kv_latent(x, p, cfg, q_pos)
+
+    if cache is None:
+        # -- training / prefill: expand K,V from the latent ------------------
+        k_nope = matmul(ckv, p["wk_up"], "btl,lnh->btnh")
+        v = matmul(ckv, p["wv_up"], "btl,lnh->btnh")
+        k_nope = shard(k_nope, "batch", "seq", "heads", None)
+        B, S = x.shape[:2]
+        kr = jnp.broadcast_to(krope[:, :, None, :], (B, S, H, m.rope_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, kr.astype(k_nope.dtype)], axis=-1)
+        from .attention import FLASH_MIN_KV, blockwise_mha
+
+        if S >= FLASH_MIN_KV:
+            # long-context prefill: blockwise attention (no S x S scores).
+            # note: qk dim is nope+rope (scale handled inside via hd**-0.5 of
+            # the concatenated width, which equals our explicit scale)
+            out = blockwise_mha(q, k, v, q_pos, causal=True)
+        else:
+            logits = jnp.einsum("bsnh,btnh->bnst", q, k, preferred_element_type=jnp.float32)
+            logits = logits * scale
+            kv_pos = jnp.arange(S, dtype=jnp.int32)
+            keep = kv_pos[None, None, :] <= q_pos[:, :, None]
+            logits = jnp.where(keep[:, None, :, :], logits, NEG_INF)
+            w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+            out = jnp.einsum("bnst,btnh->bsnh", w, v, preferred_element_type=jnp.float32)
+        out = matmul(out.astype(x.dtype), p["wo"], "bsnh,nhd->bsd")
+        return out, None
+
+    # -- decode: absorbed attention over the latent cache ---------------------
+    from .attention import cache_write
+
+    ckv_c = cache_write(cache["ckv"], ckv, cache_idx)
+    krope_c = cache_write(cache["krope"], krope, cache_idx)
+    from ..sharding import shard_cache_latent
+
+    ckv_c = shard_cache_latent(ckv_c)
+    krope_c = shard_cache_latent(krope_c)
+    new_cache = {"ckv": ckv_c, "krope": krope_c}
+
+    from ..sharding import replicate, shard_decode_logits
+
+    q_abs = jnp.einsum(
+        "bsnh,lnh->bsnl", q_nope, p["wk_up"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)  # (B,S,H,kv_lora)
+    # decode queries are small; replicating them lets the T-sharded latent
+    # cache stay put (its head-less layout can't match head-sharded queries)
+    q_abs = replicate(q_abs)
+    q_rope_r = replicate(q_rope)
+    logits = (
+        jnp.einsum("bsnl,btl->bnst", q_abs, ckv_c, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bsnr,btr->bnst", q_rope_r, krope_c, preferred_element_type=jnp.float32
+        )
+    ) * scale
+    logits = shard_decode_logits(logits, heads_dim=1, seq_dim=3, prefer_seq=True)
+    T = ckv_c.shape[1]
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    keep = kv_pos[None, None, :] <= q_pos[:, :, None]
+    logits = jnp.where(keep[:, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bnst,btl->bsnl", w, ckv_c, preferred_element_type=jnp.float32)
+    out = jnp.einsum(
+        "bsnl,lnh->bsnh", o_lat.astype(x.dtype), p["wv_up"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    out = matmul(out, p["wo"], "bsnh,nhd->bsd")
+    return out, new_cache

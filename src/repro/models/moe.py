@@ -1,0 +1,145 @@
+"""Mixture-of-Experts with capacity-based sorted dispatch (EP over `model`).
+
+Design targets (in order):
+  1. **Static shapes** — dry-run compilable, predictable at planet scale.
+  2. **HLO_FLOPs ≈ useful FLOPs** — no GShard one-hot dispatch einsums, whose
+     (T·E·C·D) cost dwarfs the expert matmuls and wrecks the
+     MODEL_FLOPS/HLO_FLOPs roofline ratio.  Dispatch here is sort + gather +
+     scatter-add: zero matmul FLOPs.
+  3. **Shard-local routing** — tokens are viewed as (groups, Tg, D) with
+     ``groups`` mapped to the data axis, so the per-group argsort never
+     crosses shards; experts (and the (G, E, C, D) dispatch buffers) shard
+     over ``model``; the combine's scatter-add reduces over `model` via one
+     GSPMD all-reduce — exactly the EP combine collective.
+
+Algorithm per group (capacity C = ceil(Tg·k/E · cf)):
+  router → top-k ids/gates → stable argsort by expert id →
+  rank-in-expert via searchsorted offsets → keep = rank < C (overflow drops,
+  like GShard; cf controls drop rate) → (E, C) token-index buffer →
+  gather → 3 expert einsums → gate-weighted scatter-add back.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import glu, glu_decls, matmul
+from .params import ParamDecl
+
+
+def moe_decls(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    decls = {
+        "router": ParamDecl((d, m.num_experts), ("embed", "experts"), scale=0.02),
+        # expert weights carry their own logical axes so the launch rules can
+        # shard them FSDP-style for training (gather weights, cheap vs giant
+        # activations) but leave them resident for decode (tiny activations —
+        # shard expert_ff over data instead, so no per-step weight gathers).
+        "wg": ParamDecl((m.num_experts, d, m.expert_ff), ("experts", "expert_embed", "expert_ff")),
+        "wu": ParamDecl((m.num_experts, d, m.expert_ff), ("experts", "expert_embed", "expert_ff")),
+        "wd": ParamDecl((m.num_experts, m.expert_ff, d), ("experts", "expert_ff", "expert_embed")),
+    }
+    if m.shared_experts:
+        decls["shared"] = glu_decls(d, m.shared_ff or m.shared_experts * m.expert_ff)
+    return decls
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k / m.num_experts * m.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # ≥4, rounded up to a multiple of 4
+
+
+def moe_block(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out (B, S, D), aux load-balance loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = m.groups if T % m.groups == 0 else 1
+    Tg = T // G
+    E, K = m.num_experts, m.top_k
+    C = capacity(Tg, cfg)
+
+    xt = x.reshape(G, Tg, D)
+    xt = shard(xt, "groups", None, None)
+
+    # --- routing (fp32) ------------------------------------------------------
+    logits = jnp.einsum(
+        "gtd,de->gte", xt, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits * m.router_scale, axis=-1)  # (G, Tg, E)
+    gates, ids = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style): E · Σ_e f_e · p̄_e
+    me = probs.mean(axis=1)  # (G, E)
+    # fraction routed to e — from sorted counts below (cheap: reuse offsets)
+
+    # --- sorted dispatch ------------------------------------------------------
+    flat_ids = ids.reshape(G, Tg * K)
+    flat_tok = jnp.broadcast_to(
+        jnp.arange(Tg, dtype=jnp.int32)[:, None], (Tg, K)
+    ).reshape(Tg * K)
+    flat_gate = gates.reshape(G, Tg * K).astype(jnp.float32)
+
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)  # (G, Tg·K)
+    sids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    stok = jnp.take_along_axis(
+        jnp.broadcast_to(flat_tok, (G, Tg * K)), order, axis=-1
+    )
+    sgate = jnp.take_along_axis(flat_gate, order, axis=-1)
+
+    # start offset of each expert's run: binary search, (G, E)
+    offsets = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(
+        sids
+    ).astype(jnp.int32)
+    ranks = jnp.arange(Tg * K, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        offsets, sids, axis=-1
+    )
+    keep = ranks < C
+    dest = jnp.where(keep, sids * C + ranks, E * C)  # overflow → dump slot
+
+    counts = jnp.diff(jnp.concatenate([offsets, jnp.full((G, 1), Tg * K, jnp.int32)], -1))
+    frac = counts.astype(jnp.float32) / (Tg * K)  # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac * me, axis=-1))
+
+    def build_buffers(dest_g, stok_g, sgate_g):
+        buf_tok = jnp.full((E * C + 1,), Tg, jnp.int32).at[dest_g].set(stok_g)
+        buf_gate = jnp.zeros((E * C + 1,), jnp.float32).at[dest_g].set(sgate_g)
+        return buf_tok[: E * C].reshape(E, C), buf_gate[: E * C].reshape(E, C)
+
+    buf_tok, buf_gate = jax.vmap(build_buffers)(dest, stok, sgate)
+    buf_tok = shard(buf_tok, "groups", "experts", None)
+    buf_gate = shard(buf_gate, "groups", "experts", None)
+
+    # --- gather → expert FFN → combine ---------------------------------------
+    xp = jnp.concatenate([xt, jnp.zeros((G, 1, D), xt.dtype)], axis=1)  # pad row
+    xg = jnp.take_along_axis(
+        xp[:, :, None, :], buf_tok.reshape(G, E * C, 1, 1), axis=1
+    ).reshape(G, E, C, D)
+    xg = shard(xg, "groups", "experts", "capacity", None)
+
+    h_g = jnp.einsum("gecd,edf->gecf", xg, p["wg"], preferred_element_type=jnp.float32)
+    h_u = jnp.einsum("gecd,edf->gecf", xg, p["wu"], preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h_g) * h_u
+    y = jnp.einsum(
+        "gecf,efd->gecd", h.astype(x.dtype), p["wd"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    y = y * buf_gate[..., None].astype(y.dtype)
+    y = shard(y, "groups", "experts", "capacity", None)
+
+    def combine(buf_tok_g, y_g):
+        out = jnp.zeros((Tg + 1, D), y_g.dtype)
+        return out.at[buf_tok_g.reshape(E * C)].add(y_g.reshape(E * C, D))[:Tg]
+
+    out = jax.vmap(combine)(buf_tok, y)  # (G, Tg, D)
+    out = shard(out, "groups", None, None)
+
+    if "shared" in p:
+        out = out + glu(xt, p["shared"]).reshape(G, Tg, D)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,145 @@
+"""Parameter declaration system: shapes + logical sharding axes + init.
+
+Models declare parameters as pytrees of :class:`ParamDecl` — a shape, a tuple
+of *logical axis names*, and an initializer.  From one declaration tree we
+derive:
+
+* ``init_params``   — materialized (and optionally cast) weights;
+* ``pspec_tree``    — ``PartitionSpec`` per leaf, by mapping logical axes
+                      through a rules table (the TP/EP/ZeRO layout lives in
+                      the rules, so re-sharding for a perf experiment is a
+                      one-line change);
+* ``abstract_params`` — ``ShapeDtypeStruct`` stand-ins for the dry-run
+                      (no host allocation at 671B parameters);
+* ``count_params``  — exact parameter counts for the roofline's 6·N·D term.
+
+Logical axes used across the zoo:
+  "vocab", "embed" (d_model), "heads", "kv_heads", "qk_head_dim", "v_head_dim",
+  "ff", "experts", "expert_ff", "lora", "lru", "layers" (scan-stacked), "conv".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = never shard)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed" | "uniform_pm"
+    scale: float | None = None  # stddev override; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, d: ParamDecl, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "uniform_pm":  # uniform in [-scale, scale]
+        s = d.scale if d.scale is not None else 1.0
+        return jax.random.uniform(key, d.shape, dtype, -s, s)
+    if d.init == "embed":
+        s = d.scale if d.scale is not None else 1.0
+        return (jax.random.normal(key, d.shape) * s).astype(dtype)
+    # fan-in scaled normal
+    fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1]))
+    s = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape) * s).astype(dtype)
+
+
+def init_params(key: jax.Array, decls, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(decls, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+# Megatron-style default layout: shard the contracting-free "wide" axes over
+# the model axis; replicate d_model; layers are scan-stacked, never sharded.
+DEFAULT_RULES: dict[str | None, Any] = {
+    None: None,
+    "layers": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qk_head_dim": None,
+    "v_head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "expert_embed": None,
+    "lora": None,
+    "lru": "model",
+    "conv": None,
+    "frames": None,
+}
+
+
+def pspec_tree(decls, rules: dict[str | None, Any] | None = None):
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def to_spec(d: ParamDecl) -> P:
+        # never produce a spec that can't divide: callers validate via mesh
+        return P(*[rules.get(a, None) for a in d.axes])
+
+    return jax.tree_util.tree_map(
+        to_spec, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def validated_pspec_tree(decls, mesh: jax.sharding.Mesh, rules=None):
+    """pspec_tree, but drops shardings whose axis size doesn't divide the dim."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def to_spec(d: ParamDecl) -> P:
+        spec = []
+        for dim, a in zip(d.shape, d.axes):
+            m = rules.get(a, None)
+            if m is None:
+                spec.append(None)
+                continue
+            names = m if isinstance(m, tuple) else (m,)
+            total = int(np.prod([axis_sizes[n] for n in names]))
+            spec.append(m if dim % total == 0 else None)
+        return P(*spec)
+
+    return jax.tree_util.tree_map(
+        to_spec, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def count_params(decls) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "size")
+    )

@@ -1,0 +1,85 @@
+"""Uniform per-family model API: decls / loss / prefill / decode.
+
+Everything downstream (train step, serving, dry-run, benchmarks) talks to a
+:class:`ModelAPI` and never dispatches on family again.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as tf
+from . import whisper as wh
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    decls: Callable[[ModelConfig], dict]
+    loss: Callable[..., tuple[jax.Array, dict]]  # (params, batch, cfg)
+    prefill: Callable[..., jax.Array]  # (params, batch, cfg) -> logits
+    init_cache: Callable[..., dict]  # (cfg, batch, max_seq)
+    decode_step: Callable[..., tuple[jax.Array, dict]]  # (params, cache, tok, idx, cfg)
+    has_decode: bool = True
+
+
+def _lm_prefill(params, batch, cfg: ModelConfig):
+    logits, _, _ = tf.lm_forward(
+        params, batch["tokens"], cfg, image_embeds=batch.get("image_embeds")
+    )
+    return logits
+
+
+def _whisper_prefill(params, batch, cfg: ModelConfig):
+    enc = wh.encode(params, batch["frames"], cfg)
+    return wh.decode_train(params, batch["tokens"], enc, cfg)
+
+
+_LM_API = ModelAPI(
+    decls=tf.lm_decls,
+    loss=tf.lm_loss,
+    prefill=_lm_prefill,
+    init_cache=tf.init_cache,
+    decode_step=tf.decode_step,
+)
+
+_WHISPER_API = ModelAPI(
+    decls=wh.whisper_decls,
+    loss=wh.whisper_loss,
+    prefill=_whisper_prefill,
+    init_cache=wh.whisper_init_cache,
+    decode_step=wh.whisper_decode_step,
+)
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    return _WHISPER_API if cfg.family == "audio" else _LM_API
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None) -> dict:
+    """Synthetic batch with the right structure for this family (smoke/tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(
+                k1, (batch, cfg.encdec.num_frames, cfg.d_model), cfg.adt()
+            ),
+            "tokens": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k3, (batch, seq), 0, cfg.vocab_size),
+        }
+    b = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+    }
+    if cfg.vlm_patches:
+        text = max(seq - cfg.vlm_patches, 8)
+        b["tokens"] = b["tokens"][:, :text]
+        b["labels"] = b["labels"][:, :text]
+        b["image_embeds"] = jax.random.normal(
+            k3, (batch, cfg.vlm_patches, cfg.d_model), cfg.adt()
+        )
+    return b

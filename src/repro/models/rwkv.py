@@ -1,0 +1,186 @@
+"""RWKV-6 "Finch" blocks: token-shift time-mix with data-dependent decay +
+squared-ReLU channel-mix.  Attention-free; decode state is O(1) in sequence
+length (token-shift vectors + one (H, K, V) WKV state per layer) — which is
+why this arch runs the 500k-token long-context cell the attention models skip.
+
+Faithful to arXiv:2404.05892: 5-way ddlerp token-shift interpolation with a
+rank-32 LoRA, decay w_t = exp(-exp(w0 + tanh(x W1) W2)), per-head bonus u,
+GroupNorm over heads after the WKV core, SiLU output gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import matmul, rmsnorm
+from .params import ParamDecl
+
+MAA_LORA = 32
+
+
+def rwkv_block_decls(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    r = cfg.rwkv
+    H = D // r.head_size
+    ff = cfg.d_ff
+    return {
+        "ln1": ParamDecl((D,), ("embed",), init="ones"),
+        "ln2": ParamDecl((D,), ("embed",), init="ones"),
+        "tm": {
+            "maa_x": ParamDecl((D,), ("embed",), init="zeros"),
+            "maa_wkvrg": ParamDecl((5, D), (None, "embed"), init="zeros"),
+            "maa_w1": ParamDecl((D, 5 * MAA_LORA), ("embed", None), scale=0.01),
+            "maa_w2": ParamDecl((5, MAA_LORA, D), (None, None, "embed"), scale=0.01),
+            "decay": ParamDecl((D,), ("embed",), init="normal", scale=0.5),
+            "decay_w1": ParamDecl((D, cfg.rwkv.w_lora), ("embed", "lora"), scale=0.01),
+            "decay_w2": ParamDecl((cfg.rwkv.w_lora, D), ("lora", "embed"), scale=0.01),
+            "bonus": ParamDecl((H, r.head_size), ("heads", None), scale=0.5),
+            "wr": ParamDecl((D, D), ("embed", "lru")),
+            "wk": ParamDecl((D, D), ("embed", "lru")),
+            "wv": ParamDecl((D, D), ("embed", "lru")),
+            "wg": ParamDecl((D, D), ("embed", "lru")),
+            "wo": ParamDecl((D, D), ("lru", "embed")),
+            "ln_x": ParamDecl((D,), ("embed",), init="ones"),
+        },
+        "cm": {
+            "maa_k": ParamDecl((D,), ("embed",), init="zeros"),
+            "maa_r": ParamDecl((D,), ("embed",), init="zeros"),
+            "wk": ParamDecl((D, ff), ("embed", "ff")),
+            "wv": ParamDecl((ff, D), ("ff", "embed")),
+            "wr": ParamDecl((D, D), ("embed", None)),
+        },
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} along seq; position 0 takes ``prev`` (decode carry) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xx, p):
+    """RWKV-6 data-dependent token-shift interpolation → 5 mixed streams."""
+    B, S, D = x.shape
+    base = x + xx * p["maa_x"].astype(x.dtype)
+    lora = jnp.tanh(matmul(base, p["maa_w1"], "bsd,dk->bsk").astype(jnp.float32))
+    lora = lora.reshape(B, S, 5, MAA_LORA)
+    delta = jnp.einsum(
+        "bsfk,fkd->fbsd", lora, p["maa_w2"].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    mix = p["maa_wkvrg"].astype(x.dtype)  # (5, D)
+    return [x + xx * (mix[i] + delta[i]) for i in range(5)]
+
+
+def time_mix(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    shift_prev: jax.Array | None = None,  # (B, D)
+    wkv_state: jax.Array | None = None,  # (B, H, K, V)
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    r_cfg = cfg.rwkv
+    B, S, D = x.shape
+    hs = r_cfg.head_size
+    H = D // hs
+    xx = _shift(x, shift_prev) - x
+    xw, xk, xv, xr, xg = _ddlerp(x, xx, p)
+
+    rr = matmul(xr, p["wr"], "bsd,de->bse")
+    kk = matmul(xk, p["wk"], "bsd,de->bse")
+    vv = matmul(xv, p["wv"], "bsd,de->bse")
+    gg = jax.nn.silu(matmul(xg, p["wg"], "bsd,de->bse").astype(jnp.float32))
+    lw = p["decay"].astype(jnp.float32) + matmul(
+        jnp.tanh(matmul(xw, p["decay_w1"], "bsd,dk->bsk").astype(jnp.float32)).astype(x.dtype),
+        p["decay_w2"],
+        "bsk,kd->bsd",
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(lw))  # (B, S, D) in (0, 1)
+
+    rh = rr.reshape(B, S, H, hs)
+    kh = kk.reshape(B, S, H, hs)
+    vh = vv.reshape(B, S, H, hs)
+    wh = w.reshape(B, S, H, hs)
+    rh = shard(rh, "batch", "seq", "heads", None)
+
+    s0 = (
+        jnp.zeros((B, H, hs, hs), jnp.float32) if wkv_state is None else wkv_state
+    )
+    if S == 1:
+        # decode: one sequential step, closed form
+        kv = kh[:, 0, :, :, None] * vh[:, 0, :, None, :]  # (B,H,K,V)
+        o = jnp.einsum(
+            "bhk,bhkv->bhv", rh[:, 0], s0 + p["bonus"].astype(jnp.float32)[None, :, :, None] * kv
+        )
+        s_new = wh[:, 0, :, :, None] * s0 + kv
+        o = o[:, None]  # (B,1,H,V)
+    else:
+        fn = jax.vmap(
+            lambda rb, kb, vb, wb, sb: kref.wkv6_chunked(
+                rb, kb, vb, wb, p["bonus"], sb, chunk=chunk
+            )
+        )
+        o, s_new = fn(rh, kh, vh, wh, s0)  # (B,S,H,V), (B,H,K,V)
+
+    o = o.reshape(B, S, H * hs)
+    # GroupNorm over heads (per-head RMS with learned scale, bias-free)
+    og = o.reshape(B, S, H, hs)
+    mu = jnp.mean(og, axis=-1, keepdims=True)
+    var = jnp.var(og, axis=-1, keepdims=True)
+    og = (og - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = og.reshape(B, S, D) * p["ln_x"].astype(jnp.float32)
+    o = (o * gg).astype(x.dtype)
+    out = matmul(o, p["wo"], "bse,ed->bsd")
+    return out, x[:, -1, :], s_new
+
+
+def channel_mix(
+    x: jax.Array, p: dict, cfg: ModelConfig, *, shift_prev: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    xx = _shift(x, shift_prev) - x
+    xk = x + xx * p["maa_k"].astype(x.dtype)
+    xr = x + xx * p["maa_r"].astype(x.dtype)
+    k = matmul(xk, p["wk"], "bsd,df->bsf")
+    k = shard(k, "batch", "seq", "ff")
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = matmul(k, p["wv"], "bsf,fd->bsd")
+    r = jax.nn.sigmoid(matmul(xr, p["wr"], "bsd,de->bse").astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1, :]
+
+
+def rwkv_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,  # {"tm_shift","cm_shift","wkv"} per layer
+    chunk: int = 32,
+) -> tuple[jax.Array, dict]:
+    tm_prev = state["tm_shift"] if state else None
+    cm_prev = state["cm_shift"] if state else None
+    wkv_prev = state["wkv"] if state else None
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_out, tm_shift, wkv = time_mix(
+        h, p["tm"], cfg, shift_prev=tm_prev, wkv_state=wkv_prev, chunk=chunk
+    )
+    x = x + attn_out
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    ff_out, cm_shift = channel_mix(h, p["cm"], cfg, shift_prev=cm_prev)
+    x = x + ff_out
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    hs = cfg.rwkv.head_size
+    H = D // hs
+    return {
+        "tm_shift": jnp.zeros((batch, D), cfg.adt()),
+        "cm_shift": jnp.zeros((batch, D), cfg.adt()),
+        "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32),
+    }

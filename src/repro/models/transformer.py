@@ -1,0 +1,411 @@
+"""Decoder-only LM driver for the dense / moe / ssm / hybrid / vlm families.
+
+Layers are scan-stacked (one compiled block body regardless of depth — O(1)
+compile time and HLO size, which matters both for the 512-device dry-run on
+this CPU container and for real 61-layer 671B lowering).  Non-uniform stacks
+(deepseek's 3 dense-prefix layers, recurrentgemma's rec-rec-attn triples) are
+split into homogeneous scanned segments plus small unscanned tails.
+
+API (uniform across families; whisper has its own twin in whisper.py):
+  lm_decls(cfg)                            → ParamDecl tree
+  lm_forward(params, tokens, cfg, ...)     → logits (train/prefill)
+  lm_loss(params, batch, cfg)              → (scalar, metrics)
+  init_cache(cfg, batch, max_seq)          → decode cache pytree
+  decode_step(params, cache, tok, idx, cfg)→ (logits, new cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .attention import attn_decls, attention
+from .config import ModelConfig
+from .griffin import griffin_layer, griffin_layer_decls
+from .layers import embed_decls, glu, glu_decls, lm_logits, rmsnorm, softmax_xent
+from .mla import mla_attention, mla_decls
+from .moe import moe_block, moe_decls
+from .params import ParamDecl
+from .rwkv import rwkv_block, rwkv_block_decls, rwkv_init_state
+
+
+def stack_decls(decls: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: ParamDecl((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def _attn_block_decls(cfg: ModelConfig, ff: int, use_moe: bool) -> dict:
+    d = {
+        "ln1": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.mla is not None:
+        d["attn"] = mla_decls(cfg)
+    else:
+        d["attn"] = attn_decls(
+            cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd(),
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        )
+    d["mlp"] = moe_decls(cfg) if use_moe else glu_decls(cfg.d_model, ff, cfg.mlp_act)
+    return d
+
+
+def lm_decls(cfg: ModelConfig) -> dict:
+    decls: dict = {
+        "embed": embed_decls(cfg.vocab_size, cfg.d_model),
+        "final_ln": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.mtp_depth > 0:
+        # DeepSeek-V3 multi-token prediction module (depth 1): at position t,
+        # concat(norm(h_t), norm(embed(tok_{t+1}))) -> proj -> one extra block
+        # -> shared head, predicting tok_{t+2}.  Embedding and output head are
+        # shared with the main model; the block here is dense (divergence from
+        # V3's MoE MTP block, noted in DESIGN.md).
+        decls["mtp"] = {
+            "ln_h": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+            "ln_e": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+            "proj": ParamDecl((2 * cfg.d_model, cfg.d_model), (None, "embed")),
+            "block": _attn_block_decls(
+                cfg, (cfg.moe.dense_ff if cfg.moe else 0) or cfg.d_ff, use_moe=False
+            ),
+            "final_ln": ParamDecl((cfg.d_model,), ("embed",), init="ones"),
+        }
+    if not cfg.tie_embeddings:
+        decls["head"] = ParamDecl(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), scale=0.02
+        )
+    if cfg.family == "ssm":
+        decls["layers"] = stack_decls(rwkv_block_decls(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        pat = cfg.griffin.pattern
+        n_units = cfg.num_layers // len(pat)
+        tail = cfg.num_layers - n_units * len(pat)
+        unit = {f"b{i}_{k}": griffin_layer_decls(cfg, k) for i, k in enumerate(pat)}
+        decls["units"] = stack_decls(unit, n_units)
+        decls["tail"] = [griffin_layer_decls(cfg, pat[i]) for i in range(tail)]
+    elif cfg.family == "moe":
+        m = cfg.moe
+        n_dense = m.first_dense_layers
+        if n_dense:
+            decls["dense_layers"] = stack_decls(
+                _attn_block_decls(cfg, m.dense_ff or cfg.d_ff, use_moe=False), n_dense
+            )
+        decls["layers"] = stack_decls(
+            _attn_block_decls(cfg, cfg.d_ff, use_moe=True), cfg.num_layers - n_dense
+        )
+    else:  # dense / vlm
+        decls["layers"] = stack_decls(
+            _attn_block_decls(cfg, cfg.d_ff, use_moe=False), cfg.num_layers
+        )
+    return decls
+
+
+# -- block bodies --------------------------------------------------------------
+
+
+def _attn_mlp_block(x, lp, cfg: ModelConfig, q_pos, use_moe: bool):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, _ = mla_attention(h, lp["attn"], cfg, q_pos)
+    else:
+        a, _ = attention(h, lp["attn"], cfg, q_pos)
+    x = x + a
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if use_moe:
+        m, aux = moe_block(h, lp["mlp"], cfg)
+    else:
+        m, aux = glu(h, lp["mlp"], act=cfg.mlp_act), jnp.float32(0.0)
+    x = shard(x + m, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return fn
+
+
+def scan_or_unroll(body, x, stacked, use_scan: bool):
+    """lax.scan over stacked layer params, or a Python unroll (used by the
+    dry-run's scan-depth cost probes — XLA cost analysis counts a while body
+    once, so probes must unroll to expose true per-layer cost)."""
+    if use_scan:
+        return jax.lax.scan(body, x, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        x, y = body(x, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def _scan_blocks(x, stacked, body, cfg):
+    return scan_or_unroll(body, x, stacked, cfg.scan_layers)
+
+
+# -- forward / loss -------------------------------------------------------------
+
+
+def lm_forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S_text)
+    cfg: ModelConfig,
+    image_embeds: jax.Array | None = None,  # (B, P, D) vlm stub
+) -> tuple[jax.Array, jax.Array]:
+    x = jnp.asarray(params["embed"])[tokens].astype(cfg.adt())
+    if cfg.vlm_patches and image_embeds is not None:
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = shard(x, "batch", "seq", "act_embed")
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    aux_total = jnp.float32(0.0)
+
+    if cfg.family == "ssm":
+        body = _remat(lambda c, lp: (rwkv_block(c, lp, cfg)[0], jnp.float32(0.0)), cfg)
+        x, _ = _scan_blocks(x, params["layers"], body, cfg)
+    elif cfg.family == "hybrid":
+        pat = cfg.griffin.pattern
+
+        def unit_body(c, lp):
+            for i, k in enumerate(pat):
+                c, _ = griffin_layer(c, lp[f"b{i}_{k}"], cfg, k, q_pos)
+            return c, jnp.float32(0.0)
+
+        x, _ = _scan_blocks(x, params["units"], _remat(unit_body, cfg), cfg)
+        for i, lp in enumerate(params.get("tail", [])):
+            x, _ = griffin_layer(x, lp, cfg, pat[i], q_pos)
+    elif cfg.family == "moe":
+        if "dense_layers" in params:
+            body_d = _remat(
+                lambda c, lp: _attn_mlp_block(c, lp, cfg, q_pos, use_moe=False), cfg
+            )
+            x, _ = _scan_blocks(x, params["dense_layers"], body_d, cfg)
+        body_m = _remat(
+            lambda c, lp: _attn_mlp_block(c, lp, cfg, q_pos, use_moe=True), cfg
+        )
+        x, auxs = _scan_blocks(x, params["layers"], body_m, cfg)
+        aux_total = jnp.sum(auxs)
+    else:
+        body = _remat(
+            lambda c, lp: _attn_mlp_block(c, lp, cfg, q_pos, use_moe=False), cfg
+        )
+        x, _ = _scan_blocks(x, params["layers"], body, cfg)
+
+    hidden = x
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("head", None)
+    logits = lm_logits(x, head) if head is not None else lm_logits(
+        x, jnp.asarray(params["embed"]).T
+    )
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total, hidden
+
+
+def lm_loss(
+    params: dict, batch: dict, cfg: ModelConfig,
+    aux_coef: float = 1e-2, mtp_coef: float = 0.3,
+) -> tuple[jax.Array, dict]:
+    logits, aux, hidden = lm_forward(
+        params, batch["tokens"], cfg, image_embeds=batch.get("image_embeds")
+    )
+    P = cfg.vlm_patches if batch.get("image_embeds") is not None else 0
+    text_logits = logits[:, P:, :]
+    loss = softmax_xent(text_logits[:, :-1, :], batch["labels"][:, 1:])
+    total = loss + aux_coef * aux
+    metrics = {"xent": loss, "moe_aux": aux}
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        mtp_loss = _mtp_loss(params, batch, cfg, hidden[:, P:, :])
+        total = total + mtp_coef * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return total, metrics
+
+
+def _mtp_loss(params: dict, batch: dict, cfg: ModelConfig, hidden: jax.Array):
+    """Depth-1 MTP: predict tok_{t+2} from (h_t, embed(tok_{t+1}))."""
+    mp = params["mtp"]
+    toks = batch["tokens"]
+    B, S = toks.shape
+    h = rmsnorm(hidden[:, : S - 1, :], mp["ln_h"], cfg.norm_eps)
+    e = rmsnorm(
+        jnp.asarray(params["embed"])[toks[:, 1:]].astype(h.dtype), mp["ln_e"], cfg.norm_eps
+    )
+    x = jnp.einsum(
+        "bse,ed->bsd", jnp.concatenate([h, e], axis=-1), mp["proj"],
+        preferred_element_type=jnp.float32,
+    ).astype(h.dtype)
+    q_pos = jnp.broadcast_to(jnp.arange(S - 1, dtype=jnp.int32)[None], (B, S - 1))
+    x, _ = _attn_mlp_block(x, mp["block"], cfg, q_pos, use_moe=False)
+    x = rmsnorm(x, mp["final_ln"], cfg.norm_eps)
+    head = params.get("head", None)
+    logits = lm_logits(x, head) if head is not None else lm_logits(
+        x, jnp.asarray(params["embed"]).T
+    )
+    # position t (0..S-3) predicts labels[t+2]
+    return softmax_xent(logits[:, : S - 2, :], batch["labels"][:, 2:])
+
+
+# -- decode ---------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.adt()
+    """Per-family decode cache, stacked over scanned layers."""
+    hd = cfg.hd()
+
+    def kv(n_layers, length):
+        return {
+            "k": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, hd), dtype),
+        }
+
+    if cfg.family == "ssm":
+        st = rwkv_init_state(cfg, batch)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), st
+        )
+    if cfg.family == "hybrid":
+        g = cfg.griffin
+        pat = g.pattern
+        n_units = cfg.num_layers // len(pat)
+        tail = cfg.num_layers - n_units * len(pat)
+        W = min(g.window, max_seq)
+
+        def rec_state(lead):
+            return {
+                "conv": jnp.zeros(lead + (batch, g.conv_width - 1, g.lru_width), dtype),
+                "lru": jnp.zeros(lead + (batch, g.lru_width), jnp.float32),
+            }
+
+        def attn_state(lead):
+            return {
+                "k": jnp.zeros(lead + (batch, W, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros(lead + (batch, W, cfg.num_kv_heads, hd), dtype),
+            }
+
+        units = {
+            f"b{i}_{k}": (rec_state((n_units,)) if k == "rec" else attn_state((n_units,)))
+            for i, k in enumerate(pat)
+        }
+        tail_states = [
+            rec_state(()) if pat[i] == "rec" else attn_state(()) for i in range(tail)
+        ]
+        return {"units": units, "tail": tail_states}
+    if cfg.mla is not None:
+        m = cfg.mla
+        n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+        c = {
+            "layers": {
+                "ckv": jnp.zeros((cfg.num_layers - n_dense, batch, max_seq, m.kv_lora), dtype),
+                "krope": jnp.zeros((cfg.num_layers - n_dense, batch, max_seq, m.rope_dim), dtype),
+            }
+        }
+        if n_dense:
+            c["dense_layers"] = {
+                "ckv": jnp.zeros((n_dense, batch, max_seq, m.kv_lora), dtype),
+                "krope": jnp.zeros((n_dense, batch, max_seq, m.rope_dim), dtype),
+            }
+        return c
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    c = {"layers": kv(cfg.num_layers - n_dense, max_seq)}
+    if n_dense:
+        c["dense_layers"] = kv(n_dense, max_seq)
+    return c
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,  # (B, 1)
+    idx: jax.Array,  # scalar int32 — current position
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    B = tokens.shape[0]
+    x = jnp.asarray(params["embed"])[tokens].astype(cfg.adt())
+    x = shard(x, "batch", None, "act_embed")
+    q_pos = jnp.full((B, 1), idx, jnp.int32)
+
+    def attn_block_step(c, lp, lc, use_moe):
+        h = rmsnorm(c, lp["ln1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            a, nc = mla_attention(h, lp["attn"], cfg, q_pos, cache=lc, cache_idx=idx)
+        else:
+            a, nc = attention(h, lp["attn"], cfg, q_pos, cache=lc, cache_idx=idx)
+        c = c + a
+        h = rmsnorm(c, lp["ln2"], cfg.norm_eps)
+        m = moe_block(h, lp["mlp"], cfg)[0] if use_moe else glu(h, lp["mlp"], act=cfg.mlp_act)
+        return c + m, nc
+
+    if cfg.family == "ssm":
+        def body(c, xs):
+            lp, lc = xs
+            c, ns = rwkv_block(c, lp, cfg, state=lc)
+            return c, ns
+
+        x, new_states = scan_or_unroll(body, x, (params["layers"], cache), cfg.scan_layers)
+        new_cache = new_states
+    elif cfg.family == "hybrid":
+        pat = cfg.griffin.pattern
+
+        def unit_body(c, xs):
+            lp, lc = xs
+            new_lc = {}
+            for i, k in enumerate(pat):
+                c, new_lc[f"b{i}_{k}"] = griffin_layer(
+                    c, lp[f"b{i}_{k}"], cfg, k, q_pos, state=lc[f"b{i}_{k}"], pos=idx
+                )
+            return c, new_lc
+
+        x, new_units = scan_or_unroll(
+            unit_body, x, (params["units"], cache["units"]), cfg.scan_layers
+        )
+        new_tail = []
+        for i, lp in enumerate(params.get("tail", [])):
+            x, ns = griffin_layer(
+                x, lp, cfg, pat[i], q_pos, state=cache["tail"][i], pos=idx
+            )
+            new_tail.append(ns)
+        new_cache = {"units": new_units, "tail": new_tail}
+    else:
+        new_cache = {}
+        if "dense_layers" in params:
+            def body_d(c, xs):
+                lp, lc = xs
+                c, nc = attn_block_step(c, lp, lc, use_moe=False)
+                return c, nc
+
+            x, nc_d = scan_or_unroll(
+                body_d, x, (params["dense_layers"], cache["dense_layers"]), cfg.scan_layers
+            )
+            new_cache["dense_layers"] = nc_d
+
+        use_moe = cfg.family == "moe"
+
+        def body(c, xs):
+            lp, lc = xs
+            c, nc = attn_block_step(c, lp, lc, use_moe=use_moe)
+            return c, nc
+
+        x, nc = scan_or_unroll(body, x, (params["layers"], cache["layers"]), cfg.scan_layers)
+        new_cache["layers"] = nc
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("head", None)
+    logits = lm_logits(x, head) if head is not None else lm_logits(
+        x, jnp.asarray(params["embed"]).T
+    )
+    return logits, new_cache

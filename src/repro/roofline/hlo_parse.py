@@ -1,0 +1,83 @@
+"""Collective-byte accounting from partitioned HLO text.
+
+``compiled.as_text()`` (post-SPMD, per-partition shapes) is scanned for
+collective ops; per op we record the operand bytes (what one device puts on
+the wire) and apply a ring-algorithm wire factor:
+
+  all-reduce          2·(n−1)/n ≈ 2     (reduce-scatter + all-gather phases)
+  all-gather          (n−1)/n   ≈ 1     (result bytes gathered)
+  reduce-scatter      (n−1)/n   ≈ 1     (operand bytes reduced)
+  all-to-all          (n−1)/n   ≈ 1
+  collective-permute  1                 (point-to-point)
+
+``collective_bytes`` is therefore *per-chip wire bytes*, matching the
+roofline denominator (one chip's link bandwidth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute|ragged-all-to-all)\b"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    wire_bytes: float  # Σ operand bytes × ring factor (per chip)
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by_kind: dict[str, float] = {}
+    count_by_kind: dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_shape, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        if op not in _COLLECTIVES:
+            continue
+        b = _shape_bytes(result_shape)  # all-gather: result ≈ per-chip gathered volume
+        bytes_by_kind[op] = bytes_by_kind.get(op, 0.0) + b
+        count_by_kind[op] = count_by_kind.get(op, 0) + 1
+        wire += b * _COLLECTIVES[op]
+    return CollectiveStats(bytes_by_kind, wire, count_by_kind)

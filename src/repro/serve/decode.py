@@ -1,0 +1,77 @@
+"""Serving steps: prefill + decode factories and a batched generation loop.
+
+``make_serve_steps(cfg)`` returns (prefill_fn, decode_fn) matching the shapes
+the dry-run lowers:
+
+  prefill_fn(params, batch)                  -> logits (B, S, V)
+  decode_fn(params, cache, tokens, idx)      -> (logits (B, 1, V), new cache)
+
+``generate`` runs greedy/temperature sampling with a ``lax.fori_loop`` so the
+whole generation is one compiled program (no per-token dispatch overhead).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, get_api
+
+
+def make_serve_steps(cfg: ModelConfig) -> tuple[Callable, Callable]:
+    api = get_api(cfg)
+
+    def prefill(params, batch):
+        return api.prefill(params, batch, cfg)
+
+    def decode(params, cache, tokens, idx):
+        return api.decode_step(params, cache, tokens, idx, cfg)
+
+    return prefill, decode
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0) -> jax.Array:
+    """logits (B, 1, V) → tokens (B, 1)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    g = jax.random.gumbel(key, logits[:, -1, :].shape, jnp.float32)
+    return jnp.argmax(logits[:, -1, :].astype(jnp.float32) / temperature + g, axis=-1)[
+        :, None
+    ].astype(jnp.int32)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, S0) int32
+    max_new: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    """Prefill the prompt token-by-token (cache warmup), then decode max_new."""
+    api = get_api(cfg)
+    B, S0 = prompt.shape
+    cache = api.init_cache(cfg, B, S0 + max_new)
+    keys = jax.random.PRNGKey(seed)
+
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
+
+    def body(i, state):
+        cache, toks, cur = state
+        logits, cache = step(params, cache, cur, i)
+        in_prompt = i + 1 < S0
+        nxt = jnp.where(
+            in_prompt,
+            jax.lax.dynamic_slice_in_dim(toks, jnp.minimum(i + 1, S0 + max_new - 1), 1, 1),
+            sample_token(logits, jax.random.fold_in(keys, i), temperature),
+        )
+        toks = jax.lax.dynamic_update_slice_in_dim(toks, nxt, i + 1, 1)
+        return cache, toks, nxt
+
+    toks = jnp.concatenate(
+        [prompt, jnp.zeros((B, max_new), jnp.int32)], axis=1
+    )
+    state = (cache, toks, prompt[:, :1])
+    cache, toks, _ = jax.lax.fori_loop(0, S0 + max_new - 1, body, state)
+    return toks

@@ -1,0 +1,209 @@
+"""Logical activation sharding, rules-driven.
+
+Model code never names mesh axes.  It annotates activations with *logical*
+axes — ``shard(x, "batch", "seq", "embed")`` — and a rules table maps those to
+physical mesh axes.  Perf experiments (§Perf in EXPERIMENTS.md) change the
+rules, not the model:
+
+    default:   batch→data, everything else unsharded (TP flows from weights)
+    SP:        act_seq→model between blocks (sequence parallelism)
+    KV-shard:  kv_seq→model for decode (flash-decode style partial softmax)
+
+Outside a mesh context (unit tests, single-CPU smoke), ``shard`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[jax.sharding.Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+_RULES: contextvars.ContextVar[dict[str, Any] | None] = contextvars.ContextVar(
+    "repro_act_rules", default=None
+)
+
+# Default physical mapping for logical activation axes.
+ACT_RULES: dict[str, Any] = {
+    "batch": "data",
+    "seq": None,  # set to "model" for sequence parallelism between blocks
+    "act_embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": None,  # set to "model" to shard decode KV caches over seq
+    "vocab": "model",
+    "experts": "model",
+    "ff": "model",
+    "frames": None,
+    "groups": "data",
+    "capacity": None,
+    "pod": "pod",  # pod-DP: leading batch dim over pods in multi-pod meshes
+    "lru": "model",
+    "state_k": None,
+    "state_v": None,
+}
+
+
+def set_mesh(mesh: jax.sharding.Mesh | None):
+    _MESH.set(mesh)
+
+
+def get_mesh() -> jax.sharding.Mesh | None:
+    return _MESH.get()
+
+
+def set_act_rules(rules: dict[str, Any] | None):
+    _RULES.set(rules)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh, rules: dict[str, Any] | None = None):
+    tok_m = _MESH.set(mesh)
+    tok_r = _RULES.set({**ACT_RULES, **(rules or {})})
+    try:
+        with mesh:
+            yield
+    finally:
+        _MESH.reset(tok_m)
+        _RULES.reset(tok_r)
+
+
+def logical(*axes: str | None) -> P:
+    """Resolve logical axis names to a physical PartitionSpec."""
+    rules = _RULES.get() or ACT_RULES
+    phys = []
+    for a in axes:
+        phys.append(None if a is None else rules.get(a, None))
+    return P(*phys)
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """Force full replication (e.g. tiny decode queries whose propagated head
+    sharding would otherwise conflict with a sequence-sharded KV cache)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+def _model_axis(mesh) -> tuple[str, int]:
+    rules = _RULES.get() or ACT_RULES
+    ax = rules.get("heads", "model") or "model"
+    if isinstance(ax, tuple):
+        ax = ax[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ax, sizes.get(ax, 1)
+
+
+def _batch_axis(mesh, dim: int):
+    rules = _RULES.get() or ACT_RULES
+    ax = rules.get("batch", "data")
+    if ax is None:
+        return None
+    names = ax if isinstance(ax, tuple) else (ax,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for n in names:
+        total *= sizes.get(n, 1)
+    if dim % total == 0:
+        return ax
+    if dim % sizes.get("data", 1) == 0:
+        return "data"
+    return None
+
+
+def shard_cache_kv(x: jax.Array) -> jax.Array:
+    """Decode KV cache (B, T, KVH, hd): batch→data axes; heads→model when they
+    divide, else sequence→model (flash-decode).  This is the single source of
+    truth — launch/specs.cache_shardings mirrors it exactly, so the interior
+    constraint never fights the argument sharding (a mismatch makes the
+    partitioner all-gather the whole cache every token)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    m_ax, msz = _model_axis(mesh)
+    spec = [_batch_axis(mesh, x.shape[0]), None, None, None]
+    if msz > 1 and x.shape[2] % msz == 0:
+        spec[2] = m_ax
+    elif msz > 1 and x.shape[1] % msz == 0:
+        spec[1] = m_ax
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_cache_latent(x: jax.Array) -> jax.Array:
+    """MLA latent cache (B, T, C): batch→data; seq→model when it divides."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    m_ax, msz = _model_axis(mesh)
+    spec = [_batch_axis(mesh, x.shape[0]), None, None]
+    if msz > 1 and x.shape[1] % msz == 0:
+        spec[1] = m_ax
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_decode_logits(
+    x: jax.Array, heads_dim: int, seq_dim: int, prefer_seq: bool = False
+) -> jax.Array:
+    """Attention logits at decode: shard the heads dim over model when it
+    divides, else the KV-sequence dim — consistent with shard_cache_kv.
+    ``prefer_seq`` flips the priority (MLA: the latent cache has no head dim,
+    so the sequence must carry the model axis)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    m_ax, msz = _model_axis(mesh)
+    spec: list = [None] * x.ndim
+    spec[0] = _batch_axis(mesh, x.shape[0])
+    order = [seq_dim, heads_dim] if prefer_seq else [heads_dim, seq_dim]
+    for d in order:
+        if msz > 1 and x.shape[d] % msz == 0:
+            spec[d] = m_ax
+            break
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain x's sharding by logical axes; no-op without a mesh.
+
+    Axes whose mapped mesh-axis size doesn't divide the dimension are dropped
+    (lets one model definition serve meshes of different shapes).
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = logical(*axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, s in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+        if s is None:
+            fixed.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        fixed.append(s if dim % total == 0 and total > 1 else None)
+    # a mesh axis may appear at most once: first dim wins (SP experiments map
+    # several logical axes to `model`; later duplicates drop to None)
+    used: set = set()
+    for i, f in enumerate(fixed):
+        names = f if isinstance(f, tuple) else (f,)
+        if any(n in used for n in names if n):
+            fixed[i] = None
+            continue
+        used.update(n for n in names if n)
+    if all(f is None for f in fixed):
+        # never force full replication — let GSPMD propagate instead
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,80 @@
+"""Train-step factory: loss → grads → optimizer, with microbatch accumulation.
+
+The returned function is pure and jit-ready:
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+* ``grad_accum > 1`` splits the global batch into microbatches and folds them
+  with ``lax.scan`` (fp32 grad accumulators; activation memory is bounded by
+  one microbatch — the straggler-friendly way to fit big global batches);
+* gradients arrive already averaged across data shards (GSPMD inserts the
+  all-reduce from the mean loss);
+* optional gradient compression (int8 + error feedback) is applied between
+  grad computation and the optimizer — see train/grad_compress.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, get_api
+from .grad_compress import apply_error_feedback, init_error_feedback
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer,
+    grad_accum: int = 1,
+    compress: bool = False,
+) -> Callable:
+    api = get_api(cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch, cfg)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+                batch,
+            )
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, mslice):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mslice)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                )
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, zero, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = jnp.mean(losses)
+            metrics = {}
+
+        if compress:
+            grads, ef = apply_error_feedback(grads, opt_state["ef"])
+        new_params, new_opt, om = optimizer.update(grads, opt_state["opt"], params)
+        new_state = {"opt": new_opt}
+        if compress:
+            new_state["ef"] = ef
+        metrics = {"loss": loss, **{k: v for k, v in metrics.items()}, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, optimizer, params, compress: bool = False):
+    state: dict[str, Any] = {"opt": optimizer.init(params)}
+    if compress:
+        state["ef"] = init_error_feedback(params)
+    return state

@@ -1,0 +1,178 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family,
+one forward/train step + one decode step on CPU; asserts shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (no allocation here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.configs.shapes import SHAPES, applicable
+from repro.models import get_api, make_batch
+from repro.models.params import count_params, init_params
+from repro.train.optimizer import AdamW
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_family_matches_full(arch):
+    smoke, full = get_smoke(arch), get_config(arch)
+    assert smoke.family == full.family
+    assert (smoke.moe is None) == (full.moe is None)
+    assert (smoke.mla is None) == (full.mla is None)
+    assert smoke.qk_norm == full.qk_norm and smoke.qkv_bias == full.qkv_bias
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(0), api.decls(cfg), jnp.float32)
+    batch = make_batch(cfg, 2, 16)
+    # forward (prefill) shapes
+    logits = jax.jit(lambda p, b: api.prefill(p, b, cfg))(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # one full train step
+    opt = AdamW(lr=1e-3)
+    step = make_train_step(cfg, opt)
+    state = init_train_state(cfg, opt, params)
+    new_params, new_state, metrics = jax.jit(step)(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["opt"]["step"]) == 1
+    # params actually changed
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params
+    )
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke(arch)
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(1), api.decls(cfg), jnp.float32)
+    cache = api.init_cache(cfg, 2, 24)
+    tok = jnp.ones((2, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
+    logits, cache = step(params, cache, tok, jnp.int32(0))
+    logits2, cache = step(params, cache, tok, jnp.int32(1))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_decode_matches_prefill_dense():
+    """Token-by-token decode logits == full-sequence forward logits."""
+    cfg = get_smoke("qwen3-1.7b")
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(2), api.decls(cfg), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab_size)
+    full = api.prefill(params, {"tokens": toks}, cfg)  # (2, 8, V)
+    cache = api.init_cache(cfg, 2, 8)
+    outs = []
+    for i in range(8):
+        logits, cache = api.decode_step(params, cache, toks[:, i : i + 1], jnp.int32(i), cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_prefill_rwkv():
+    cfg = get_smoke("rwkv6-7b")
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(2), api.decls(cfg), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 10), 0, cfg.vocab_size)
+    full = api.prefill(params, {"tokens": toks}, cfg)
+    cache = api.init_cache(cfg, 1, 10)
+    outs = []
+    for i in range(10):
+        logits, cache = api.decode_step(params, cache, toks[:, i : i + 1], jnp.int32(i), cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=5e-3, atol=5e-3)
+
+
+def test_decode_matches_prefill_griffin():
+    cfg = get_smoke("recurrentgemma-2b")
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(4), api.decls(cfg), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 10), 0, cfg.vocab_size)
+    full = api.prefill(params, {"tokens": toks}, cfg)
+    cache = api.init_cache(cfg, 1, 10)
+    outs = []
+    for i in range(10):
+        logits, cache = api.decode_step(params, cache, toks[:, i : i + 1], jnp.int32(i), cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=5e-3, atol=5e-3)
+
+
+def test_full_config_param_counts():
+    """Full configs hit their nominal parameter counts (±15%)."""
+    expected = {
+        "pixtral-12b": 12.25e9, "deepseek-v3-671b": 671e9,
+        "kimi-k2-1t-a32b": 1.03e12, "qwen3-1.7b": 1.7e9, "minitron-8b": 8e9,
+        "qwen2-72b": 72.7e9, "qwen1.5-110b": 111e9, "rwkv6-7b": 7.6e9,
+        "recurrentgemma-2b": 2.7e9, "whisper-medium": 0.77e9,
+    }
+    for arch, want in expected.items():
+        cfg = get_config(arch)
+        n = count_params(get_api(cfg).decls(cfg))
+        assert abs(n - want) / want < 0.15, (arch, n, want)
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    for arch in ARCH_IDS:
+        ok, why = applicable(get_config(arch), long)
+        if arch in ("rwkv6-7b", "recurrentgemma-2b"):
+            assert ok
+        else:
+            assert not ok and why
+
+
+def test_deepseek_mtp_head():
+    """DeepSeek MTP (depth 1): extra predict-ahead loss trains and is finite."""
+    import dataclasses as _dc
+
+    base = get_smoke("deepseek-v3-671b")
+    cfg = base.replace(mtp_depth=1)
+    api = get_api(cfg)
+    params = init_params(jax.random.PRNGKey(0), api.decls(cfg), jnp.float32)
+    assert "mtp" in params
+    batch = make_batch(cfg, 2, 16)
+    loss, metrics = jax.jit(lambda p, b: api.loss(p, b, cfg))(params, batch)
+    assert "mtp" in metrics and bool(jnp.isfinite(metrics["mtp"]))
+    # mtp off -> loss excludes the extra term
+    cfg0 = base
+    p0 = {k: v for k, v in params.items() if k != "mtp"}
+    loss0, m0 = jax.jit(lambda p, b: get_api(cfg0).loss(p, b, cfg0))(p0, batch)
+    assert "mtp" not in m0
+    assert float(loss) != float(loss0)
+    # grads flow into the mtp params
+    g = jax.grad(lambda p: api.loss(p, batch, cfg)[0])(params)
+    gn = max(float(jnp.max(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g["mtp"]))
+    assert gn > 0
+
+
+def test_blockwise_attention_matches_standard():
+    """Flash-style blockwise attention == materialized softmax attention."""
+    import repro.models.attention as A
+
+    rng = np.random.default_rng(7)
+    B, S, H, hd = 2, 96, 4, 16
+    q, k, v = (
+        jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32)) for _ in range(3)
+    )
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for window in (None, 24):
+        keep = A._mask(q_pos, S, causal=True, window=window)
+        ref = A.mha(q, k, v, keep)
+        for blk in (13, 32, 96):
+            out = A.blockwise_mha(q, k, v, q_pos, causal=True, window=window, block=blk)
+            np.testing.assert_allclose(np.asarray(ref), np.asarray(out), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,143 @@
+"""Clock auction: Algorithm 1 behavior + SYSTEM feasibility (paper §III)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AuctionProblem,
+    ClockConfig,
+    ResourcePool,
+    clock_auction,
+    operator_supply_bids,
+    pack_bids,
+    proxy_demand,
+    reserve_prices,
+    surplus_and_trade,
+    verify_system,
+)
+
+
+def _simple_market(values, supply=10.0, lots=5):
+    pools = [
+        ResourcePool("c1", "cpu", 1.0, 0.9, supply=supply),
+        ResourcePool("c2", "cpu", 1.0, 0.2, supply=supply),
+    ]
+    pr = reserve_prices(pools)
+    bl, pis = operator_supply_bids(pools, pr, lots=lots)
+    for v in values:
+        bl.append([np.array([6, 0], np.float32), np.array([0, 6], np.float32)])
+        pis.append(v)
+    prob = pack_bids(bl, pis, base_cost=np.array([1.0, 1.0]))
+    return prob, jnp.asarray(pr)
+
+
+class TestClockAuction:
+    def test_converges_and_feasible(self):
+        prob, p0 = _simple_market([20.0, 9.0, 4.0])
+        res = clock_auction(prob, p0)
+        assert bool(res.converged)
+        checks = verify_system(prob, res)
+        assert all(checks.values()), checks
+
+    def test_prices_monotone_from_reserve(self):
+        prob, p0 = _simple_market([20.0, 9.0, 4.0])
+        res = clock_auction(prob, p0)
+        assert bool(jnp.all(res.prices >= p0 - 1e-6))
+
+    def test_excess_demand_nonpositive(self):
+        prob, p0 = _simple_market([50.0, 45.0, 40.0, 35.0])
+        res = clock_auction(prob, p0)
+        assert bool(jnp.all(res.excess_demand <= 1e-6))
+
+    def test_congestion_raises_price(self):
+        # more demand than supply in the cheap pool must raise its price
+        prob, p0 = _simple_market([100.0] * 8, supply=6.0, lots=3)
+        res = clock_auction(prob, p0)
+        assert bool(res.converged)
+        assert float(res.prices.max()) > float(p0.max())
+
+    def test_losers_lost_because_cheap(self):
+        prob, p0 = _simple_market([20.0, 9.0, 0.5])
+        res = clock_auction(prob, p0)
+        # the 0.5-value bidder can never win once prices ≥ reserve
+        assert not bool(res.won[-1])
+
+    def test_seller_proxy_stays_at_reserve(self):
+        pools = [ResourcePool("c1", "cpu", 1.0, 0.5, supply=4.0)]
+        pr = reserve_prices(pools)
+        bl, pis = operator_supply_bids(pools, pr, lots=1)
+        prob = pack_bids(bl, pis, base_cost=np.array([1.0]))
+        x, chosen, active = proxy_demand(
+            prob.bundles, prob.bundle_mask, prob.pi, jnp.asarray(pr)
+        )
+        assert bool(active[0])  # at exactly the reserve price the seller sells
+
+    def test_premium_definition(self):
+        prob, p0 = _simple_market([20.0])
+        res = clock_auction(prob, p0)
+        gam = res.premium(prob.pi)
+        w = np.asarray(res.won)
+        g = np.asarray(gam)
+        assert np.isfinite(g[w]).all()
+        assert (g[w] >= -1e-6).all()
+
+    def test_max_rounds_cap(self):
+        prob, p0 = _simple_market([1e9] * 40, supply=1.0, lots=1)
+        res = clock_auction(prob, p0, ClockConfig(max_rounds=5))
+        assert int(res.rounds) <= 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_buyers=st.integers(1, 12),
+    n_res=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pure_buyers_terminate_feasible(n_buyers, n_res, seed):
+    """Pure buyers + operator sellers ⇒ convergence guaranteed (§III.C.3),
+    and the settled point satisfies every SYSTEM constraint."""
+    rng = np.random.default_rng(seed)
+    pools = [
+        ResourcePool(f"c{r}", "cpu", float(rng.uniform(0.5, 2)), float(rng.uniform(0, 1)),
+                     supply=float(rng.uniform(1, 20)))
+        for r in range(n_res)
+    ]
+    pr = reserve_prices(pools)
+    bl, pis = operator_supply_bids(pools, pr, lots=2)
+    for _ in range(n_buyers):
+        n_alt = int(rng.integers(1, 4))
+        alts = []
+        for _ in range(n_alt):
+            q = np.zeros(n_res, np.float32)
+            q[rng.integers(0, n_res)] = float(rng.uniform(0.5, 8))
+            alts.append(q)
+        bl.append(alts)
+        pis.append(float(rng.uniform(0.1, 40)))
+    prob = pack_bids(bl, pis, base_cost=np.array([p.base_cost for p in pools]))
+    res = clock_auction(prob, jnp.asarray(pr), ClockConfig(max_rounds=20_000))
+    assert bool(res.converged)
+    checks = verify_system(prob, res, atol=2e-3)
+    assert all(checks.values()), checks
+    s, t = surplus_and_trade(prob, res)
+    assert float(s) >= -1e-3  # winners never pay above their stated values
+
+
+def test_break_ties_resolves_exact_tie():
+    """Paper §III.B: two identical bids for one unit — strict fairness makes
+    both lose; break_ties lets exactly one win."""
+    pools = [ResourcePool("c1", "cpu", 1.0, 0.5, supply=1.0)]
+    pr = reserve_prices(pools)
+    bl, pis = operator_supply_bids(pools, pr, lots=1)
+    for _ in range(2):  # exact tie
+        bl.append([np.array([1.0], np.float32)])
+        pis.append(1.0)
+    prob = pack_bids(bl, pis, base_cost=np.array([1.0]))
+    strict = clock_auction(prob, jnp.asarray(pr), ClockConfig())
+    broken = clock_auction(
+        prob, jnp.asarray(pr), ClockConfig(break_ties=True, refine_rounds=30)
+    )
+    n_strict = int(np.asarray(strict.won)[1:].sum())
+    n_broken = int(np.asarray(broken.won)[1:].sum())
+    assert n_strict == 0  # fair outcome: both priced out together
+    assert n_broken == 1  # epsilon perturbation: resource gets allocated

@@ -1,0 +1,59 @@
+"""TBBL-style bid tree flattening (paper §II)."""
+import numpy as np
+import pytest
+
+from repro.core import All, BundleExplosion, OneOf, Res, flatten, pool_index
+
+
+IDX = pool_index(["c1/cpu", "c1/ram", "c2/cpu", "c2/ram"])
+
+
+def test_leaf():
+    (q,) = flatten(Res("c1/cpu", 5), IDX)
+    assert q.tolist() == [5, 0, 0, 0]
+
+
+def test_and_sums():
+    (q,) = flatten(All(Res("c1/cpu", 5), Res("c1/ram", 2)), IDX)
+    assert q.tolist() == [5, 2, 0, 0]
+
+
+def test_xor_alternatives():
+    qs = flatten(
+        OneOf(
+            All(Res("c1/cpu", 5), Res("c1/ram", 2)),
+            All(Res("c2/cpu", 5), Res("c2/ram", 2)),
+        ),
+        IDX,
+    )
+    assert len(qs) == 2
+    assert qs[0].tolist() == [5, 2, 0, 0]
+    assert qs[1].tolist() == [0, 0, 5, 2]
+
+
+def test_and_of_xor_cartesian():
+    qs = flatten(
+        All(
+            OneOf(Res("c1/cpu", 1), Res("c2/cpu", 1)),
+            OneOf(Res("c1/ram", 4), Res("c2/ram", 4)),
+        ),
+        IDX,
+    )
+    assert len(qs) == 4
+    assert any(q.tolist() == [1, 0, 0, 4] for q in qs)  # cross-cluster combos exist
+
+
+def test_sell_side_negative():
+    (q,) = flatten(Res("c1/cpu", -3), IDX)
+    assert q.tolist() == [-3, 0, 0, 0]
+
+
+def test_explosion_guard():
+    inner = OneOf(*[Res("c1/cpu", i + 1) for i in range(9)])
+    with pytest.raises(BundleExplosion):
+        flatten(All(inner, inner, inner), IDX, max_bundles=64)
+
+
+def test_unknown_pool():
+    with pytest.raises(KeyError):
+        flatten(Res("nope", 1), IDX)

@@ -1,0 +1,127 @@
+"""Checkpoint/restore, atomicity, async writes, elastic resharding, restart."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+        "state": {"m": jnp.ones((3, 4)), "step": jnp.int32(7)},
+        "list": [jnp.zeros(2), jnp.ones(2)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(5, tree, metadata={"note": "hi"}, block=True)
+    restored, manifest = ck.restore_latest(tree)
+    assert manifest["step"] == 5 and manifest["metadata"]["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_picks_max(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    for s in (1, 9, 4):
+        ck.save(s, tree, block=True)
+    assert ck.latest_step() == 9
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(), block=True)
+    names = os.listdir(tmp_path)
+    assert "ckpt_00000003" in names
+    assert not [n for n in names if n.startswith(".tmp")]
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())  # async
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    ck.save(0, tree, block=True)
+    target = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    restored, _ = ck.restore_latest(target)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.checkpoint.elastic import reshard
+
+ckdir = sys.argv[1]
+devs = np.asarray(jax.devices())
+
+# save on a 4x2 mesh
+mesh_a = Mesh(devs[:8].reshape(4, 2), ("data", "model"))
+sh_a = NamedSharding(mesh_a, P("data", "model"))
+x = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8), sh_a)
+ck = Checkpointer(ckdir)
+ck.save(1, {"x": x}, block=True)
+
+# restore onto a 2x1 mesh (job lost 6 chips)
+mesh_b = Mesh(devs[:2].reshape(2, 1), ("data", "model"))
+sh_b = {"x": NamedSharding(mesh_b, P("data", "model"))}
+restored, _ = ck.restore_latest({"x": x}, sh_b)
+assert restored["x"].sharding.mesh.shape == {"data": 2, "model": 1}
+np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(64).reshape(8, 8))
+
+# grow back via reshard (job won more chips in the next auction)
+big = reshard(restored, {"x": sh_a})
+np.testing.assert_array_equal(np.asarray(big["x"]), np.arange(64).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(), timeout=300,
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.slow
+def test_supervisor_restarts_after_injected_fault(tmp_path):
+    """End-to-end fault tolerance: crash at step 6, restart, finish 12 steps."""
+    from repro.launch.supervisor import run_supervised
+
+    env_backup = os.environ.get("FAULT_STEP")
+    os.environ["FAULT_STEP"] = "6"
+    try:
+        rc = run_supervised(
+            ["--arch", "qwen3-1.7b", "--smoke", "--steps", "12", "--batch", "2",
+             "--seq", "32", "--ckpt-every", "2",
+             "--metrics", str(tmp_path / "m.jsonl")],
+            ckpt_dir=str(tmp_path / "ck"), max_restarts=2, deadline_s=600,
+        )
+    finally:
+        if env_backup is None:
+            os.environ.pop("FAULT_STEP", None)
+        else:
+            os.environ["FAULT_STEP"] = env_backup
+    assert rc == 0
+    steps = [json.loads(l)["step"] for l in open(tmp_path / "m.jsonl")]
+    assert 6 in steps and 11 in steps  # crashed step was re-run after restart

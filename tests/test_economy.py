@@ -1,0 +1,69 @@
+"""Multi-epoch economy: the paper's §V dynamics emerge from the mechanism."""
+import numpy as np
+
+from repro.core.economy import make_fleet_economy
+
+
+def _run(n=5, seed=7):
+    eco = make_fleet_economy(seed=seed)
+    return eco, [eco.run_epoch() for _ in range(n)]
+
+
+def test_epochs_converge_and_stay_feasible():
+    _, stats = _run()
+    assert all(s.converged for s in stats)
+    assert all(s.system_ok for s in stats)
+
+
+def test_bid_premium_shrinks_over_time():
+    """Table I: median γ decreases as bidders learn market prices."""
+    _, stats = _run(6)
+    med = [s.gamma_median for s in stats if np.isfinite(s.gamma_median)]
+    assert len(med) >= 3
+    assert np.mean(med[-2:]) < med[0]
+
+
+def test_buys_flow_to_underutilized_pools():
+    """Fig 7: settled buys sit at lower utilization percentiles than offers."""
+    _, stats = _run(4)
+    buys = np.concatenate([s.buy_util_percentiles for s in stats])
+    sells = np.concatenate([s.sell_util_percentiles for s in stats])
+    assert len(buys) and len(sells)
+    assert np.median(buys) < np.median(sells)
+
+
+def test_migration_happens():
+    _, stats = _run(4)
+    assert sum(s.migrations for s in stats) > 0
+
+
+def test_price_signal_congestion():
+    """Fig 6: congested pools settle above the former fixed price, empty ones
+    at/below."""
+    eco, stats = _run(3)
+    last = stats[-1]
+    psi = last.psi
+    ratio = last.price_ratio
+    hot = ratio[psi > 0.85]
+    cold = ratio[psi < 0.3]
+    if len(hot) and len(cold):
+        assert hot.mean() > cold.mean()
+
+
+def test_determinism_same_seed():
+    _, s1 = _run(3, seed=11)
+    _, s2 = _run(3, seed=11)
+    for a, b in zip(s1, s2):
+        np.testing.assert_allclose(a.prices, b.prices, rtol=1e-6)
+
+
+def test_preview_prices_is_side_effect_free():
+    """Fig 5: provisional prices during the bid window must not move the
+    economy (no settlement, no learning, no RNG consumption)."""
+    eco1 = make_fleet_economy(seed=21)
+    eco2 = make_fleet_economy(seed=21)
+    _ = eco1.preview_prices()
+    s1 = eco1.run_epoch()
+    s2 = eco2.run_epoch()
+    np.testing.assert_allclose(s1.prices, s2.prices, rtol=1e-6)
+    assert np.isfinite(_).all()

@@ -1,0 +1,66 @@
+"""Pipeline parallelism: GPipe schedule == sequential reference, fwd + grad.
+
+Runs in a subprocess with 4 fake devices (the test file itself must not
+pollute the session's device count)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.train.pipeline import make_pipelined_loss, pipeline_apply
+
+S, M, MB, D = 4, 8, 2, 16
+rng = np.random.default_rng(0)
+mesh = Mesh(np.asarray(jax.devices()[:S]).reshape(S), ("pod",))
+
+# homogeneous stage: y = tanh(x @ w + b)
+stages = {
+    "w": jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32) * 0.3),
+    "b": jnp.asarray(rng.normal(size=(S, D)).astype(np.float32) * 0.1),
+}
+head = {"v": jnp.asarray(rng.normal(size=(D,)).astype(np.float32))}
+x = jnp.asarray(rng.normal(size=(M, MB, D)).astype(np.float32))
+y = jnp.asarray(rng.normal(size=(M, MB)).astype(np.float32))
+
+def stage_fn(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+def loss_head(p, outs, tgt):
+    pred = jnp.einsum("mbd,d->mb", outs, p["v"])
+    return jnp.mean((pred - tgt) ** 2)
+
+# sequential reference
+def ref_loss(params, batch):
+    h = batch["x"]
+    for s in range(S):
+        p = jax.tree_util.tree_map(lambda a: a[s], params["stages"])
+        h = stage_fn(p, h)
+    return loss_head(params["head"], h, batch["y"])
+
+params = {"stages": stages, "head": head}
+batch = {"x": x, "y": y}
+pl = make_pipelined_loss(stage_fn, loss_head, mesh, "pod")
+
+l_ref = ref_loss(params, batch)
+l_pp = jax.jit(pl)(params, batch)
+np.testing.assert_allclose(float(l_ref), float(l_pp), rtol=1e-5)
+
+g_ref = jax.grad(ref_loss)(params, batch)
+g_pp = jax.jit(jax.grad(pl))(params, batch)
+for a, b in zip(jax.tree_util.tree_leaves(g_ref), jax.tree_util.tree_leaves(g_pp)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+print("PIPELINE_OK")
+"""
+
+
+def test_gpipe_matches_sequential_forward_and_grad():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.getcwd(), timeout=600,
+    )
+    assert "PIPELINE_OK" in out.stdout, out.stdout + "\n" + out.stderr

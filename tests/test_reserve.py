@@ -1,0 +1,55 @@
+"""§IV.A weighting-function properties 1-5 for every curve family."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CURVE_FAMILIES, ResourcePool, reserve_prices
+
+
+@pytest.mark.parametrize("name", list(CURVE_FAMILIES))
+class TestWeightingProperties:
+    def test_p1_monotone(self, name):
+        phi = CURVE_FAMILIES[name]
+        psi = np.linspace(0, 1, 201, dtype=np.float32)
+        vals = np.asarray(phi(psi))
+        assert (np.diff(vals) >= -1e-6).all()
+
+    def test_p2_overutilized_above_one(self, name):
+        phi = CURVE_FAMILIES[name]
+        t = getattr(phi, "target")
+        psi = np.linspace(t + 0.02, 1.0, 50, dtype=np.float32)
+        assert (np.asarray(phi(psi)) > 1.0 - 1e-5).all()
+
+    def test_p3_underutilized_at_most_one(self, name):
+        phi = CURVE_FAMILIES[name]
+        t = getattr(phi, "target")
+        psi = np.linspace(0.0, t, 50, dtype=np.float32)
+        assert (np.asarray(phi(psi)) <= 1.0 + 1e-5).all()
+
+    def test_p4_congested_spread_dominates(self, name):
+        phi = CURVE_FAMILIES[name]
+        hi = float(phi(np.float32(0.99))) / float(phi(np.float32(0.80)))
+        lo = float(phi(np.float32(0.40))) / float(phi(np.float32(0.15)))
+        assert hi > 2.0 * lo  # "significantly greater"
+
+    def test_p5_bounded_ratio(self, name):
+        phi = CURVE_FAMILIES[name]
+        k = getattr(phi, "k")
+        ratio = float(phi(np.float32(1.0))) / float(phi(np.float32(0.0)))
+        assert ratio == pytest.approx(k, rel=0.05)
+
+
+def test_reserve_price_eq4():
+    pools = [
+        ResourcePool("a", "cpu", base_cost=2.0, utilization=0.95),
+        ResourcePool("b", "cpu", base_cost=2.0, utilization=0.10),
+    ]
+    pr = reserve_prices(pools)
+    assert pr[0] > 2.0 > pr[1] > 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(psi=st.floats(0, 1), name=st.sampled_from(list(CURVE_FAMILIES)))
+def test_property_weights_positive_finite(psi, name):
+    v = float(CURVE_FAMILIES[name](np.float32(psi)))
+    assert np.isfinite(v) and v > 0
