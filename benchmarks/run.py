@@ -6,6 +6,11 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), where
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run fig6 table1
+    PYTHONPATH=src python -m benchmarks.run --json bid_eval_sparse  # + BENCH_settlement.json
+
+``--json`` additionally writes ``BENCH_settlement.json`` (one record per
+benchmark: name, us_per_call, derived) so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -101,9 +106,10 @@ def fig7_utilization():
 def auction_scaling():
     """Paper §III.C.4 — '100 bidders × 100 resources took a few minutes in
     non-optimized Python; optimized code ≥1 order of magnitude faster.'
+    Settlement runs on the sparse O(nnz) path (each bid touches 2 pools).
     derived: speedup of our settlement vs a 120 s few-minutes baseline."""
     import jax.numpy as jnp
-    from repro.core import ClockConfig, clock_auction, pack_bids
+    from repro.core import ClockConfig, clock_auction, pack_bids_sparse
 
     rng = np.random.default_rng(0)
 
@@ -123,7 +129,7 @@ def auction_scaling():
             q[i] = -float(rng.uniform(20, 50))
             bl.append([q])
             pis.append(float(-rng.uniform(0.5, 1) * -q[i]))
-        return pack_bids(bl, pis, base_cost=np.ones(r, np.float32))
+        return pack_bids_sparse(bl, pis, base_cost=np.ones(r, np.float32))
 
     rows = []
     # bigger markets use coarser clock ticks (tick size is an operator knob —
@@ -169,6 +175,52 @@ def bid_eval_round():
     return us, round(U / (us / 1e6), 0)
 
 
+def bid_eval_sparse():
+    """Settlement hot loop on the sparse O(nnz) path: same 100k bids × 1k
+    pools as bid_eval_round, K=8 nonzeros per bundle, jnp backend on CPU.
+    Also times the dense path on the equivalent densified problem.
+    derived: dense/sparse speedup (us_per_call ratio)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    U, B, R, K = 100_000, 4, 1_000, 8
+    idx_np = np.sort(rng.integers(0, R, size=(U, B, K)), axis=-1).astype(np.int32)
+    val_np = rng.normal(size=(U, B, K)).astype(np.float32)
+    mask = jnp.asarray(rng.random((U, B)) < 0.9)
+    pi = jnp.asarray(rng.normal(size=(U,)).astype(np.float32) * 5)
+    prices = jnp.asarray(np.abs(rng.normal(size=(R,))).astype(np.float32))
+
+    idx, val = jnp.asarray(idx_np), jnp.asarray(val_np)
+    f_sp = jax.jit(
+        lambda i, v, m, p, pr: ops.sparse_bid_eval(i, v, m, p, pr, R, backend="jnp")[0]
+    )
+    f_sp(idx, val, mask, pi, prices).block_until_ready()
+    us_sp = _timeit(
+        lambda: f_sp(idx, val, mask, pi, prices).block_until_ready(), n=5, warmup=1
+    )
+
+    # densify the same bid book (duplicate indices sum) and time the dense path
+    dense_np = np.zeros((U, B, R), np.float32)
+    uu = np.repeat(np.arange(U), B * K)
+    bb = np.tile(np.repeat(np.arange(B), K), U)
+    np.add.at(dense_np, (uu, bb, idx_np.reshape(-1)), val_np.reshape(-1))
+    bundles = jnp.asarray(dense_np)
+    del dense_np
+    f_d = jax.jit(lambda b, m, p, pr: ops.bid_eval(b, m, p, pr, backend="jnp")[0])
+    f_d(bundles, mask, pi, prices).block_until_ready()
+    us_d = _timeit(
+        lambda: f_d(bundles, mask, pi, prices).block_until_ready(), n=3, warmup=1
+    )
+    print(
+        f"# bid_eval_sparse: sparse {us_sp:.0f} us/round, dense {us_d:.0f} us/round, "
+        f"{U / (us_sp / 1e6):.0f} bids/s sparse",
+        file=sys.stderr,
+    )
+    return us_sp, round(us_d / us_sp, 1)
+
+
 def roofline_summary():
     """§Roofline — aggregate the dry-run matrix artifacts.
     derived: count of single-pod cells whose compile succeeded."""
@@ -198,20 +250,34 @@ BENCHES = {
     "fig7_utilization": fig7_utilization,
     "auction_scaling": auction_scaling,
     "bid_eval_round": bid_eval_round,
+    "bid_eval_sparse": bid_eval_sparse,
     "roofline_summary": roofline_summary,
 }
 
+JSON_PATH = "BENCH_settlement.json"
+
 
 def main() -> None:
-    want = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    write_json = "--json" in args
+    want = [a for a in args if not a.startswith("--")] or list(BENCHES)
+    records = []
     print("name,us_per_call,derived")
     for name in want:
-        key = next((k for k in BENCHES if k.startswith(name)), None)
+        # exact name wins; prefix match is a convenience for unambiguous stems
+        key = name if name in BENCHES else next(
+            (k for k in BENCHES if k.startswith(name)), None
+        )
         if key is None:
             print(f"# unknown benchmark {name}", file=sys.stderr)
             continue
         us, derived = BENCHES[key]()
         print(f"{key},{us:.1f},{derived}")
+        records.append({"name": key, "us_per_call": round(us, 1), "derived": derived})
+    if write_json:
+        with open(JSON_PATH, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {JSON_PATH} ({len(records)} records)", file=sys.stderr)
 
 
 if __name__ == "__main__":

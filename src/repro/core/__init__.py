@@ -1,7 +1,8 @@
 """Market-economy provisioning core (the paper's contribution).
 
 Public API:
-  - types: ResourcePool, AuctionProblem, AuctionResult, pack_bids
+  - types: ResourcePool, AuctionProblem / SparseAuctionProblem (primary
+    settlement encoding), pack_bids / pack_bids_sparse, sparsify / densify
   - reserve: ExpWeighting / LogisticWeighting / PiecewisePowerWeighting,
     reserve_prices
   - auction: clock_auction, ClockConfig, proxy_demand, verify_system
@@ -13,8 +14,13 @@ from .types import (
     AuctionProblem,
     AuctionResult,
     ResourcePool,
+    SparseAuctionProblem,
+    SparseAuctionResult,
+    densify,
     operator_supply_bids,
     pack_bids,
+    pack_bids_sparse,
+    sparsify,
 )
 from .reserve import (
     CURVE_FAMILIES,
@@ -29,6 +35,8 @@ from .auction import (
     bundle_costs,
     clock_auction,
     proxy_demand,
+    sparse_bundle_costs,
+    sparse_proxy_demand,
     surplus_and_trade,
     verify_system,
 )
@@ -38,8 +46,13 @@ __all__ = [
     "AuctionProblem",
     "AuctionResult",
     "ResourcePool",
+    "SparseAuctionProblem",
+    "SparseAuctionResult",
+    "densify",
     "operator_supply_bids",
     "pack_bids",
+    "pack_bids_sparse",
+    "sparsify",
     "CURVE_FAMILIES",
     "DEFAULT_WEIGHTING",
     "ExpWeighting",
@@ -50,6 +63,8 @@ __all__ = [
     "bundle_costs",
     "clock_auction",
     "proxy_demand",
+    "sparse_bundle_costs",
+    "sparse_proxy_demand",
     "surplus_and_trade",
     "verify_system",
     "All",

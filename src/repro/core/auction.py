@@ -30,9 +30,16 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .types import AuctionProblem, AuctionResult
+from .types import (
+    AuctionProblem,
+    AuctionResult,
+    SparseAuctionProblem,
+    SparseAuctionResult,
+)
 
-# demand_fn(bundles, mask, pi, prices) -> (x (U,R), chosen (U,), active (U,))
+# dense demand_fn(bundles, mask, pi, prices) -> (x (U,R), chosen (U,), active (U,))
+# sparse demand_fn(idx, val, mask, pi, prices, num_resources)
+#     -> (z (R,), chosen (U,), active (U,))   [tagged sparse_signature=True]
 DemandFn = Callable[..., tuple[jax.Array, jax.Array, jax.Array]]
 
 
@@ -68,6 +75,107 @@ def proxy_demand(
     return x, chosen, active
 
 
+def sparse_bundle_costs(
+    idx: jax.Array, val: jax.Array, mask: jax.Array, prices: jax.Array
+) -> jax.Array:
+    """O(U·B·K) bundle costs: gather prices by idx, per-bundle dot.
+
+    Padded slots (idx=0, val=0) gather pool 0's price and contribute exactly
+    0, and nonzeros are stored in ascending pool order, so the K-term fold
+    matches the dense row reduction bit for bit.
+    """
+    gathered = prices.astype(jnp.float32)[idx]  # (U, B, K)
+    costs = jnp.sum(val.astype(jnp.float32) * gathered, axis=-1)  # (U, B)
+    return jnp.where(mask, costs, jnp.inf)
+
+
+def sparse_proxy_demand(
+    idx: jax.Array,
+    val: jax.Array,
+    mask: jax.Array,
+    pi: jax.Array,
+    prices: jax.Array,
+    num_resources: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sparse twin of :func:`proxy_demand` — returns (z, chosen, active).
+
+    Excess demand is scattered straight into the (R,) accumulator
+    (``segment_sum`` over the selected bundles' nonzeros); the (U, R) demand
+    matrix is never materialized.  Supports scalar-π (cheapest affordable
+    bundle) and vector-π (max-surplus bundle) semantics, like the dense path.
+    """
+    costs = sparse_bundle_costs(idx, val, mask, prices)  # (U, B)
+    if pi.ndim == 1:
+        bhat = jnp.argmin(costs, axis=1)
+        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
+        active = cost_hat <= pi
+    else:
+        surplus = jnp.where(mask, pi - costs, -jnp.inf)
+        bhat = jnp.argmax(surplus, axis=1)
+        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
+        active = s_hat >= 0.0
+    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = sel_val.astype(jnp.float32) * active[:, None]
+    z = (
+        jnp.zeros((num_resources,), jnp.float32)
+        .at[sel_idx.reshape(-1)]
+        .add(sel_val.reshape(-1))
+    )
+    chosen = jnp.where(active, bhat, -1)
+    return z, chosen, active
+
+
+sparse_proxy_demand.sparse_signature = True  # type: ignore[attr-defined]
+
+
+def sparse_proxy_demand_exact(
+    idx: jax.Array,
+    val: jax.Array,
+    mask: jax.Array,
+    pi: jax.Array,
+    prices: jax.Array,
+    num_resources: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Bit-compatible twin of :func:`sparse_proxy_demand`.
+
+    A direct (nnz,)→(R,) scatter-add associates the per-resource sum
+    differently from the dense path's (U, R) column reduction, which shifts z
+    by ~1 ulp and lets clock trajectories drift.  This variant scatters the
+    selected bundles into per-user rows first and column-sums them — the
+    identical reduction the dense reference runs — so swapping a dense
+    problem for its sparsified twin reproduces prices bit for bit.  Costs and
+    selection stay O(U·B·K); only z accumulation pays the O(U·R) the dense
+    baseline paid.  Use the default scatter variant at planet scale.
+    """
+    costs = sparse_bundle_costs(idx, val, mask, prices)
+    if pi.ndim == 1:
+        bhat = jnp.argmin(costs, axis=1)
+        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
+        active = cost_hat <= pi
+    else:
+        surplus = jnp.where(mask, pi - costs, -jnp.inf)
+        bhat = jnp.argmax(surplus, axis=1)
+        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
+        active = s_hat >= 0.0
+    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = sel_val.astype(jnp.float32) * active[:, None]
+    num_users, k = sel_idx.shape
+    rows = jnp.repeat(jnp.arange(num_users), k)
+    x = (
+        jnp.zeros((num_users, num_resources), jnp.float32)
+        .at[rows, sel_idx.reshape(-1)]
+        .add(sel_val.reshape(-1))
+    )
+    chosen = jnp.where(active, bhat, -1)
+    return x.sum(axis=0), chosen, active
+
+
+sparse_proxy_demand_exact.sparse_signature = True  # type: ignore[attr-defined]
+sparse_proxy_demand_exact.exact_settlement = True  # type: ignore[attr-defined]
+
+
 @dataclasses.dataclass(frozen=True)
 class ClockConfig:
     """Auction hyper-parameters (paper §III.C.2)."""
@@ -98,17 +206,48 @@ class ClockConfig:
     jax.jit, static_argnames=("config", "demand_fn"), donate_argnums=()
 )
 def clock_auction(
-    problem: AuctionProblem,
+    problem: AuctionProblem | SparseAuctionProblem,
     start_prices: jax.Array,
     config: ClockConfig = ClockConfig(),
-    demand_fn: DemandFn = proxy_demand,
-) -> AuctionResult:
-    """Run Algorithm 1 to convergence (or ``max_rounds``) and settle."""
-    bundles, mask, pi = problem.bundles, problem.bundle_mask, problem.pi
+    demand_fn: DemandFn | None = None,
+) -> AuctionResult | SparseAuctionResult:
+    """Run Algorithm 1 to convergence (or ``max_rounds``) and settle.
+
+    Dense problems evaluate demand in O(U·B·R) and settle to an
+    ``AuctionResult``; sparse problems evaluate in O(U·B·K) and settle to a
+    ``SparseAuctionResult`` whose allocations stay in (idx, val) form.  The
+    demand_fn must match the problem encoding (sparse demand fns carry a
+    ``sparse_signature`` attribute; ``None`` selects the matching
+    pure-jnp proxy).
+    """
+    is_sparse = isinstance(problem, SparseAuctionProblem)
+    mask, pi = problem.bundle_mask, problem.pi
     if config.break_ties:
         u = jnp.arange(pi.shape[0], dtype=jnp.float32)
         jitter = config.tie_eps * (1.0 + u / pi.shape[0])
+        if pi.ndim == 2:
+            jitter = jitter[:, None]
         pi = pi + jnp.sign(pi) * jitter * jnp.abs(pi)
+    if demand_fn is None:
+        demand_fn = sparse_proxy_demand if is_sparse else proxy_demand
+    if is_sparse != bool(getattr(demand_fn, "sparse_signature", False)):
+        raise TypeError(
+            f"demand_fn {demand_fn} does not match the "
+            f"{'sparse' if is_sparse else 'dense'} problem encoding"
+        )
+    if is_sparse:
+        idx, val = problem.idx, problem.val
+
+        def demand(prices):
+            return demand_fn(idx, val, mask, pi, prices, problem.num_resources)
+
+    else:
+        bundles = problem.bundles
+
+        def demand(prices):
+            x, chosen, active = demand_fn(bundles, mask, pi, prices)
+            return x.sum(axis=0), chosen, active
+
     c = problem.base_cost
     s = problem.supply_scale
     alpha = jnp.float32(config.alpha)
@@ -117,8 +256,8 @@ def clock_auction(
     tol = jnp.float32(config.tol)
 
     def excess(prices):
-        x, _, _ = demand_fn(bundles, mask, pi, prices)
-        return x.sum(axis=0)
+        z, _, _ = demand(prices)
+        return z
 
     # eq. (3): additive step ∝ normalized excess demand, capped at a fixed
     # fraction of the current price, scaled by base cost (the paper's
@@ -161,6 +300,43 @@ def clock_auction(
         )
         prices = p_prev + lam * delta_p
 
+    if is_sparse:
+        z, chosen, active = demand(prices)
+        bsel = jnp.maximum(chosen, 0)
+        alloc_idx = jnp.take_along_axis(idx, bsel[:, None, None], axis=1)[:, 0, :]
+        alloc_val = jnp.take_along_axis(val, bsel[:, None, None], axis=1)[:, 0, :]
+        alloc_val = alloc_val.astype(jnp.float32) * active[:, None]
+        if getattr(demand_fn, "exact_settlement", False):
+            # Rebuild the dense (U, B, R) tensor and settle through the
+            # verbatim dense expressions (bundle gather fused into the
+            # matvec), so payments — and the γ statistics derived from them —
+            # stay bit-identical to the dense path.  O(U·B·R) once per
+            # auction; planet-scale settlement uses the sparse fold below.
+            nu, nb, k = problem.idx.shape
+            rows = jnp.repeat(jnp.arange(nu), nb * k)
+            cols = jnp.tile(jnp.repeat(jnp.arange(nb), k), nu)
+            bundles_dense = (
+                jnp.zeros((nu, nb, problem.num_resources), jnp.float32)
+                .at[rows, cols, idx.reshape(-1)]
+                .add(val.reshape(-1).astype(jnp.float32))
+            )
+            sel = jnp.take_along_axis(
+                bundles_dense, jnp.maximum(chosen, 0)[:, None, None], axis=1
+            )[:, 0, :]
+            payments = (sel * active[:, None].astype(jnp.float32)) @ prices
+        else:
+            payments = jnp.sum(alloc_val * prices[alloc_idx], axis=-1)
+        return SparseAuctionResult(
+            prices=prices,
+            alloc_idx=alloc_idx,
+            alloc_val=alloc_val,
+            chosen_bundle=chosen,
+            won=active,
+            payments=payments,
+            excess_demand=z,
+            rounds=rounds,
+            converged=jnp.all(z <= tol),
+        )
     x, chosen, active = demand_fn(bundles, mask, pi, prices)
     z = x.sum(axis=0)
     payments = x @ prices
@@ -182,16 +358,25 @@ def clock_auction(
 
 
 def verify_system(
-    problem: AuctionProblem, result: AuctionResult, atol: float = 1e-3
+    problem: AuctionProblem | SparseAuctionProblem,
+    result: AuctionResult | SparseAuctionResult,
+    atol: float = 1e-3,
 ) -> dict[str, bool]:
     """Check the settled (x, p) against every SYSTEM constraint.
 
-    Returns a dict of named booleans; ``all(verify_system(...).values())``
-    means the clock found a feasible point of SYSTEM.
+    Accepts either encoding (sparse results are checked on their (idx, val)
+    allocations directly).  Returns a dict of named booleans;
+    ``all(verify_system(...).values())`` means the clock found a feasible
+    point of SYSTEM.
     """
-    bundles, mask, pi = problem.bundles, problem.bundle_mask, problem.pi
-    p, x, won = result.prices, result.allocations, result.won
-    costs = bundle_costs(bundles, mask, p)  # (U, B)
+    mask, pi = problem.bundle_mask, problem.pi
+    p, won = result.prices, result.won
+    if isinstance(problem, SparseAuctionProblem):
+        costs = sparse_bundle_costs(problem.idx, problem.val, mask, p)
+        lost_zero = jnp.all(result.alloc_val == 0, axis=1)
+    else:
+        costs = bundle_costs(problem.bundles, mask, p)  # (U, B)
+        lost_zero = jnp.all(result.allocations == 0, axis=1)
     min_cost = jnp.min(costs, axis=1)  # min_q qᵀp (inf if no valid bundle)
     pay = result.payments
     scale = 1.0 + jnp.abs(pay)
@@ -219,7 +404,7 @@ def verify_system(
     checks = {
         # (1) x_u ∈ {0 ∪ Q_u}: allocation is the chosen bundle or zero.
         "c1_bundle_integrality": bool(
-            jnp.all(jnp.where(won, result.chosen_bundle >= 0, jnp.all(x == 0, axis=1)))
+            jnp.all(jnp.where(won, result.chosen_bundle >= 0, lost_zero))
         ),
         # (2) Σ_u x_u ≤ 0 : no shortages created.
         "c2_no_excess_demand": bool(jnp.all(result.excess_demand <= atol)),
@@ -239,7 +424,10 @@ def verify_system(
     return checks
 
 
-def surplus_and_trade(problem: AuctionProblem, result: AuctionResult):
+def surplus_and_trade(
+    problem: AuctionProblem | SparseAuctionProblem,
+    result: AuctionResult | SparseAuctionResult,
+):
     """Realized total surplus and value-of-trade (paper §III.B objectives)."""
     pi = problem.pi
     if pi.ndim == 2:

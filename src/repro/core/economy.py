@@ -22,9 +22,15 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from .auction import ClockConfig, clock_auction, verify_system, surplus_and_trade
+from .auction import (
+    ClockConfig,
+    clock_auction,
+    sparse_proxy_demand_exact,
+    surplus_and_trade,
+    verify_system,
+)
 from .reserve import DEFAULT_WEIGHTING, WeightingFn
-from .types import AuctionProblem, ResourcePool, pack_bids
+from .types import ResourcePool, pack_bids_sparse
 
 
 @dataclasses.dataclass
@@ -156,21 +162,31 @@ class Economy:
         tilde_p = reserve_prices(pools, self.weighting)
         base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
 
-        bundle_lists: list[list[np.ndarray]] = []
+        # All bids are packed straight into sparse (idx, val) form: every
+        # agent bundle writes exactly T nonzeros per reachable cluster and
+        # every operator lot writes one — no (R,) row is ever materialized,
+        # so epoch setup is O(nnz) host work instead of O(U·B·R).
+        T = self.T
+        t_arange = np.arange(T)
+        # per user: list of (idx (K,), val (K,)) sparse bundle pairs
+        sparse_rows: list[list[tuple[np.ndarray, np.ndarray]]] = []
         pi_rows: list[np.ndarray] = []  # per-bundle π (vector-π extension)
         kinds: list[tuple] = []  # (agent_idx, "buy"/"sell"/"op", cluster list)
 
-        # (a) operator sells spare capacity in lots at reserve
+        # (a) operator sells spare capacity in lots at reserve: one nonzero
+        # per lot bundle.  π stays in the scalar dtype chain (python float ×
+        # tilde_p element) — operator sellers are exactly marginal at the
+        # reserve price, so a 1-ulp π change flips them in or out.
         for r, pool in enumerate(pools):
             if pool.supply <= 1e-9:
                 continue
             lot = pool.supply / self.operator_lots
             for _ in range(self.operator_lots):
-                q = np.zeros((self.R,), np.float32)
-                q[r] = -lot
-                bundle_lists.append([q])
+                sparse_rows.append(
+                    [(np.array([r], np.int32), np.array([-lot], np.float32))]
+                )
                 pi_rows.append(np.array([-lot * tilde_p[r]], np.float32))
-                kinds.append((-1, "op", [r // self.T]))
+                kinds.append((-1, "op", [r // T]))
 
         # (b) agent buy bids (XOR across reachable clusters)
         max_b = 1
@@ -184,16 +200,20 @@ class Economy:
             )
             if sells:
                 # trader: offer holdings at home, seek to re-buy elsewhere
-                q = np.zeros((self.R,), np.float32)
-                for t in range(self.T):
-                    q[self.pool_idx(a.placed, t)] = -a.req[t]
                 exp_rev = float(
                     sum(
                         a.req[t] * self.belief[self.pool_idx(a.placed, t)]
                         for t in range(self.T)
                     )
                 )
-                bundle_lists.append([q])
+                sparse_rows.append(
+                    [
+                        (
+                            (a.placed * T + t_arange).astype(np.int32),
+                            (-a.req).astype(np.float32),
+                        )
+                    ]
+                )
                 pi_rows.append(np.array([-exp_rev * (1.0 - 0.15)], np.float32))
                 kinds.append((i, "sell", [a.placed]))
                 wants_placement = True  # now needs a new home
@@ -209,9 +229,6 @@ class Economy:
                 reach = [a.home] + reach[: max(0, n_reach - 1)]
             bundles, pis = [], []
             for c in reach:
-                q = np.zeros((self.R,), np.float32)
-                for t in range(self.T):
-                    q[self.pool_idx(c, t)] = a.req[t]
                 believed = float(
                     sum(a.req[t] * self.belief[self.pool_idx(c, t)] for t in range(self.T))
                 )
@@ -219,31 +236,30 @@ class Economy:
                 # bid: value capped by belief*(1+margin) — early epochs bid
                 # near private value (wild), later epochs track the market.
                 pi = min(raw_value, believed * (1.0 + a.margin()), a.budget)
-                bundles.append(q)
+                bundles.append(
+                    ((c * T + t_arange).astype(np.int32), a.req.astype(np.float32))
+                )
                 pis.append(pi)
-            bundle_lists.append(bundles)
+            sparse_rows.append(bundles)
             pi_rows.append(np.asarray(pis, np.float32))
             kinds.append((i, "buy", reach))
             max_b = max(max_b, len(bundles))
 
-        # pad π rows to rectangle (vector-π mode)
-        U = len(bundle_lists)
-        max_b = max(max_b, max(len(b) for b in bundle_lists))
+        # pad π rows to rectangle (vector-π mode) and pack sparse tensors
+        U = len(sparse_rows)
+        max_b = max(max_b, max(len(b) for b in sparse_rows))
         pi_mat = np.full((U, max_b), -np.inf, np.float32)
-        for u, row in enumerate(pi_rows):
-            pi_mat[u, : len(row)] = row
+        for u, pis_u in enumerate(pi_rows):
+            pi_mat[u, : len(pis_u)] = pis_u
 
-        problem = pack_bids(
-            bundle_lists, [0.0] * U, base_cost=base_cost_flat
+        problem = pack_bids_sparse(
+            sparse_rows, pi_mat, base_cost=base_cost_flat, k_max=max(T, 1)
         )
-        problem = AuctionProblem(
-            bundles=problem.bundles,
-            bundle_mask=problem.bundle_mask,
-            pi=jnp.asarray(pi_mat),
-            base_cost=problem.base_cost,
-            supply_scale=problem.supply_scale,
+        # the exact demand variant keeps EpochStats bit-identical to the old
+        # dense settlement path (same seed ⇒ same prices/γ/migrations).
+        result = clock_auction(
+            problem, jnp.asarray(tilde_p), self.clock, demand_fn=sparse_proxy_demand_exact
         )
-        result = clock_auction(problem, jnp.asarray(tilde_p), self.clock)
         sys_ok = all(verify_system(problem, result).values())
         surplus, trade = surplus_and_trade(problem, result)
 

@@ -9,13 +9,26 @@ Terminology follows the paper (Stokely et al.):
   vectors over the R pools (positive components = buy, negative = sell) and a
   scalar willingness-to-pay (negative = minimum acceptable revenue).
 
-Everything auction-facing is stored densely so the settlement loop is a pure
-JAX program: bundles ``(U, B, R)`` float32, a validity mask ``(U, B)``, and
-``pi (U,)``.
+Two device-ready encodings exist:
+
+* dense ``AuctionProblem``: bundles ``(U, B, R)`` float32 — simple, but a real
+  bid touches only K ≈ 3–6 of the R = clusters×rtypes pools, so at planet
+  scale this streams gigabytes of zeros through every clock round;
+* sparse ``SparseAuctionProblem``: per-bundle ``(idx, val)`` nonzero pairs
+  padded to ``K_max`` — ``idx (U, B, K) int32`` / ``val (U, B, K) float32`` —
+  which makes one proxy-evaluation round O(U·B·K) instead of O(U·B·R).  This
+  is the primary settlement path; ``pack_bids_sparse`` builds it directly and
+  ``sparsify``/``densify`` convert between the two.
+
+Padded ``(idx, val)`` slots carry ``idx = 0, val = 0`` (they gather pool 0's
+price, multiply by zero, and scatter nothing), and nonzeros are stored in
+ascending pool order so sparse cost sums fold in the same order as a dense
+row reduction.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -94,6 +107,85 @@ class AuctionResult:
         return jnp.where(self.won & (jnp.abs(pay) > 0), gamma, jnp.nan)
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("idx", "val", "bundle_mask", "pi", "base_cost", "supply_scale"),
+    meta_fields=("num_resources",),
+)
+@dataclasses.dataclass(frozen=True)
+class SparseAuctionProblem:
+    """Sparse, device-ready encoding of all bids for one auction.
+
+    Attributes:
+      idx: (U, B, K) int32 pool indices of each bundle's nonzeros, ascending;
+        padded slots are 0.
+      val: (U, B, K) quantities at those pools.  Positive = demanded,
+        negative = offered.  Padded slots are 0.
+      bundle_mask: (U, B) True for valid XOR alternatives.
+      pi: (U,) scalar willingness-to-pay, or (U, B) per-bundle (vector-π).
+      base_cost: (R,) c(r), used for price normalization.
+      supply_scale: (R,) normalization for excess demand.
+      num_resources: R — static; the index arrays don't carry it.
+    """
+
+    idx: jax.Array
+    val: jax.Array
+    bundle_mask: jax.Array
+    pi: jax.Array
+    base_cost: jax.Array
+    supply_scale: jax.Array
+    num_resources: int
+
+    @property
+    def num_users(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def num_bundles(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def k_max(self) -> int:
+        return self.idx.shape[2]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseAuctionResult:
+    """Output of one clock auction settled on a SparseAuctionProblem.
+
+    The awarded bundle stays in (idx, val) form — materializing a (U, R)
+    allocation matrix at planet scale would undo the O(nnz) win.
+    """
+
+    prices: jax.Array  # (R,) final uniform unit prices p*
+    alloc_idx: jax.Array  # (U, K) pool indices of the awarded bundle
+    alloc_val: jax.Array  # (U, K) awarded quantities (0 if lost)
+    chosen_bundle: jax.Array  # (U,) int index into Q_u, -1 if lost
+    won: jax.Array  # (U,) bool
+    payments: jax.Array  # (U,) x_uᵀ p*  (negative = revenue to seller)
+    excess_demand: jax.Array  # (R,) z at convergence (≤ 0 iff converged)
+    rounds: jax.Array  # () int32 — clock rounds executed
+    converged: jax.Array  # () bool
+
+    def premium(self, pi: jax.Array) -> jax.Array:
+        """Paper eq. (5): gamma_u = |pi_u − x_uᵀp| / |x_uᵀp| for winners."""
+        pay = self.payments
+        denom = jnp.where(jnp.abs(pay) > 0, jnp.abs(pay), 1.0)
+        gamma = jnp.abs(pi - pay) / denom
+        return jnp.where(self.won & (jnp.abs(pay) > 0), gamma, jnp.nan)
+
+    def allocations_dense(self, num_resources: int) -> jax.Array:
+        """(U, R) dense allocation matrix (duplicate indices accumulate)."""
+        u = self.alloc_idx.shape[0]
+        rows = jnp.repeat(jnp.arange(u), self.alloc_idx.shape[1])
+        return (
+            jnp.zeros((u, num_resources), jnp.float32)
+            .at[rows, self.alloc_idx.reshape(-1)]
+            .add(self.alloc_val.reshape(-1).astype(jnp.float32))
+        )
+
+
 def pack_bids(
     bundle_lists: Sequence[Sequence[np.ndarray]],
     pis: Sequence[float],
@@ -120,6 +212,139 @@ def pack_bids(
         pi=jnp.asarray(np.asarray(pis, dtype=np.float32)),
         base_cost=jnp.asarray(np.asarray(base_cost, dtype=np.float32)),
         supply_scale=jnp.asarray(np.asarray(supply_scale, dtype=np.float32)),
+    )
+
+
+def _sparse_supply_scale(idx: np.ndarray, val: np.ndarray, num_res: int) -> np.ndarray:
+    """|q| volume per resource from (idx, val) pairs, floored at 1.
+
+    Accumulates in (u, b, k) order — the same fold order as the dense
+    ``np.abs(bundles).sum(axis=(0, 1))`` — so dense and sparse packers of the
+    same bid book produce bit-identical normalizers.
+    """
+    acc = np.zeros((num_res,), np.float32)
+    np.add.at(acc, idx.reshape(-1), np.abs(val.astype(np.float32)).reshape(-1))
+    return np.maximum(acc, 1.0)
+
+
+def pack_bids_sparse(
+    bundle_lists: Sequence[Sequence],
+    pis: Sequence[float] | np.ndarray,
+    base_cost: np.ndarray,
+    supply_scale: np.ndarray | None = None,
+    k_max: int | None = None,
+    dtype=jnp.float32,
+) -> SparseAuctionProblem:
+    """Pack per-user XOR bundle lists straight into a SparseAuctionProblem.
+
+    Each bundle may be either a dense ``(R,)`` vector (nonzeros are
+    extracted) or an ``(idx, val)`` pair of 1-D arrays (stored as given, in
+    ascending-index order).  O(nnz) host work per sparse-pair bundle — no
+    ``(R,)`` row is ever materialized for them.
+    """
+    num_users = len(bundle_lists)
+    num_res = int(np.asarray(base_cost).shape[0])
+    rows: list[list[tuple[np.ndarray, np.ndarray]]] = []
+    nnz_max = 1
+    max_b = 1
+    for bl in bundle_lists:
+        row = []
+        for q in bl:
+            if isinstance(q, tuple):
+                ii, vv = q
+                ii = np.asarray(ii, np.int32)
+                if ii.size and (ii.min() < 0 or ii.max() >= num_res):
+                    raise ValueError(
+                        f"bundle pool indices must be in [0, {num_res}), got "
+                        f"[{ii.min()}, {ii.max()}] — host and device scatter "
+                        "paths disagree on out-of-range indices"
+                    )
+                order = np.argsort(ii, kind="stable")
+                ii = ii[order]
+                vv = np.asarray(vv, np.float32)[order]
+            else:
+                q = np.asarray(q)
+                ii = np.flatnonzero(q).astype(np.int32)
+                vv = q[ii].astype(np.float32)
+            row.append((ii, vv))
+            nnz_max = max(nnz_max, len(ii))
+        rows.append(row)
+        max_b = max(max_b, len(row))
+    if k_max is None:
+        k_max = nnz_max
+    elif k_max < nnz_max:
+        raise ValueError(f"k_max={k_max} < densest bundle nnz={nnz_max}")
+
+    idx = np.zeros((num_users, max_b, k_max), np.int32)
+    val = np.zeros((num_users, max_b, k_max), np.float32)
+    mask = np.zeros((num_users, max_b), bool)
+    for u, row in enumerate(rows):
+        for b, (ii, vv) in enumerate(row):
+            idx[u, b, : len(ii)] = ii
+            val[u, b, : len(ii)] = vv
+            mask[u, b] = True
+    if supply_scale is None:
+        supply_scale = _sparse_supply_scale(idx, val, num_res)
+    return SparseAuctionProblem(
+        idx=jnp.asarray(idx),
+        val=jnp.asarray(val, dtype=dtype),
+        bundle_mask=jnp.asarray(mask),
+        pi=jnp.asarray(np.asarray(pis, dtype=np.float32)),
+        base_cost=jnp.asarray(np.asarray(base_cost, dtype=np.float32)),
+        supply_scale=jnp.asarray(np.asarray(supply_scale, dtype=np.float32)),
+        num_resources=num_res,
+    )
+
+
+def sparsify(problem: AuctionProblem, k_max: int | None = None) -> SparseAuctionProblem:
+    """Dense → sparse conversion (host-side, vectorized).
+
+    Nonzeros keep ascending pool order so sparse cost sums fold in the same
+    order as the dense row reduction.  ``k_max`` below the densest bundle's
+    nnz raises rather than silently truncating bids.
+    """
+    bundles = np.asarray(problem.bundles)
+    u, b, r = bundles.shape
+    nz = bundles != 0
+    counts = nz.sum(axis=-1)
+    nnz_max = max(int(counts.max()) if counts.size else 0, 1)
+    if k_max is None:
+        k_max = nnz_max
+    elif k_max < nnz_max:
+        raise ValueError(f"k_max={k_max} < densest bundle nnz={nnz_max}")
+    # stable sort moves nonzero positions to the front, ascending
+    order = np.argsort(~nz, axis=-1, kind="stable")[..., :k_max]
+    val = np.take_along_axis(bundles, order, axis=-1)
+    live = np.arange(k_max)[None, None, :] < counts[..., None]
+    return SparseAuctionProblem(
+        idx=jnp.asarray(np.where(live, order, 0).astype(np.int32)),
+        val=jnp.asarray(np.where(live, val, 0.0).astype(np.float32)),
+        bundle_mask=problem.bundle_mask,
+        pi=problem.pi,
+        base_cost=problem.base_cost,
+        supply_scale=problem.supply_scale,
+        num_resources=r,
+    )
+
+
+def densify(problem: SparseAuctionProblem) -> AuctionProblem:
+    """Sparse → dense conversion (duplicate indices within a bundle sum)."""
+    idx = np.asarray(problem.idx)
+    val = np.asarray(problem.val)
+    u, b, k = idx.shape
+    bundles = np.zeros((u, b, problem.num_resources), np.float32)
+    uu, bb = np.meshgrid(np.arange(u), np.arange(b), indexing="ij")
+    np.add.at(
+        bundles,
+        (uu[..., None].repeat(k, -1).reshape(-1), bb[..., None].repeat(k, -1).reshape(-1), idx.reshape(-1)),
+        val.reshape(-1),
+    )
+    return AuctionProblem(
+        bundles=jnp.asarray(bundles),
+        bundle_mask=problem.bundle_mask,
+        pi=problem.pi,
+        base_cost=problem.base_cost,
+        supply_scale=problem.supply_scale,
     )
 
 

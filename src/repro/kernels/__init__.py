@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the settlement + SSM hot spots, with jnp oracles.
 
-- clock_bid_eval: fused bidder-proxy evaluation (the paper's settlement loop)
+- clock_bid_eval: fused dense bidder-proxy evaluation (scalar-π, O(U·B·R))
+- sparse_bid_eval: sparse-bundle proxy evaluation (scalar- and vector-π,
+  O(U·B·K) — the primary settlement path)
 - wkv6: chunked RWKV-6 linear recurrence (assigned ssm architecture)
 - ops: jit'd wrappers with jnp/pallas/interpret backend switch
 - ref: pure-jnp oracles (also the dry-run compile path)

@@ -5,6 +5,11 @@
                  dry-run compiles, since Pallas custom calls target TPU);
   * "pallas"   — compiled Pallas kernel (TPU);
   * "interpret"— Pallas interpreter (CPU correctness testing).
+
+Backend selection is explicit: every path honors the requested backend (the
+old ``bid_demand_fn`` silently rerouted vector-π bids to the dense jnp proxy
+regardless of backend; vector-π is now served by the sparse kernel on every
+backend).
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import jax.numpy as jnp
 
 from . import ref
 from . import clock_bid_eval as _cbe
+from . import sparse_bid_eval as _sbe
 from . import wkv6 as _wkv6
 
 Backend = Literal["jnp", "pallas", "interpret"]
@@ -25,30 +31,90 @@ def default_backend() -> Backend:
 
 
 def bid_eval(bundles, mask, pi, prices, backend: Backend | None = None):
-    """(z, chosen) — one clock-auction proxy round.  See kernels.ref.bid_eval."""
+    """(z, chosen) — one clock-auction proxy round.  See kernels.ref.bid_eval.
+
+    Dense scalar-π only; vector-π and sparse bundles go through
+    :func:`sparse_bid_eval` (the dense Pallas kernel lacks the surplus rule).
+    """
     backend = backend or default_backend()
     if backend == "jnp":
         return ref.bid_eval(bundles, mask, pi, prices)
     return _cbe.bid_eval(bundles, mask, pi, prices, interpret=backend == "interpret")
 
 
+def sparse_bid_eval(
+    idx, val, mask, pi, prices, num_resources: int, backend: Backend | None = None
+):
+    """(z, chosen) — one proxy round over sparse (idx, val) bundles, O(U·B·K).
+
+    Supports scalar-π and vector-π on every backend; see
+    kernels.ref.sparse_bid_eval for semantics.
+    """
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return ref.sparse_bid_eval(idx, val, mask, pi, prices, num_resources)
+    return _sbe.sparse_bid_eval(
+        idx, val, mask, pi, prices, num_resources, interpret=backend == "interpret"
+    )
+
+
+def _dense_to_sparse(bundles):
+    """In-trace dense → (idx, val) with K = R (exact, no truncation).
+
+    Used only by the dense-input vector-π adapter below; workloads that are
+    actually sparse should carry a SparseAuctionProblem end-to-end instead.
+    """
+    u, b, r = bundles.shape
+    nz = bundles != 0
+    iota = jax.lax.broadcasted_iota(jnp.int32, (u, b, r), 2)
+    # stable sort key: nonzero positions first, each group ascending
+    order = jnp.argsort(jnp.where(nz, iota, iota + r), axis=-1)
+    val = jnp.take_along_axis(bundles, order, axis=-1)
+    idx = jnp.where(val != 0, order, 0)
+    val = jnp.where(val != 0, val, 0)
+    return idx.astype(jnp.int32), val
+
+
 def bid_demand_fn(backend: Backend | None = None):
-    """Adapter with the auction's DemandFn signature (x, chosen, active)."""
+    """Adapter with the auction's dense DemandFn signature (x, chosen, active)."""
 
     def demand(bundles, mask, pi, prices):
+        b = backend or default_backend()
         if pi.ndim != 1:
-            # vector-π extension is served by the jnp path only
-            from ..core.auction import proxy_demand
+            # vector-π: the dense kernel lacks the surplus rule, so route
+            # through the sparse kernel on the *requested* backend.
+            if b == "jnp":
+                from ..core.auction import proxy_demand
 
-            return proxy_demand(bundles, mask, pi, prices)
-        _, chosen = bid_eval(bundles, mask, pi, prices, backend)
-        active = chosen >= 0
+                return proxy_demand(bundles, mask, pi, prices)
+            idx, val = _dense_to_sparse(bundles)
+            z, chosen = sparse_bid_eval(
+                idx, val, mask, pi, prices, bundles.shape[-1], backend=b
+            )
+            active = chosen >= 0
+        else:
+            _, chosen = bid_eval(bundles, mask, pi, prices, b)
+            active = chosen >= 0
         sel = jnp.take_along_axis(
             bundles, jnp.maximum(chosen, 0)[:, None, None], axis=1
         )[:, 0, :]
         x = sel.astype(jnp.float32) * active[:, None]
         return x, chosen, active
 
+    return demand
+
+
+def sparse_bid_demand_fn(backend: Backend | None = None):
+    """Adapter with the auction's sparse DemandFn signature (z, chosen, active)."""
+
+    def demand(idx, val, mask, pi, prices, num_resources):
+        z, chosen = sparse_bid_eval(
+            idx, val, mask, pi, prices, num_resources, backend=backend
+        )
+        active = chosen >= 0
+        return z, chosen, active
+
+    demand.sparse_signature = True  # type: ignore[attr-defined]
     return demand
 
 

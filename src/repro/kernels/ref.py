@@ -50,6 +50,57 @@ def bid_eval(
 
 
 # ---------------------------------------------------------------------------
+# sparse_bid_eval: one proxy round over sparse (idx, val) bundles — O(U·B·K)
+# ---------------------------------------------------------------------------
+
+
+def sparse_bid_eval(
+    idx: jax.Array,  # (U, B, K) int32 — pool indices, padded slots 0
+    val: jax.Array,  # (U, B, K) float — quantities, padded slots 0
+    mask: jax.Array,  # (U, B) bool/int — valid XOR alternatives
+    pi: jax.Array,  # (U,) scalar-π or (U, B) vector-π willingness-to-pay
+    prices: jax.Array,  # (R,) float
+    num_resources: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (z (R,) excess demand, chosen (U,) int32 with -1 = dropped out).
+
+    Sparse twin of :func:`bid_eval`: prices are gathered by ``idx``, bundle
+    costs are K-term dots, and the winning bundles scatter-add into z — no
+    (U, B, R) tensor anywhere.  Unlike the dense oracle this also supports
+    the vector-π surplus rule (chosen = argmax_b π_b − q_bᵀp, active while
+    surplus ≥ 0); tie-breaks take the first extremum, matching the kernels'
+    iota-min trick.
+    """
+    gathered = prices.astype(jnp.float32)[idx]  # (U, B, K)
+    costs = jnp.sum(val.astype(jnp.float32) * gathered, axis=-1)  # (U, B)
+    valid = mask.astype(bool)
+    B = costs.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, costs.shape, 1)
+    if pi.ndim == 1:
+        costs = jnp.where(valid, costs, jnp.inf)
+        cost_hat = jnp.min(costs, axis=1)
+        bhat = jnp.min(jnp.where(costs == cost_hat[:, None], iota, B), axis=1)
+        bhat = jnp.minimum(bhat, B - 1)
+        active = cost_hat <= pi.astype(jnp.float32)
+    else:
+        surplus = jnp.where(valid, pi.astype(jnp.float32) - costs, -jnp.inf)
+        s_hat = jnp.max(surplus, axis=1)
+        bhat = jnp.min(jnp.where(surplus == s_hat[:, None], iota, B), axis=1)
+        bhat = jnp.minimum(bhat, B - 1)
+        active = s_hat >= 0.0
+    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = sel_val.astype(jnp.float32) * active[:, None]
+    z = (
+        jnp.zeros((num_resources,), jnp.float32)
+        .at[sel_idx.reshape(-1)]
+        .add(sel_val.reshape(-1))
+    )
+    chosen = jnp.where(active, bhat, -1).astype(jnp.int32)
+    return z, chosen
+
+
+# ---------------------------------------------------------------------------
 # wkv6: RWKV-6 linear recurrence with data-dependent decay (chunked oracle
 # uses the plain sequential form; the kernel's chunked algebra must match it)
 # ---------------------------------------------------------------------------

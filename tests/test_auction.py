@@ -2,7 +2,6 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     AuctionProblem,
@@ -86,41 +85,6 @@ class TestClockAuction:
         prob, p0 = _simple_market([1e9] * 40, supply=1.0, lots=1)
         res = clock_auction(prob, p0, ClockConfig(max_rounds=5))
         assert int(res.rounds) <= 5
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    n_buyers=st.integers(1, 12),
-    n_res=st.integers(1, 5),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_pure_buyers_terminate_feasible(n_buyers, n_res, seed):
-    """Pure buyers + operator sellers ⇒ convergence guaranteed (§III.C.3),
-    and the settled point satisfies every SYSTEM constraint."""
-    rng = np.random.default_rng(seed)
-    pools = [
-        ResourcePool(f"c{r}", "cpu", float(rng.uniform(0.5, 2)), float(rng.uniform(0, 1)),
-                     supply=float(rng.uniform(1, 20)))
-        for r in range(n_res)
-    ]
-    pr = reserve_prices(pools)
-    bl, pis = operator_supply_bids(pools, pr, lots=2)
-    for _ in range(n_buyers):
-        n_alt = int(rng.integers(1, 4))
-        alts = []
-        for _ in range(n_alt):
-            q = np.zeros(n_res, np.float32)
-            q[rng.integers(0, n_res)] = float(rng.uniform(0.5, 8))
-            alts.append(q)
-        bl.append(alts)
-        pis.append(float(rng.uniform(0.1, 40)))
-    prob = pack_bids(bl, pis, base_cost=np.array([p.base_cost for p in pools]))
-    res = clock_auction(prob, jnp.asarray(pr), ClockConfig(max_rounds=20_000))
-    assert bool(res.converged)
-    checks = verify_system(prob, res, atol=2e-3)
-    assert all(checks.values()), checks
-    s, t = surplus_and_trade(prob, res)
-    assert float(s) >= -1e-3  # winners never pay above their stated values
 
 
 def test_break_ties_resolves_exact_tie():

@@ -1,7 +1,6 @@
 """§IV.A weighting-function properties 1-5 for every curve family."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import CURVE_FAMILIES, ResourcePool, reserve_prices
 
@@ -46,10 +45,3 @@ def test_reserve_price_eq4():
     ]
     pr = reserve_prices(pools)
     assert pr[0] > 2.0 > pr[1] > 0.0
-
-
-@settings(max_examples=50, deadline=None)
-@given(psi=st.floats(0, 1), name=st.sampled_from(list(CURVE_FAMILIES)))
-def test_property_weights_positive_finite(psi, name):
-    v = float(CURVE_FAMILIES[name](np.float32(psi)))
-    assert np.isfinite(v) and v > 0

@@ -1,0 +1,19 @@
+"""Hypothesis property tests for the weighting curves (optional dependency).
+
+Split out of test_reserve.py so the tier-1 suite still collects and runs
+when ``hypothesis`` is not installed (see requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CURVE_FAMILIES
+
+
+@settings(max_examples=50, deadline=None)
+@given(psi=st.floats(0, 1), name=st.sampled_from(list(CURVE_FAMILIES)))
+def test_property_weights_positive_finite(psi, name):
+    v = float(CURVE_FAMILIES[name](np.float32(psi)))
+    assert np.isfinite(v) and v > 0
