@@ -17,6 +17,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -154,6 +155,60 @@ def auction_scaling():
     return base * 1e6, round(120.0 / base, 0)
 
 
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+import time
+import jax, jax.numpy as jnp
+from repro.core import ClockConfig, random_market, sharded_clock_auction, users_mesh
+from repro.kernels import ops
+
+u, r = 100_000, 1_000
+prob = random_market(u, r, seed=0)
+p0 = jnp.full((r,), 0.1)
+cfg = ClockConfig(max_rounds=150, alpha=0.6, delta=0.25)
+mesh = users_mesh()
+# the planet-scale O(nnz) scatter path, one z partial per shard
+demand = ops.settlement_demand_fn(backend="jnp", exact=False)
+run = lambda: sharded_clock_auction(prob, p0, cfg, demand_fn=demand, mesh=mesh)
+run().prices.block_until_ready()  # compile
+t0 = time.perf_counter()
+res = run()
+res.prices.block_until_ready()
+dt = time.perf_counter() - t0
+print(f"SHARDED {jax.device_count()} {u} {r} {dt:.6f} {int(res.rounds)} {bool(res.converged)}")
+"""
+
+
+def auction_scaling_sharded():
+    """Multi-device settlement (ROADMAP: 'shard the clock over users'): the
+    100k×1000 sparse market settled by sharded_clock_auction on 8 virtual
+    CPU devices (subprocess, --xla_force_host_platform_device_count=8; the
+    same program runs on real multi-host meshes).  Wall time is apples-to-
+    apples with auction_scaling's round-capped largest case.
+    derived: clock rounds/s on the 8-way sharded path."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT % 8],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    line = next(
+        (l for l in out.stdout.splitlines() if l.startswith("SHARDED ")), None
+    )
+    if line is None:
+        raise RuntimeError(f"sharded benchmark failed:\n{out.stdout}\n{out.stderr}")
+    _, ndev, u, r, dt, rounds, conv = line.split()
+    dt, rounds = float(dt), int(rounds)
+    print(
+        f"#   sharded {u}x{r} on {ndev} devices: {dt*1e3:.1f} ms, {rounds} rounds "
+        f"({rounds/dt:.0f}/s), converged={conv}",
+        file=sys.stderr,
+    )
+    return dt * 1e6, round(rounds / dt, 0)
+
+
 def bid_eval_round():
     """Settlement hot loop: one proxy-evaluation round at 100k bids × 1k
     pools (jnp path on CPU; the Pallas kernel is the TPU-fused twin).
@@ -249,6 +304,7 @@ BENCHES = {
     "fig6_price_change": fig6_price_change,
     "fig7_utilization": fig7_utilization,
     "auction_scaling": auction_scaling,
+    "auction_scaling_sharded": auction_scaling_sharded,
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
     "roofline_summary": roofline_summary,
@@ -257,10 +313,35 @@ BENCHES = {
 JSON_PATH = "BENCH_settlement.json"
 
 
+def _git_sha() -> str:
+    """Short HEAD sha, with a ``-dirty`` suffix when the tree has uncommitted
+    changes — a trajectory record must not claim a commit it didn't run."""
+    try:
+        return subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _load_records(path: str) -> list:
+    """Existing trajectory records, or [] when absent/corrupt (never raise —
+    a broken file must not block recording fresh numbers)."""
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        return prev if isinstance(prev, list) else []
+    except (OSError, ValueError):
+        return []
+
+
 def main() -> None:
     args = sys.argv[1:]
     write_json = "--json" in args
     want = [a for a in args if not a.startswith("--")] or list(BENCHES)
+    sha = _git_sha()
     records = []
     print("name,us_per_call,derived")
     for name in want:
@@ -273,11 +354,20 @@ def main() -> None:
             continue
         us, derived = BENCHES[key]()
         print(f"{key},{us:.1f},{derived}")
-        records.append({"name": key, "us_per_call": round(us, 1), "derived": derived})
+        records.append({
+            "name": key, "us_per_call": round(us, 1), "derived": derived,
+            "git_sha": sha,
+        })
     if write_json:
+        # append, never clobber: the file is the cross-PR perf trajectory
+        prev = _load_records(JSON_PATH)
         with open(JSON_PATH, "w") as f:
-            json.dump(records, f, indent=1)
-        print(f"# wrote {JSON_PATH} ({len(records)} records)", file=sys.stderr)
+            json.dump(prev + records, f, indent=1)
+        print(
+            f"# wrote {JSON_PATH} (+{len(records)} records @ {sha}, "
+            f"{len(prev)} kept)",
+            file=sys.stderr,
+        )
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from .types import (
     operator_supply_bids,
     pack_bids,
     pack_bids_sparse,
+    pad_users,
     sparsify,
 )
 from .reserve import (
@@ -32,15 +33,21 @@ from .reserve import (
 )
 from .auction import (
     ClockConfig,
+    blocked_demand_fn,
     bundle_costs,
     clock_auction,
     proxy_demand,
+    sharded_clock_auction,
     sparse_bundle_costs,
     sparse_proxy_demand,
+    sparse_proxy_demand_blocked,
+    sparse_proxy_demand_exact,
     surplus_and_trade,
+    users_mesh,
     verify_system,
 )
 from .bidlang import All, BundleExplosion, OneOf, Res, flatten, pool_index
+from .markets import random_market
 
 __all__ = [
     "AuctionProblem",
@@ -52,6 +59,7 @@ __all__ = [
     "operator_supply_bids",
     "pack_bids",
     "pack_bids_sparse",
+    "pad_users",
     "sparsify",
     "CURVE_FAMILIES",
     "DEFAULT_WEIGHTING",
@@ -60,12 +68,17 @@ __all__ = [
     "PiecewisePowerWeighting",
     "reserve_prices",
     "ClockConfig",
+    "blocked_demand_fn",
     "bundle_costs",
     "clock_auction",
     "proxy_demand",
+    "sharded_clock_auction",
     "sparse_bundle_costs",
     "sparse_proxy_demand",
+    "sparse_proxy_demand_blocked",
+    "sparse_proxy_demand_exact",
     "surplus_and_trade",
+    "users_mesh",
     "verify_system",
     "All",
     "BundleExplosion",
@@ -73,4 +86,5 @@ __all__ = [
     "Res",
     "flatten",
     "pool_index",
+    "random_market",
 ]

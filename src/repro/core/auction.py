@@ -20,6 +20,15 @@ Two proxy semantics are supported:
   change our results"): proxies chase the *highest-surplus* bundle
   argmax_b (π_b − q_bᵀp) and stay in while surplus ≥ 0.  The economy layer
   uses this to express per-cluster relocation costs.
+
+Because z = Σ_u x_u is a pure sum over bidders, the clock shards over a
+device mesh: :func:`sharded_clock_auction` splits users across a ``users``
+axis, evaluates per-shard demand with the same sparse kernels, and reduces z
+across shards *inside* the ``lax.while_loop`` — the whole multi-round clock
+stays one XLA program per device.  The cross-shard reduction is an
+``all_gather`` of per-block partial sums followed by a fixed left-fold (our
+deterministic psum), so settlement on 1 and N devices is bit-identical —
+see :func:`sparse_proxy_demand_blocked`.
 """
 from __future__ import annotations
 
@@ -29,12 +38,16 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..sharding import shard_map
 from .types import (
     AuctionProblem,
     AuctionResult,
     SparseAuctionProblem,
     SparseAuctionResult,
+    pad_users,
 )
 
 # dense demand_fn(bundles, mask, pi, prices) -> (x (U,R), chosen (U,), active (U,))
@@ -89,6 +102,32 @@ def sparse_bundle_costs(
     return jnp.where(mask, costs, jnp.inf)
 
 
+def _sparse_selection(
+    idx: jax.Array, val: jax.Array, mask: jax.Array, pi: jax.Array, prices: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-user bundle choice shared by every sparse proxy variant.
+
+    Returns (sel_idx (U, K), sel_val (U, K) with inactive users zeroed,
+    chosen (U,), active (U,)).  All ops are per-user, so evaluating a shard
+    of users produces bit-identical rows to evaluating the full problem.
+    """
+    costs = sparse_bundle_costs(idx, val, mask, prices)  # (U, B)
+    if pi.ndim == 1:
+        bhat = jnp.argmin(costs, axis=1)
+        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
+        active = cost_hat <= pi
+    else:
+        surplus = jnp.where(mask, pi - costs, -jnp.inf)
+        bhat = jnp.argmax(surplus, axis=1)
+        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
+        active = s_hat >= 0.0
+    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
+    sel_val = sel_val.astype(jnp.float32) * active[:, None]
+    chosen = jnp.where(active, bhat, -1)
+    return sel_idx, sel_val, chosen, active
+
+
 def sparse_proxy_demand(
     idx: jax.Array,
     val: jax.Array,
@@ -104,29 +143,27 @@ def sparse_proxy_demand(
     matrix is never materialized.  Supports scalar-π (cheapest affordable
     bundle) and vector-π (max-surplus bundle) semantics, like the dense path.
     """
-    costs = sparse_bundle_costs(idx, val, mask, prices)  # (U, B)
-    if pi.ndim == 1:
-        bhat = jnp.argmin(costs, axis=1)
-        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
-        active = cost_hat <= pi
-    else:
-        surplus = jnp.where(mask, pi - costs, -jnp.inf)
-        bhat = jnp.argmax(surplus, axis=1)
-        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
-        active = s_hat >= 0.0
-    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
-    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
-    sel_val = sel_val.astype(jnp.float32) * active[:, None]
+    sel_idx, sel_val, chosen, active = _sparse_selection(idx, val, mask, pi, prices)
     z = (
         jnp.zeros((num_resources,), jnp.float32)
         .at[sel_idx.reshape(-1)]
         .add(sel_val.reshape(-1))
     )
-    chosen = jnp.where(active, bhat, -1)
     return z, chosen, active
 
 
 sparse_proxy_demand.sparse_signature = True  # type: ignore[attr-defined]
+
+
+def _user_rows(sel_idx: jax.Array, sel_val: jax.Array, num_resources: int) -> jax.Array:
+    """(U, R) demand rows from the selected bundles (duplicate idx sum)."""
+    num_users, k = sel_idx.shape
+    rows = jnp.repeat(jnp.arange(num_users), k)
+    return (
+        jnp.zeros((num_users, num_resources), jnp.float32)
+        .at[rows, sel_idx.reshape(-1)]
+        .add(sel_val.reshape(-1))
+    )
 
 
 def sparse_proxy_demand_exact(
@@ -148,32 +185,112 @@ def sparse_proxy_demand_exact(
     selection stay O(U·B·K); only z accumulation pays the O(U·R) the dense
     baseline paid.  Use the default scatter variant at planet scale.
     """
-    costs = sparse_bundle_costs(idx, val, mask, prices)
-    if pi.ndim == 1:
-        bhat = jnp.argmin(costs, axis=1)
-        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
-        active = cost_hat <= pi
-    else:
-        surplus = jnp.where(mask, pi - costs, -jnp.inf)
-        bhat = jnp.argmax(surplus, axis=1)
-        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
-        active = s_hat >= 0.0
-    sel_idx = jnp.take_along_axis(idx, bhat[:, None, None], axis=1)[:, 0, :]
-    sel_val = jnp.take_along_axis(val, bhat[:, None, None], axis=1)[:, 0, :]
-    sel_val = sel_val.astype(jnp.float32) * active[:, None]
-    num_users, k = sel_idx.shape
-    rows = jnp.repeat(jnp.arange(num_users), k)
-    x = (
-        jnp.zeros((num_users, num_resources), jnp.float32)
-        .at[rows, sel_idx.reshape(-1)]
-        .add(sel_val.reshape(-1))
-    )
-    chosen = jnp.where(active, bhat, -1)
+    sel_idx, sel_val, chosen, active = _sparse_selection(idx, val, mask, pi, prices)
+    x = _user_rows(sel_idx, sel_val, num_resources)
     return x.sum(axis=0), chosen, active
 
 
 sparse_proxy_demand_exact.sparse_signature = True  # type: ignore[attr-defined]
 sparse_proxy_demand_exact.exact_settlement = True  # type: ignore[attr-defined]
+
+
+def _chain_sum(partials: jax.Array) -> jax.Array:
+    """Left-fold ``((p₀ + p₁) + p₂) + …`` with a fixed, unrolled association.
+
+    This is the one cross-block reduction every settlement path shares.  XLA
+    is free to pick any association for ``x.sum(axis=0)``, and a psum's
+    reduction order is backend-defined — but an explicit unrolled fold is the
+    same expression tree no matter how the blocks were produced, which is
+    what makes 1-device and N-device settlement bit-identical.
+    """
+    z = partials[0]
+    for i in range(1, partials.shape[0]):
+        z = z + partials[i]
+    return z
+
+
+def _user_block_partials(
+    sel_idx: jax.Array, sel_val: jax.Array, num_resources: int, num_blocks: int
+) -> jax.Array:
+    """(num_blocks, R) partial demand sums over contiguous user blocks.
+
+    Users are zero-padded up to a multiple of ``num_blocks`` and each block
+    of ``U_pad / num_blocks`` per-user rows is column-summed on its own.  The
+    per-block reduce extent is therefore independent of how many devices the
+    users were split across — a shard holding ``num_blocks / D`` blocks
+    computes bit-identical partials to the same blocks of the unsharded run.
+    """
+    x = _user_rows(sel_idx, sel_val, num_resources)
+    pad = -x.shape[0] % num_blocks
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, num_resources), jnp.float32)])
+    return x.reshape(num_blocks, -1, num_resources).sum(axis=1)
+
+
+def _blocked_demand_parts(
+    idx: jax.Array,
+    val: jax.Array,
+    mask: jax.Array,
+    pi: jax.Array,
+    prices: jax.Array,
+    num_resources: int,
+    num_blocks: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(block partials (num_blocks, R), chosen, active) — the sharded clock
+    calls this per shard with its local slice of blocks."""
+    sel_idx, sel_val, chosen, active = _sparse_selection(idx, val, mask, pi, prices)
+    partials = _user_block_partials(sel_idx, sel_val, num_resources, num_blocks)
+    return partials, chosen, active
+
+
+def sparse_proxy_demand_blocked(
+    idx: jax.Array,
+    val: jax.Array,
+    mask: jax.Array,
+    pi: jax.Array,
+    prices: jax.Array,
+    num_resources: int,
+    num_blocks: int = 8,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Settlement-grade sparse demand whose z is device-count-invariant.
+
+    Same selection and per-user rows as :func:`sparse_proxy_demand_exact`,
+    but z is accumulated as a fixed left-fold over ``num_blocks`` contiguous
+    user-block partials instead of one flat column sum.
+    :func:`sharded_clock_auction` computes the identical block partials
+    shard-locally, all_gathers them, and runs the identical fold — so prices,
+    allocations, and payments from 1 device and from any D | ``num_blocks``
+    devices agree bit for bit (verified on 2/4/8 virtual CPU devices).  This
+    is what :meth:`repro.core.economy.Economy.run_epoch` settles with.
+    """
+    partials, chosen, active = _blocked_demand_parts(
+        idx, val, mask, pi, prices, num_resources, num_blocks
+    )
+    return _chain_sum(partials), chosen, active
+
+
+sparse_proxy_demand_blocked.sparse_signature = True  # type: ignore[attr-defined]
+sparse_proxy_demand_blocked.exact_settlement = True  # type: ignore[attr-defined]
+sparse_proxy_demand_blocked.partials_fn = _blocked_demand_parts  # type: ignore[attr-defined]
+sparse_proxy_demand_blocked.num_blocks = 8  # type: ignore[attr-defined]
+
+
+@functools.lru_cache(maxsize=None)
+def blocked_demand_fn(num_blocks: int = 8) -> DemandFn:
+    """:func:`sparse_proxy_demand_blocked` with a non-default block count.
+
+    Cached so repeated calls return the identical object — the demand fn is a
+    static jit argument, and a fresh partial per epoch would retrace the
+    whole clock every auction.
+    """
+    if num_blocks == 8:
+        return sparse_proxy_demand_blocked
+    fn = functools.partial(sparse_proxy_demand_blocked, num_blocks=num_blocks)
+    fn.sparse_signature = True  # type: ignore[attr-defined]
+    fn.exact_settlement = True  # type: ignore[attr-defined]
+    fn.partials_fn = _blocked_demand_parts  # type: ignore[attr-defined]
+    fn.num_blocks = num_blocks  # type: ignore[attr-defined]
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +319,114 @@ class ClockConfig:
     refine_rounds: int = 0
 
 
+def _apply_tie_jitter(pi: jax.Array, config: ClockConfig) -> jax.Array:
+    """π perturbation for ``break_ties`` — indexed by *global* user position,
+    so it must run on the full (unpadded, unsharded) π."""
+    u = jnp.arange(pi.shape[0], dtype=jnp.float32)
+    jitter = config.tie_eps * (1.0 + u / pi.shape[0])
+    if pi.ndim == 2:
+        jitter = jitter[:, None]
+    return pi + jnp.sign(pi) * jitter * jnp.abs(pi)
+
+
+def _run_clock(
+    excess: Callable[[jax.Array], jax.Array],
+    start_prices: jax.Array,
+    config: ClockConfig,
+    c: jax.Array,
+    s: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 1's price loop (plus the λ-bisection refiner) → (rounds, p*).
+
+    Shared verbatim between :func:`clock_auction` and
+    :func:`sharded_clock_auction`: only ``excess`` differs, so the price
+    trajectory is identical whenever the two paths produce identical z.
+    """
+    alpha = jnp.float32(config.alpha)
+    delta = jnp.float32(config.delta)
+    eps = jnp.float32(config.price_floor_frac)
+    tol = jnp.float32(config.tol)
+    floor = jnp.float32(config.step_floor_frac)
+
+    # eq. (3): additive step ∝ normalized excess demand, capped at a fixed
+    # fraction of the current price, scaled by base cost (the paper's
+    # normalization so cheap resources don't outrun expensive ones).
+    def cond2(state):
+        t, _, _, done = state
+        return jnp.logical_and(~done, t < config.max_rounds)
+
+    def body2(state):
+        t, p, p_prev, _ = state
+        z = excess(p)
+        done = jnp.all(z <= tol)
+        rel = jnp.maximum(alpha * jnp.maximum(z, 0.0) / s, floor)
+        step = jnp.minimum(rel * c, delta * jnp.maximum(p, eps * c))
+        p_next = jnp.where(z > tol, p + step, p)
+        return t + 1, jnp.where(done, p, p_next), jnp.where(done, p_prev, p), done
+
+    t0 = jnp.int32(0)
+    done0 = jnp.asarray(False)
+    p0 = start_prices.astype(jnp.float32)
+    rounds, prices, p_prev, _ = jax.lax.while_loop(cond2, body2, (t0, p0, p0, done0))
+
+    if config.refine_rounds > 0:
+        # λ-bisection on the final segment: λ=1 clears (post-loop prices),
+        # λ=0 is the last infeasible point; find the smallest clearing λ.
+        delta_p = prices - p_prev
+
+        def refine(i, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            ok = jnp.all(excess(p_prev + mid * delta_p) <= tol)
+            return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+        _, lam = jax.lax.fori_loop(
+            0, config.refine_rounds, refine, (jnp.float32(0.0), jnp.float32(1.0))
+        )
+        prices = p_prev + lam * delta_p
+    return rounds, prices
+
+
+def _sparse_settle(
+    idx: jax.Array,
+    val: jax.Array,
+    prices: jax.Array,
+    chosen: jax.Array,
+    active: jax.Array,
+    num_resources: int,
+    exact: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Award bundles and compute payments — per-user, so shard-invariant."""
+    bsel = jnp.maximum(chosen, 0)
+    alloc_idx = jnp.take_along_axis(idx, bsel[:, None, None], axis=1)[:, 0, :]
+    alloc_val = jnp.take_along_axis(val, bsel[:, None, None], axis=1)[:, 0, :]
+    alloc_val = alloc_val.astype(jnp.float32) * active[:, None]
+    if exact:
+        # Rebuild the dense (U, B, R) rows and pay through the dense
+        # row·price reduction, so duplicate pool indices within a bundle
+        # settle exactly like their dense sum.  The per-user dot is an
+        # explicit last-axis reduce rather than a matvec: XLA tiles a dot's
+        # contraction by operand shape, so `x @ p` can differ by an ulp
+        # between a full problem and its shard — a fixed (row × price).sum
+        # keeps payments bit-identical for every users-axis split.  O(U·B·R)
+        # once per auction; planet-scale settlement uses the sparse fold
+        # below.
+        nu, nb, k = idx.shape
+        rows = jnp.repeat(jnp.arange(nu), nb * k)
+        cols = jnp.tile(jnp.repeat(jnp.arange(nb), k), nu)
+        bundles_dense = (
+            jnp.zeros((nu, nb, num_resources), jnp.float32)
+            .at[rows, cols, idx.reshape(-1)]
+            .add(val.reshape(-1).astype(jnp.float32))
+        )
+        sel = jnp.take_along_axis(bundles_dense, bsel[:, None, None], axis=1)[:, 0, :]
+        sel = sel * active[:, None].astype(jnp.float32)
+        payments = jnp.sum(sel * prices[None, :], axis=-1)
+    else:
+        payments = jnp.sum(alloc_val * prices[alloc_idx], axis=-1)
+    return alloc_idx, alloc_val, payments
+
+
 @functools.partial(
     jax.jit, static_argnames=("config", "demand_fn"), donate_argnums=()
 )
@@ -223,11 +448,7 @@ def clock_auction(
     is_sparse = isinstance(problem, SparseAuctionProblem)
     mask, pi = problem.bundle_mask, problem.pi
     if config.break_ties:
-        u = jnp.arange(pi.shape[0], dtype=jnp.float32)
-        jitter = config.tie_eps * (1.0 + u / pi.shape[0])
-        if pi.ndim == 2:
-            jitter = jitter[:, None]
-        pi = pi + jnp.sign(pi) * jitter * jnp.abs(pi)
+        pi = _apply_tie_jitter(pi, config)
     if demand_fn is None:
         demand_fn = sparse_proxy_demand if is_sparse else proxy_demand
     if is_sparse != bool(getattr(demand_fn, "sparse_signature", False)):
@@ -248,84 +469,21 @@ def clock_auction(
             x, chosen, active = demand_fn(bundles, mask, pi, prices)
             return x.sum(axis=0), chosen, active
 
-    c = problem.base_cost
-    s = problem.supply_scale
-    alpha = jnp.float32(config.alpha)
-    delta = jnp.float32(config.delta)
-    eps = jnp.float32(config.price_floor_frac)
-    tol = jnp.float32(config.tol)
-
     def excess(prices):
         z, _, _ = demand(prices)
         return z
 
-    # eq. (3): additive step ∝ normalized excess demand, capped at a fixed
-    # fraction of the current price, scaled by base cost (the paper's
-    # normalization so cheap resources don't outrun expensive ones).
-    def cond2(state):
-        t, _, _, done = state
-        return jnp.logical_and(~done, t < config.max_rounds)
-
-    floor = jnp.float32(config.step_floor_frac)
-
-    def body2(state):
-        t, p, p_prev, _ = state
-        z = excess(p)
-        done = jnp.all(z <= tol)
-        rel = jnp.maximum(alpha * jnp.maximum(z, 0.0) / s, floor)
-        step = jnp.minimum(rel * c, delta * jnp.maximum(p, eps * c))
-        p_next = jnp.where(z > tol, p + step, p)
-        return t + 1, jnp.where(done, p, p_next), jnp.where(done, p_prev, p), done
-
-    t0 = jnp.int32(0)
-    done0 = jnp.asarray(False)
-    p0 = start_prices.astype(jnp.float32)
-    rounds, prices, p_prev, converged = jax.lax.while_loop(
-        cond2, body2, (t0, p0, p0, done0)
+    rounds, prices = _run_clock(
+        excess, start_prices, config, problem.base_cost, problem.supply_scale
     )
-
-    if config.refine_rounds > 0:
-        # λ-bisection on the final segment: λ=1 clears (post-loop prices),
-        # λ=0 is the last infeasible point; find the smallest clearing λ.
-        delta_p = prices - p_prev
-
-        def refine(i, lohi):
-            lo, hi = lohi
-            mid = 0.5 * (lo + hi)
-            ok = jnp.all(excess(p_prev + mid * delta_p) <= tol)
-            return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
-
-        _, lam = jax.lax.fori_loop(
-            0, config.refine_rounds, refine, (jnp.float32(0.0), jnp.float32(1.0))
-        )
-        prices = p_prev + lam * delta_p
+    tol = jnp.float32(config.tol)
 
     if is_sparse:
         z, chosen, active = demand(prices)
-        bsel = jnp.maximum(chosen, 0)
-        alloc_idx = jnp.take_along_axis(idx, bsel[:, None, None], axis=1)[:, 0, :]
-        alloc_val = jnp.take_along_axis(val, bsel[:, None, None], axis=1)[:, 0, :]
-        alloc_val = alloc_val.astype(jnp.float32) * active[:, None]
-        if getattr(demand_fn, "exact_settlement", False):
-            # Rebuild the dense (U, B, R) tensor and settle through the
-            # verbatim dense expressions (bundle gather fused into the
-            # matvec), so payments — and the γ statistics derived from them —
-            # stay bit-identical to the dense path.  O(U·B·R) once per
-            # auction; planet-scale settlement uses the sparse fold below.
-            nu, nb, k = problem.idx.shape
-            rows = jnp.repeat(jnp.arange(nu), nb * k)
-            cols = jnp.tile(jnp.repeat(jnp.arange(nb), k), nu)
-            bundles_dense = (
-                jnp.zeros((nu, nb, problem.num_resources), jnp.float32)
-                .at[rows, cols, idx.reshape(-1)]
-                .add(val.reshape(-1).astype(jnp.float32))
-            )
-            sel = jnp.take_along_axis(
-                bundles_dense, jnp.maximum(chosen, 0)[:, None, None], axis=1
-            )[:, 0, :]
-            payments = (sel * active[:, None].astype(jnp.float32)) @ prices
-        else:
-            payments = jnp.sum(alloc_val * prices[alloc_idx], axis=-1)
+        alloc_idx, alloc_val, payments = _sparse_settle(
+            idx, val, prices, chosen, active, problem.num_resources,
+            exact=bool(getattr(demand_fn, "exact_settlement", False)),
+        )
         return SparseAuctionResult(
             prices=prices,
             alloc_idx=alloc_idx,
@@ -349,6 +507,186 @@ def clock_auction(
         excess_demand=z,
         rounds=rounds,
         converged=jnp.all(z <= tol),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device settlement: the clock sharded over users
+# ---------------------------------------------------------------------------
+
+
+def users_mesh(num_devices: int | None = None, axis_name: str = "users") -> Mesh:
+    """1-D mesh over the first ``num_devices`` local devices (default: all).
+
+    Simulate multi-host settlement on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"num_devices={n} not in [1, {len(devices)}]")
+    return Mesh(np.asarray(devices[:n]), (axis_name,))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("config", "demand_fn", "mesh", "axis_name", "num_blocks"),
+)
+def _sharded_clock_impl(
+    problem: SparseAuctionProblem,
+    start_prices: jax.Array,
+    config: ClockConfig,
+    demand_fn: DemandFn,
+    mesh: Mesh,
+    axis_name: str,
+    num_blocks: int,
+):
+    ndev = mesh.shape[axis_name]
+    num_users = problem.num_users
+    num_res = problem.num_resources
+    pi = problem.pi
+    if config.break_ties:
+        pi = _apply_tie_jitter(pi, config)  # global user index — pre-padding
+
+    # Pad users to a multiple of num_blocks (hence of ndev): padded rows
+    # never activate and contribute exact zeros.
+    padded = pad_users(dataclasses.replace(problem, pi=pi), num_blocks)
+    idx, val, mask, pi = padded.idx, padded.val, padded.bundle_mask, padded.pi
+
+    partials_fn = getattr(demand_fn, "partials_fn", None)
+    exact = bool(getattr(demand_fn, "exact_settlement", False))
+    tol = jnp.float32(config.tol)
+
+    def shard_body(idx, val, mask, pi, p0, c, s):
+        def demand(prices):
+            if partials_fn is not None:
+                partials, chosen, active = partials_fn(
+                    idx, val, mask, pi, prices, num_res, num_blocks // ndev
+                )
+            else:
+                z_local, chosen, active = demand_fn(
+                    idx, val, mask, pi, prices, num_res
+                )
+                partials = z_local[None]
+            # Deterministic psum: gather every shard's block partials and run
+            # the same fixed left-fold the unsharded blocked proxy runs.
+            gathered = jax.lax.all_gather(partials, axis_name, tiled=True)
+            return _chain_sum(gathered), chosen, active
+
+        def excess(prices):
+            z, _, _ = demand(prices)
+            return z
+
+        rounds, prices = _run_clock(excess, p0, config, c, s)
+        z, chosen, active = demand(prices)
+        alloc_idx, alloc_val, payments = _sparse_settle(
+            idx, val, prices, chosen, active, num_res, exact=exact
+        )
+        return (
+            prices,
+            alloc_idx,
+            alloc_val,
+            chosen,
+            active,
+            payments,
+            z,
+            rounds,
+            jnp.all(z <= tol),
+        )
+
+    ax = axis_name
+    sharded = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(P(ax), P(ax), P(ax), P(ax), P(), P(), P()),
+        out_specs=(P(), P(ax), P(ax), P(ax), P(ax), P(ax), P(), P(), P()),
+        check_vma=False,  # prices/z are replicated by construction (all_gather)
+    )
+    prices, alloc_idx, alloc_val, chosen, active, payments, z, rounds, conv = sharded(
+        idx,
+        val,
+        mask,
+        pi,
+        start_prices.astype(jnp.float32),
+        problem.base_cost,
+        problem.supply_scale,
+    )
+    return SparseAuctionResult(
+        prices=prices,
+        alloc_idx=alloc_idx[:num_users],
+        alloc_val=alloc_val[:num_users],
+        chosen_bundle=chosen[:num_users],
+        won=active[:num_users],
+        payments=payments[:num_users],
+        excess_demand=z,
+        rounds=rounds,
+        converged=conv,
+    )
+
+
+def sharded_clock_auction(
+    problem: SparseAuctionProblem,
+    start_prices: jax.Array,
+    config: ClockConfig = ClockConfig(),
+    demand_fn: DemandFn | None = None,
+    mesh: Mesh | None = None,
+    axis_name: str = "users",
+    num_blocks: int = 8,
+) -> SparseAuctionResult:
+    """Run Algorithm 1 with bidders sharded over a device mesh.
+
+    The ``SparseAuctionProblem`` (idx/val/mask/π) is padded to a multiple of
+    ``num_blocks`` users and split over the mesh's ``axis_name`` axis; each
+    device evaluates demand for its shard with the same sparse kernels the
+    single-device path uses, and z is reduced across shards *inside* the
+    ``lax.while_loop`` — the whole multi-round clock is one XLA program per
+    device, no host round-trips.
+
+    With the default demand fn (:func:`sparse_proxy_demand_blocked`) the
+    cross-shard reduction is an all_gather of per-block partials followed by
+    a fixed left-fold, which makes prices/allocations/payments bit-identical
+    to ``clock_auction(problem, ..., demand_fn=sparse_proxy_demand_blocked)``
+    on one device, for every device count dividing ``num_blocks``.  Other
+    sparse demand fns (e.g. the Pallas kernel adapters from
+    ``kernels.ops.sparse_bid_demand_fn``) contribute one partial per shard
+    and agree across device counts to normal float tolerance.
+
+    ``mesh=None`` shards over all local devices (``users_mesh()``).
+    """
+    if not isinstance(problem, SparseAuctionProblem):
+        raise TypeError(
+            "sharded_clock_auction needs a SparseAuctionProblem — dense "
+            "(U, B, R) bundles would shard U·B·R bytes per round; sparsify() "
+            "first"
+        )
+    if mesh is None:
+        mesh = users_mesh(axis_name=axis_name)
+    if axis_name not in mesh.shape:
+        raise ValueError(f"mesh {mesh} has no axis {axis_name!r}")
+    ndev = mesh.shape[axis_name]
+    if num_blocks < 1:
+        raise ValueError(f"num_blocks={num_blocks} must be >= 1")
+    if demand_fn is None:
+        demand_fn = blocked_demand_fn(num_blocks)
+    if not getattr(demand_fn, "sparse_signature", False):
+        raise TypeError(f"demand_fn {demand_fn} is not a sparse demand fn")
+    fn_blocks = getattr(demand_fn, "num_blocks", None)
+    if fn_blocks is not None and fn_blocks != num_blocks:
+        raise ValueError(
+            f"demand_fn folds z over {fn_blocks} user blocks but "
+            f"num_blocks={num_blocks} was requested — the sharded fold would "
+            "silently diverge from the fn's own single-device fold; pass "
+            f"num_blocks={fn_blocks} (or demand_fn=blocked_demand_fn("
+            f"{num_blocks}))"
+        )
+    if num_blocks % ndev:
+        raise ValueError(
+            f"device count {ndev} must divide num_blocks={num_blocks} so each "
+            "shard holds whole user blocks (that is what keeps settlement "
+            "bit-identical across device counts)"
+        )
+    return _sharded_clock_impl(
+        problem, start_prices, config, demand_fn, mesh, axis_name, num_blocks
     )
 
 

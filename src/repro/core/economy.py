@@ -19,17 +19,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .auction import (
     ClockConfig,
+    blocked_demand_fn,
     clock_auction,
-    sparse_proxy_demand_exact,
+    sharded_clock_auction,
     surplus_and_trade,
+    users_mesh,
     verify_system,
 )
-from .reserve import DEFAULT_WEIGHTING, WeightingFn
+from .reserve import DEFAULT_WEIGHTING, WeightingFn, reserve_prices
 from .types import ResourcePool, pack_bids_sparse
 
 
@@ -89,7 +92,8 @@ class Economy:
         weighting: WeightingFn = DEFAULT_WEIGHTING,
         clock: ClockConfig = ClockConfig(),
         seed: int = 0,
-        operator_lots: int = 8,
+        settle_mesh=None,
+        settle_blocks: int = 8,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -99,7 +103,12 @@ class Economy:
         self.weighting = weighting
         self.clock = clock
         self.rng = np.random.default_rng(seed)
-        self.operator_lots = operator_lots
+        # Multi-device settlement: shard the clock over users on this mesh
+        # (None → auto: all local devices whenever there are several and the
+        # count divides settle_blocks).  Settlement is bit-identical across
+        # device counts dividing settle_blocks — see sparse_proxy_demand_blocked.
+        self.settle_mesh = settle_mesh
+        self.settle_blocks = settle_blocks
         self.C, self.T = self.capacity.shape
         self.R = self.C * self.T
         # usage[c, t]: units currently held by placed agents
@@ -146,17 +155,28 @@ class Economy:
         """Provisional settlement prices for the *current* bid book — the
         market front end shows these during the bid-collection window so
         teams can react before the final, binding run."""
-        from .reserve import reserve_prices
-
-        state = self.rng.bit_generator.state  # don't consume epoch randomness
-        stats = self.run_epoch(dry_run=True)
-        self.rng.bit_generator.state = state
-        return stats.prices
+        return self.run_epoch(dry_run=True).prices
 
     # -- one auction epoch ---------------------------------------------------
     def run_epoch(self, dry_run: bool = False) -> EpochStats:
-        from .reserve import reserve_prices
+        """Settle one auction epoch and apply allocations.
 
+        ``dry_run=True`` settles the same bid book but is side-effect free:
+        ``usage`` / ``belief`` / agent state / ``price_history`` are never
+        touched (the dry-run branch returns before any mutation), and the RNG
+        state consumed while drawing the bid book is restored on return — so a
+        following binding ``run_epoch`` draws the identical bid book and
+        settles to bit-identical prices.
+        """
+        if dry_run:
+            rng_state = self.rng.bit_generator.state
+            try:
+                return self._settle_epoch(dry_run=True)
+            finally:
+                self.rng.bit_generator.state = rng_state
+        return self._settle_epoch(dry_run=False)
+
+    def _settle_epoch(self, dry_run: bool) -> EpochStats:
         pools = self.pools()
         psi_flat = np.array([p.utilization for p in pools])
         tilde_p = reserve_prices(pools, self.weighting)
@@ -173,20 +193,24 @@ class Economy:
         pi_rows: list[np.ndarray] = []  # per-bundle π (vector-π extension)
         kinds: list[tuple] = []  # (agent_idx, "buy"/"sell"/"op", cluster list)
 
-        # (a) operator sells spare capacity in lots at reserve: one nonzero
-        # per lot bundle.  π stays in the scalar dtype chain (python float ×
-        # tilde_p element) — operator sellers are exactly marginal at the
-        # reserve price, so a 1-ulp π change flips them in or out.
+        # (a) operator sells spare capacity at reserve — ONE quantity-collapsed
+        # row per pool.  The old packing split supply into 8 identical lot
+        # rows; but the seller proxy's stay-in rule (qᵀp ≤ π ⇔ p_r ≥ reserve)
+        # is scale-invariant, so 8 lots always flipped in or out together and
+        # only inflated U (8·R extra rows sharded and re-reduced every clock
+        # round).  Folding the full supply into the row's quantity keeps z,
+        # payments, and surplus totals identical while shrinking per-shard U
+        # before sharding even starts.  π stays in the scalar dtype chain
+        # (python float × tilde_p element) — operator sellers are exactly
+        # marginal at the reserve price, so a 1-ulp π change flips them.
         for r, pool in enumerate(pools):
             if pool.supply <= 1e-9:
                 continue
-            lot = pool.supply / self.operator_lots
-            for _ in range(self.operator_lots):
-                sparse_rows.append(
-                    [(np.array([r], np.int32), np.array([-lot], np.float32))]
-                )
-                pi_rows.append(np.array([-lot * tilde_p[r]], np.float32))
-                kinds.append((-1, "op", [r // T]))
+            sparse_rows.append(
+                [(np.array([r], np.int32), np.array([-pool.supply], np.float32))]
+            )
+            pi_rows.append(np.array([-pool.supply * tilde_p[r]], np.float32))
+            kinds.append((-1, "op", [r // T]))
 
         # (b) agent buy bids (XOR across reachable clusters)
         max_b = 1
@@ -255,11 +279,27 @@ class Economy:
         problem = pack_bids_sparse(
             sparse_rows, pi_mat, base_cost=base_cost_flat, k_max=max(T, 1)
         )
-        # the exact demand variant keeps EpochStats bit-identical to the old
-        # dense settlement path (same seed ⇒ same prices/γ/migrations).
-        result = clock_auction(
-            problem, jnp.asarray(tilde_p), self.clock, demand_fn=sparse_proxy_demand_exact
-        )
+        # Settlement uses the blocked demand variant: z is a fixed left-fold
+        # over contiguous user blocks, which makes EpochStats bit-identical
+        # whether the clock runs on one device or sharded over users across
+        # any device count dividing settle_blocks.
+        mesh = self.settle_mesh
+        if (
+            mesh is None
+            and jax.device_count() > 1
+            and self.settle_blocks % jax.device_count() == 0
+        ):
+            mesh = users_mesh()  # auto-shard over all local devices
+        start = jnp.asarray(tilde_p)
+        if mesh is not None:
+            result = sharded_clock_auction(
+                problem, start, self.clock, mesh=mesh, num_blocks=self.settle_blocks
+            )
+        else:
+            result = clock_auction(
+                problem, start, self.clock,
+                demand_fn=blocked_demand_fn(self.settle_blocks),
+            )
         sys_ok = all(verify_system(problem, result).values())
         surplus, trade = surplus_and_trade(problem, result)
 

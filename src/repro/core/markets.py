@@ -1,0 +1,56 @@
+"""Synthetic market builders shared by benchmarks and tests.
+
+One generator, one distribution: the sharded-settlement bit-identity suite
+must exercise the same markets the benchmarks measure, so both import
+:func:`random_market` instead of carrying private copies of the bid
+generator.  (``benchmarks.run.auction_scaling`` keeps its original inline
+generator on purpose — its numbers form a cross-PR trajectory in
+``BENCH_settlement.json`` and changing its bid distribution would break
+comparability with already-recorded records.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import SparseAuctionProblem, pack_bids_sparse
+
+
+def random_market(
+    num_bidders: int,
+    num_resources: int,
+    *,
+    bundles_per_bidder: int = 3,
+    nnz: int = 2,
+    supply: tuple[float, float] = (20.0, 50.0),
+    ask_frac: tuple[float, float] = (0.5, 1.0),
+    pi: tuple[float, float] = (1.0, 20.0),
+    seed: int = 0,
+) -> SparseAuctionProblem:
+    """A contested buy/sell market packed straight into sparse form.
+
+    Buyers submit ``bundles_per_bidder`` XOR alternatives of ``nnz`` random
+    pools each (quantities U(0.5, 4), willingness-to-pay U(*pi*)); every pool
+    gets one operator seller offering U(*supply*) units with min acceptable
+    revenue ``-ask · supply`` for ask ∈ U(*ask_frac*) — i.e. the seller stays
+    in whenever the pool's price clears its ask fraction.  Start the clock
+    below ``ask_frac`` to make the market actually tick.
+    """
+    rng = np.random.default_rng(seed)
+    bundle_lists, pis = [], []
+    for _ in range(num_bidders):
+        alts = []
+        for _ in range(bundles_per_bidder):
+            ii = np.sort(rng.choice(num_resources, size=nnz, replace=False))
+            vv = rng.uniform(0.5, 4, size=nnz).astype(np.float32)
+            alts.append((ii.astype(np.int32), vv))
+        bundle_lists.append(alts)
+        pis.append(float(rng.uniform(*pi)))
+    for r in range(num_resources):
+        units = float(rng.uniform(*supply))
+        bundle_lists.append(
+            [(np.array([r], np.int32), np.array([-units], np.float32))]
+        )
+        pis.append(float(-rng.uniform(*ask_frac) * units))
+    return pack_bids_sparse(
+        bundle_lists, pis, base_cost=np.ones(num_resources, np.float32)
+    )

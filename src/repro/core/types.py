@@ -296,6 +296,27 @@ def pack_bids_sparse(
     )
 
 
+def pad_users(problem: SparseAuctionProblem, multiple: int) -> SparseAuctionProblem:
+    """Zero-pad the user dimension up to a multiple of ``multiple``.
+
+    Padded rows carry ``bundle_mask=False``, so their proxies never activate
+    and they contribute exact zeros everywhere — settlement results on the
+    first ``num_users`` rows are unchanged.  Pure ``jnp`` (traceable), which
+    is how ``sharded_clock_auction`` evens out the users axis before
+    splitting it over a device mesh.
+    """
+    pad = -problem.num_users % multiple
+    if pad == 0:
+        return problem
+    return dataclasses.replace(
+        problem,
+        idx=jnp.pad(problem.idx, ((0, pad), (0, 0), (0, 0))),
+        val=jnp.pad(problem.val, ((0, pad), (0, 0), (0, 0))),
+        bundle_mask=jnp.pad(problem.bundle_mask, ((0, pad), (0, 0))),
+        pi=jnp.pad(problem.pi, ((0, pad),) + ((0, 0),) * (problem.pi.ndim - 1)),
+    )
+
+
 def sparsify(problem: AuctionProblem, k_max: int | None = None) -> SparseAuctionProblem:
     """Dense → sparse conversion (host-side, vectorized).
 

@@ -118,6 +118,33 @@ def sparse_bid_demand_fn(backend: Backend | None = None):
     return demand
 
 
+def settlement_demand_fn(backend: Backend | None = None, exact: bool = True):
+    """Demand fn for ``clock_auction`` / ``sharded_clock_auction`` settlement.
+
+    ``exact=True`` returns the blocked settlement proxy
+    (``core.auction.sparse_proxy_demand_blocked``): selection is the same
+    O(U·B·K) evaluation, and z is a fixed block-fold that is bit-identical
+    across device counts — this is what ``Economy.run_epoch`` settles with.
+    It is pure jnp (no kernel-backed blocked fold exists), so requesting a
+    backend with it is an error rather than a silent reroute.
+    ``exact=False`` returns the kernel adapter on the requested backend
+    (Pallas on TPU): the O(nnz) scatter z is the fast planet-scale path,
+    reproducible per device count but only float-close across different
+    ones.
+    """
+    if exact:
+        if backend is not None:
+            raise ValueError(
+                f"backend={backend!r} has no effect on the exact blocked "
+                "proxy (pure jnp); pass exact=False for the kernel path or "
+                "drop the backend argument"
+            )
+        from ..core.auction import sparse_proxy_demand_blocked
+
+        return sparse_proxy_demand_blocked
+    return sparse_bid_demand_fn(backend)
+
+
 def wkv6(r, k, v, w, u, state=None, chunk: int = 32, backend: Backend | None = None):
     """Chunked RWKV-6 recurrence.  See kernels.ref.wkv6 for semantics."""
     backend = backend or default_backend()

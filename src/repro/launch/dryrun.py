@@ -155,6 +155,8 @@ def _compile_cell(cfg, shape: ShapeSpec, mesh, rules):
 def _costs(compiled) -> tuple[float, float, float, dict]:
     """(flops, bytes, collective wire bytes, breakdown) — per-device module."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per module
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
     return (

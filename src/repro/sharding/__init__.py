@@ -1,3 +1,4 @@
+from .compat import shard_map
 from .specs import (
     ACT_RULES,
     replicate,
@@ -23,5 +24,6 @@ __all__ = [
     "set_act_rules",
     "set_mesh",
     "shard",
+    "shard_map",
     "use_mesh",
 ]

@@ -1,0 +1,76 @@
+"""Version-compatible ``shard_map``.
+
+jax has moved (and re-keyed) ``shard_map`` across releases:
+
+* older releases ship it as ``jax.experimental.shard_map.shard_map`` with a
+  ``check_rep`` flag (static replication checking);
+* newer releases promote it to top-level ``jax.shard_map`` and rename the
+  flag ``check_vma`` (varying-manual-axes checking).
+
+The pinned jax in this repo has *no* top-level ``jax.shard_map``, so any bare
+``jax.shard_map(...)`` call dies with ``AttributeError`` before tracing even
+starts — which is exactly how the pipeline-parallel tests broke at the seed.
+Every shard_map call site in this repo goes through this wrapper instead; it
+resolves the implementation once at import time and accepts either spelling
+of the check flag.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+_impl = getattr(jax, "shard_map", None)
+if _impl is None:  # pre-promotion jax: the experimental module is the impl
+    from jax.experimental.shard_map import shard_map as _impl
+
+_PARAMS = frozenset(inspect.signature(_impl).parameters)
+if "check_vma" in _PARAMS:
+    _CHECK_KW = "check_vma"
+elif "check_rep" in _PARAMS:
+    _CHECK_KW = "check_rep"
+else:  # pragma: no cover - future jax that dropped the flag entirely
+    _CHECK_KW = None
+
+
+def shard_map(
+    f: Callable,
+    mesh: Any = None,
+    in_specs: Any = None,
+    out_specs: Any = None,
+    *,
+    check_vma: bool | None = None,
+    check_rep: bool | None = None,
+    **kwargs: Any,
+):
+    """Map ``f`` over shards of data — portable across jax shard_map homes.
+
+    ``check_vma`` and ``check_rep`` are aliases for the same knob; pass
+    whichever your call site was written against and it is translated to the
+    keyword the installed jax understands (or dropped if that jax has
+    neither).  Remaining ``kwargs`` (e.g. ``auto``) are forwarded verbatim
+    when supported and rejected loudly when not, so a silent behavior change
+    can't hide behind the version shim.
+    """
+    if check_vma is not None and check_rep is not None and check_vma != check_rep:
+        raise ValueError(
+            f"conflicting check flags: check_vma={check_vma} check_rep={check_rep}"
+        )
+    check = check_vma if check_vma is not None else check_rep
+    kw = dict(kwargs)
+    if mesh is not None:
+        kw["mesh"] = mesh
+    if in_specs is not None:
+        kw["in_specs"] = in_specs
+    if out_specs is not None:
+        kw["out_specs"] = out_specs
+    if check is not None and _CHECK_KW is not None:
+        kw[_CHECK_KW] = check
+    unknown = sorted(set(kw) - _PARAMS)
+    if unknown:
+        raise TypeError(
+            f"shard_map compat: argument(s) {unknown} not supported by the "
+            f"installed jax (accepts {sorted(_PARAMS - {'f'})})"
+        )
+    return _impl(f, **kw)

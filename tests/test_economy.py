@@ -67,3 +67,47 @@ def test_preview_prices_is_side_effect_free():
     s2 = eco2.run_epoch()
     np.testing.assert_allclose(s1.prices, s2.prices, rtol=1e-6)
     assert np.isfinite(_).all()
+
+
+def test_preview_restores_rng_state():
+    eco = make_fleet_economy(seed=5)
+    state0 = eco.rng.bit_generator.state
+    eco.preview_prices()
+    assert eco.rng.bit_generator.state == state0
+
+
+def test_dry_run_mutates_nothing():
+    """dry_run=True must leave usage/belief/agent state/history untouched."""
+    eco = make_fleet_economy(seed=9)
+    usage0, belief0 = eco.usage.copy(), eco.belief.copy()
+    agents0 = [(a.placed, a.home, a.epoch) for a in eco.agents]
+    n_hist0 = len(eco.price_history)
+    stats = eco.run_epoch(dry_run=True)
+    assert np.array_equal(eco.usage, usage0)
+    assert np.array_equal(eco.belief, belief0)
+    assert [(a.placed, a.home, a.epoch) for a in eco.agents] == agents0
+    assert len(eco.price_history) == n_hist0
+    assert np.isfinite(stats.prices).all()
+
+
+def test_run_after_preview_bit_identical():
+    """A binding epoch after a preview must equal one without any preview —
+    bit for bit, not just within tolerance."""
+    eco_a = make_fleet_economy(seed=21)
+    eco_b = make_fleet_economy(seed=21)
+    eco_a.preview_prices()
+    sa, sb = eco_a.run_epoch(), eco_b.run_epoch()
+    np.testing.assert_array_equal(sa.prices, sb.prices)
+    np.testing.assert_array_equal(sa.reserve, sb.reserve)
+    assert sa.migrations == sb.migrations
+    assert sa.rounds == sb.rounds
+
+
+def test_preview_matches_binding_prices():
+    """The dry-run settles the same bid book the binding run will draw, so
+    its prices must match the binding run's exactly."""
+    eco = make_fleet_economy(seed=13)
+    preview = eco.preview_prices()
+    stats = eco.run_epoch()
+    np.testing.assert_array_equal(preview, stats.prices)
+    assert bool(stats.converged)
