@@ -209,6 +209,67 @@ def auction_scaling_sharded():
     return dt * 1e6, round(rounds / dt, 0)
 
 
+def economy_epoch():
+    """AgentPopulation epoch throughput (ROADMAP: 'millions of users'): one
+    full auction epoch — vectorized bid-book pack + sparse settle, 1 device —
+    at 10k / 100k / 1M agents, against the legacy per-agent loop (pack +
+    per-agent apply) at the sizes where the loop is still runnable.  The 1M
+    case is round-capped like auction_scaling's largest case.  Override
+    sizes with ECONOMY_EPOCH_AGENTS=10000,100000 (comma-separated).
+    us_per_call: vectorized epoch wall at the last (largest) size run.
+    derived: loop/vectorized epoch speedup at the largest loop-compared
+    size (null when every size is beyond the loop baseline's cap)."""
+    import time as _time
+
+    from repro.core import fleet_economy
+    from repro.core.auction import ClockConfig
+
+    sizes = [10_000, 100_000, 1_000_000]
+    env_sizes = os.environ.get("ECONOMY_EPOCH_AGENTS")
+    if env_sizes:
+        sizes = [int(s) for s in env_sizes.split(",") if s]
+    # coarse ticks, round-capped: big markets are an operator-knob question,
+    # and the benchmark measures epoch machinery, not clock patience
+    cfg = ClockConfig(max_rounds=40, alpha=0.6, delta=0.25)
+    loop_max = 100_000  # beyond this the per-agent loop is pointless to wait on
+
+    fleet_economy(512, seed=0, clock=cfg).run_epoch()  # warm jax/numpy init
+    # derived stays None (JSON null, not NaN — NaN is not strict JSON) when
+    # no size is small enough for the loop baseline to run
+    speedup = None
+    us_vec_largest = float("nan")
+    for n in sizes:
+        eco = fleet_economy(n, seed=0, clock=cfg)
+        t0 = _time.perf_counter()
+        book = eco.pack_bid_book()
+        t_pack = _time.perf_counter() - t0
+        # fresh economy so the epoch draws the same book (jit warm from here on)
+        eco = fleet_economy(n, seed=0, clock=cfg)
+        eco.run_epoch()  # compile
+        best_vec = np.inf
+        for _ in range(2):
+            eco_v = fleet_economy(n, seed=0, clock=cfg)
+            t0 = _time.perf_counter()
+            s_v = eco_v.run_epoch()
+            best_vec = min(best_vec, _time.perf_counter() - t0)
+        line = (f"#   {n} agents: pack {t_pack*1e3:.0f} ms, epoch "
+                f"{best_vec*1e3:.0f} ms ({int(s_v.rounds)} rounds, "
+                f"converged={bool(s_v.converged)}, U={book.num_rows})")
+        if n <= loop_max:
+            eco_l = fleet_economy(n, seed=0, clock=cfg, packer="loop")
+            t0 = _time.perf_counter()
+            s_l = eco_l.run_epoch()
+            t_loop = _time.perf_counter() - t0
+            assert (np.asarray(s_l.prices) == np.asarray(s_v.prices)).all(), (
+                "loop and vectorized epochs diverged"
+            )
+            line += f", legacy loop {t_loop*1e3:.0f} ms ({t_loop/best_vec:.1f}x)"
+            speedup = round(t_loop / best_vec, 1)
+        us_vec_largest = best_vec * 1e6  # last (largest) size wins
+        print(line, file=sys.stderr)
+    return us_vec_largest, speedup
+
+
 def bid_eval_round():
     """Settlement hot loop: one proxy-evaluation round at 100k bids × 1k
     pools (jnp path on CPU; the Pallas kernel is the TPU-fused twin).
@@ -305,6 +366,7 @@ BENCHES = {
     "fig7_utilization": fig7_utilization,
     "auction_scaling": auction_scaling,
     "auction_scaling_sharded": auction_scaling_sharded,
+    "economy_epoch": economy_epoch,
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
     "roofline_summary": roofline_summary,

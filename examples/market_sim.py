@@ -4,23 +4,57 @@ costs.  Prints Table-I-style premium statistics, Fig-6-style price ratios,
 and Fig-7-style utilization percentiles of settled trades.
 
     PYTHONPATH=src python examples/market_sim.py [--epochs 6] [--seed 3]
+
+Or run a library scenario (outages, flash crowds, price shocks, ...):
+
+    PYTHONPATH=src python examples/market_sim.py --scenario cluster_drain
+    PYTHONPATH=src python examples/market_sim.py --list-scenarios
 """
 import argparse
 
 import numpy as np
 
 from repro.core.economy import make_fleet_economy
+from repro.core.scenarios import SCENARIOS, run_scenario
+
+
+def run_scenario_mode(args) -> None:
+    eco, sc = SCENARIOS[args.scenario](seed=args.seed, epochs=args.epochs)
+    print(f"scenario: {sc.name} — {sc.description}")
+    print(f"fleet: {len(eco.clusters)} clusters × {eco.rtypes}, "
+          f"{len(eco.pop)} engineering teams")
+    res = run_scenario(eco, sc, verbose=True)
+    print("\n== outcome ==")
+    print(f"events applied: {len(res.events)}")
+    print(f"utilization spread trajectory: "
+          f"{[round(s, 3) for s in res.util_spread]}")
+    print(f"spread shrank: {res.spread_shrank}")
+    print(f"total migrations: {res.total_migrations}")
+    print(f"all epochs converged: {res.converged}")
+    print(f"all epochs SYSTEM-feasible: {res.feasible}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="run a library scenario instead of the plain §V sim")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        for name in sorted(SCENARIOS):
+            _, sc = SCENARIOS[name](seed=0)
+            print(f"{name:20s} {sc.description}")
+        return
+    if args.scenario:
+        run_scenario_mode(args)
+        return
 
     eco = make_fleet_economy(seed=args.seed)
     print(f"fleet: {len(eco.clusters)} clusters × {eco.rtypes}, "
-          f"{len(eco.agents)} engineering teams")
+          f"{len(eco.pop)} engineering teams")
     print(f"pre-market utilization by cluster: "
           f"{(eco.utilization().mean(axis=1) * 100).round(0).tolist()}")
 
@@ -52,6 +86,7 @@ def main():
           f"{(eco.utilization().mean(axis=1) * 100).round(0).tolist()}")
     print(f"utilization spread (std across clusters): "
           f"{np.std(eco.utilization().mean(axis=1)):.3f}")
+    print(f"total migrations: {sum(s.migrations for s in stats)}")
     print(f"all epochs SYSTEM-feasible: {all(s.system_ok for s in stats)}")
 
 

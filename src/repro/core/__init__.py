@@ -21,6 +21,8 @@ from .types import (
     pack_bids,
     pack_bids_sparse,
     pad_users,
+    sparse_problem_from_arrays,
+    sparse_supply_scale,
     sparsify,
 )
 from .reserve import (
@@ -47,7 +49,27 @@ from .auction import (
     verify_system,
 )
 from .bidlang import All, BundleExplosion, OneOf, Res, flatten, pool_index
-from .markets import random_market
+from .economy import (
+    Agent,
+    AgentPopulation,
+    Economy,
+    EpochStats,
+    believed_bundle_costs,
+    make_fleet_economy,
+)
+from .markets import fleet_economy, fleet_population, random_market
+from .scenarios import (
+    Arrivals,
+    BaseCostChange,
+    CapacityShock,
+    Departures,
+    FlashCrowd,
+    SCENARIOS,
+    Scenario,
+    ScenarioResult,
+    WeightingSwap,
+    run_scenario,
+)
 
 __all__ = [
     "AuctionProblem",
@@ -87,4 +109,24 @@ __all__ = [
     "flatten",
     "pool_index",
     "random_market",
+    "sparse_problem_from_arrays",
+    "sparse_supply_scale",
+    "Agent",
+    "AgentPopulation",
+    "Economy",
+    "EpochStats",
+    "believed_bundle_costs",
+    "make_fleet_economy",
+    "fleet_economy",
+    "fleet_population",
+    "Arrivals",
+    "BaseCostChange",
+    "CapacityShock",
+    "Departures",
+    "FlashCrowd",
+    "SCENARIOS",
+    "Scenario",
+    "ScenarioResult",
+    "WeightingSwap",
+    "run_scenario",
 ]

@@ -155,9 +155,28 @@ def sparse_proxy_demand(
 sparse_proxy_demand.sparse_signature = True  # type: ignore[attr-defined]
 
 
+# Below this resource count _user_rows trades the scatter for K one-hot
+# compare-and-add passes: bit-identical output (adding an exact 0.0 between
+# matching terms is a float no-op, so every (u, r) cell accumulates the same
+# nonzero values in the same k order), but vectorizable where CPU/TPU
+# scatter serializes.  Economy books (R = clusters × rtypes, tens of pools)
+# live far below it; kilopools markets keep the O(U·K) scatter.
+_ONEHOT_ROWS_MAX_R = 128
+
+
 def _user_rows(sel_idx: jax.Array, sel_val: jax.Array, num_resources: int) -> jax.Array:
     """(U, R) demand rows from the selected bundles (duplicate idx sum)."""
     num_users, k = sel_idx.shape
+    if num_resources <= _ONEHOT_ROWS_MAX_R:
+        r_iota = jnp.arange(num_resources, dtype=sel_idx.dtype)[None, :]
+        x = jnp.zeros((num_users, num_resources), jnp.float32)
+        for kk in range(k):
+            x = x + jnp.where(
+                r_iota == sel_idx[:, kk, None],
+                sel_val[:, kk, None].astype(jnp.float32),
+                0.0,
+            )
+        return x
     rows = jnp.repeat(jnp.arange(num_users), k)
     return (
         jnp.zeros((num_users, num_resources), jnp.float32)
@@ -402,25 +421,18 @@ def _sparse_settle(
     alloc_val = jnp.take_along_axis(val, bsel[:, None, None], axis=1)[:, 0, :]
     alloc_val = alloc_val.astype(jnp.float32) * active[:, None]
     if exact:
-        # Rebuild the dense (U, B, R) rows and pay through the dense
-        # row·price reduction, so duplicate pool indices within a bundle
-        # settle exactly like their dense sum.  The per-user dot is an
-        # explicit last-axis reduce rather than a matvec: XLA tiles a dot's
-        # contraction by operand shape, so `x @ p` can differ by an ulp
-        # between a full problem and its shard — a fixed (row × price).sum
-        # keeps payments bit-identical for every users-axis split.  O(U·B·R)
-        # once per auction; planet-scale settlement uses the sparse fold
-        # below.
-        nu, nb, k = idx.shape
-        rows = jnp.repeat(jnp.arange(nu), nb * k)
-        cols = jnp.tile(jnp.repeat(jnp.arange(nb), k), nu)
-        bundles_dense = (
-            jnp.zeros((nu, nb, num_resources), jnp.float32)
-            .at[rows, cols, idx.reshape(-1)]
-            .add(val.reshape(-1).astype(jnp.float32))
-        )
-        sel = jnp.take_along_axis(bundles_dense, bsel[:, None, None], axis=1)[:, 0, :]
-        sel = sel * active[:, None].astype(jnp.float32)
+        # Rebuild the *chosen* bundle's dense (U, R) row and pay through the
+        # dense row·price reduction, so duplicate pool indices within a
+        # bundle settle exactly like their dense sum.  Scattering only the
+        # selected (idx, val) pair accumulates the same updates in the same
+        # k order as scattering all B alternatives and selecting after —
+        # identical rows, at O(U·R) instead of O(U·B·R).  The per-user dot
+        # is an explicit last-axis reduce rather than a matvec: XLA tiles a
+        # dot's contraction by operand shape, so `x @ p` can differ by an
+        # ulp between a full problem and its shard — a fixed (row ×
+        # price).sum keeps payments bit-identical for every users-axis
+        # split.  Planet-scale settlement uses the sparse fold below.
+        sel = _user_rows(alloc_idx, alloc_val, num_resources)
         payments = jnp.sum(sel * prices[None, :], axis=-1)
     else:
         payments = jnp.sum(alloc_val * prices[alloc_idx], axis=-1)
@@ -705,8 +717,19 @@ def verify_system(
     Accepts either encoding (sparse results are checked on their (idx, val)
     allocations directly).  Returns a dict of named booleans;
     ``all(verify_system(...).values())`` means the clock found a feasible
-    point of SYSTEM.
+    point of SYSTEM.  The array work runs as one jitted program — at
+    10⁵-user books the op-by-op eager version cost more than settlement.
     """
+    checks = _verify_system_checks(problem, result, atol)
+    return {k: bool(v) for k, v in checks.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("atol",))
+def _verify_system_checks(
+    problem: AuctionProblem | SparseAuctionProblem,
+    result: AuctionResult | SparseAuctionResult,
+    atol: float,
+) -> dict[str, jax.Array]:
     mask, pi = problem.bundle_mask, problem.pi
     p, won = result.prices, result.won
     if isinstance(problem, SparseAuctionProblem):
@@ -727,37 +750,37 @@ def verify_system(
             surplus, jnp.maximum(result.chosen_bundle, 0)[:, None], axis=1
         )[:, 0]
         checks = {
-            "c1_bundle_integrality": bool(
-                jnp.all(jnp.where(won, result.chosen_bundle >= 0, True))
+            "c1_bundle_integrality": jnp.all(
+                jnp.where(won, result.chosen_bundle >= 0, True)
             ),
-            "c2_no_excess_demand": bool(jnp.all(result.excess_demand <= atol)),
-            "c3_winners_afford": bool(jnp.all(jnp.where(won, won_sur >= -atol * scale, True))),
-            "c4_winners_best_bundle": bool(
-                jnp.all(jnp.where(won, won_sur >= best - atol * scale, True))
+            "c2_no_excess_demand": jnp.all(result.excess_demand <= atol),
+            "c3_winners_afford": jnp.all(jnp.where(won, won_sur >= -atol * scale, True)),
+            "c4_winners_best_bundle": jnp.all(
+                jnp.where(won, won_sur >= best - atol * scale, True)
             ),
-            "c5_losers_below": bool(jnp.all(jnp.where(~won, best < atol * scale, True))),
-            "c6_prices_nonneg": bool(jnp.all(p >= -atol)),
+            "c5_losers_below": jnp.all(jnp.where(~won, best < atol * scale, True)),
+            "c6_prices_nonneg": jnp.all(p >= -atol),
         }
         return checks
     checks = {
         # (1) x_u ∈ {0 ∪ Q_u}: allocation is the chosen bundle or zero.
-        "c1_bundle_integrality": bool(
-            jnp.all(jnp.where(won, result.chosen_bundle >= 0, lost_zero))
+        "c1_bundle_integrality": jnp.all(
+            jnp.where(won, result.chosen_bundle >= 0, lost_zero)
         ),
         # (2) Σ_u x_u ≤ 0 : no shortages created.
-        "c2_no_excess_demand": bool(jnp.all(result.excess_demand <= atol)),
+        "c2_no_excess_demand": jnp.all(result.excess_demand <= atol),
         # (3) π_u ≥ x_uᵀp for winners.
-        "c3_winners_afford": bool(jnp.all(jnp.where(won, pi >= pay - atol * scale, True))),
+        "c3_winners_afford": jnp.all(jnp.where(won, pi >= pay - atol * scale, True)),
         # (4) winners pay exactly their cheapest bundle's cost.
-        "c4_winners_cheapest": bool(
-            jnp.all(jnp.where(won, jnp.abs(pay - min_cost) <= atol * scale, True))
+        "c4_winners_cheapest": jnp.all(
+            jnp.where(won, jnp.abs(pay - min_cost) <= atol * scale, True)
         ),
         # (5) losers bid strictly below their cheapest bundle's cost.
-        "c5_losers_below": bool(
-            jnp.all(jnp.where(~won, pi < min_cost + atol * scale, True))
+        "c5_losers_below": jnp.all(
+            jnp.where(~won, pi < min_cost + atol * scale, True)
         ),
         # (6) p ≥ 0.
-        "c6_prices_nonneg": bool(jnp.all(p >= -atol)),
+        "c6_prices_nonneg": jnp.all(p >= -atol),
     }
     return checks
 
@@ -766,14 +789,20 @@ def surplus_and_trade(
     problem: AuctionProblem | SparseAuctionProblem,
     result: AuctionResult | SparseAuctionResult,
 ):
-    """Realized total surplus and value-of-trade (paper §III.B objectives)."""
-    pi = problem.pi
+    """Realized total surplus and value-of-trade (paper §III.B objectives).
+
+    Computed on host numpy: these are flat (U,) reductions over settlement
+    output that may live sharded across devices, and a device-side sum's
+    association would change with the device count — host reduction keeps
+    the totals bit-identical however settlement was sharded.
+    """
+    pi = np.asarray(problem.pi)
     if pi.ndim == 2:
-        pi = jnp.take_along_axis(
-            pi, jnp.maximum(result.chosen_bundle, 0)[:, None], axis=1
+        pi = np.take_along_axis(
+            pi, np.maximum(np.asarray(result.chosen_bundle), 0)[:, None], axis=1
         )[:, 0]
-    won = result.won
-    pay = result.payments
-    surplus = jnp.sum(jnp.where(won, pi - pay, 0.0))
-    value_of_trade = jnp.sum(jnp.where(won & (pay > 0), pay, 0.0))
+    won = np.asarray(result.won)
+    pay = np.asarray(result.payments)
+    surplus = np.sum(np.where(won, pi - pay, 0.0))
+    value_of_trade = np.sum(np.where(won & (pay > 0), pay, 0.0))
     return surplus, value_of_trade

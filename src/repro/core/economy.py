@@ -13,6 +13,22 @@ prices and allocations.  Reproduces the paper's reported dynamics:
 Agents are intentionally simple — belief-tracking bidders with private
 values, relocation costs, and decaying bid margins — because the paper's
 observed behaviors emerge from the *mechanism*, not from agent cleverness.
+
+The population is stored struct-of-arrays (:class:`AgentPopulation`): one
+numpy array per field, so a whole epoch's bid book — operator lots, trader
+offers, and every buyer's XOR alternatives across its reachable clusters —
+is assembled with array ops straight into ``pack_bids_sparse``'s (idx, val,
+π, mask) layout.  No per-agent Python runs on the epoch path, which is what
+lets a 10⁶-agent epoch pack in tens of milliseconds and feed the sharded
+sparse settlement unchanged.  The scalar :class:`Agent` dataclass survives
+as a thin converter (``AgentPopulation.from_agents`` / ``to_agents``) for
+construction-time ergonomics and tests.
+
+Epoch randomness is drawn once per epoch as flat arrays (one arbitrage
+uniform per agent, one (N, C) key matrix whose row-wise argsort is the reach
+permutation), so the vectorized packer and the per-agent reference packer
+(:meth:`Economy._pack_bids_loop`, kept for the parity suite) consume the
+identical stream and must produce bit-identical bid books.
 """
 from __future__ import annotations
 
@@ -33,12 +49,17 @@ from .auction import (
     verify_system,
 )
 from .reserve import DEFAULT_WEIGHTING, WeightingFn, reserve_prices
-from .types import ResourcePool, pack_bids_sparse
+from .types import ResourcePool, pack_bids_sparse, sparse_problem_from_arrays
 
 
 @dataclasses.dataclass
 class Agent:
-    """One engineering team / job in the economy."""
+    """One engineering team / job in the economy (scalar convenience view).
+
+    The economy itself stores agents as an :class:`AgentPopulation`; this
+    dataclass is the ergonomic way to describe one agent at construction
+    time and the unit ``AgentPopulation.to_agents`` converts back to.
+    """
 
     name: str
     req: np.ndarray  # (num_rtypes,) per-cluster resource requirement template
@@ -55,8 +76,152 @@ class Agent:
     placed: int = -1  # cluster currently holding its resources
     epoch: int = 0
 
-    def margin(self) -> float:
-        return self.margin0 * (self.margin_decay**self.epoch)
+
+_POP_FIELDS = (
+    "req", "value", "home", "relocation_cost", "mobility",
+    "margin0", "margin_decay", "arbitrage", "budget", "placed", "epoch",
+)
+
+
+@dataclasses.dataclass
+class AgentPopulation:
+    """Struct-of-arrays agent population — the economy's native encoding.
+
+    All per-agent state lives in parallel arrays over N agents, so bid-book
+    construction, belief-cost evaluation, and settlement application are
+    pure array programs.  Mutable state (``placed``/``home``/``epoch``) is
+    mutated in place by the economy.
+    """
+
+    req: np.ndarray  # (N, T) float64 resource requirement templates
+    value: np.ndarray  # (N,) float64 private $ value per epoch
+    home: np.ndarray  # (N,) int64 home cluster (-1 = none)
+    relocation_cost: np.ndarray  # (N,) float64
+    mobility: np.ndarray  # (N,) float64 fraction of clusters reachable
+    margin0: np.ndarray  # (N,) float64 initial bid margin
+    margin_decay: np.ndarray  # (N,) float64 per-epoch margin decay
+    arbitrage: np.ndarray  # (N,) float64 P(offer holdings | home congested)
+    budget: np.ndarray  # (N,) float64
+    placed: np.ndarray  # (N,) int64 cluster holding resources (-1 = none)
+    epoch: np.ndarray  # (N,) int64 epochs this agent has bid (drives margin)
+    names: list[str] | None = None  # optional display names
+
+    def __post_init__(self):
+        self.req = np.atleast_2d(np.asarray(self.req, np.float64))
+        n = self.req.shape[0]
+        for f in ("value", "relocation_cost", "mobility", "margin0",
+                  "margin_decay", "arbitrage", "budget"):
+            setattr(self, f, np.broadcast_to(
+                np.asarray(getattr(self, f), np.float64), (n,)).copy())
+        for f in ("home", "placed", "epoch"):
+            setattr(self, f, np.broadcast_to(
+                np.asarray(getattr(self, f), np.int64), (n,)).copy())
+        if self.names is not None and len(self.names) != n:
+            raise ValueError(f"{len(self.names)} names for {n} agents")
+
+    def __len__(self) -> int:
+        return self.req.shape[0]
+
+    @property
+    def num_rtypes(self) -> int:
+        return self.req.shape[1]
+
+    @classmethod
+    def from_agents(cls, agents: Sequence[Agent]) -> "AgentPopulation":
+        agents = list(agents)
+        if not agents:
+            raise ValueError("empty agent list — pass AgentPopulation.empty()")
+        return cls(
+            req=np.stack([np.asarray(a.req, np.float64) for a in agents]),
+            value=np.array([a.value for a in agents], np.float64),
+            home=np.array([a.home for a in agents], np.int64),
+            relocation_cost=np.array(
+                [a.relocation_cost for a in agents], np.float64),
+            mobility=np.array([a.mobility for a in agents], np.float64),
+            margin0=np.array([a.margin0 for a in agents], np.float64),
+            margin_decay=np.array([a.margin_decay for a in agents], np.float64),
+            arbitrage=np.array([a.arbitrage for a in agents], np.float64),
+            budget=np.array([a.budget for a in agents], np.float64),
+            placed=np.array([a.placed for a in agents], np.int64),
+            epoch=np.array([a.epoch for a in agents], np.int64),
+            names=[a.name for a in agents],
+        )
+
+    @classmethod
+    def empty(cls, num_rtypes: int) -> "AgentPopulation":
+        z = np.zeros((0,))
+        return cls(
+            req=np.zeros((0, num_rtypes)), value=z, home=z, relocation_cost=z,
+            mobility=z, margin0=z, margin_decay=z, arbitrage=z, budget=z,
+            placed=z, epoch=z, names=[],
+        )
+
+    def to_agents(self) -> list[Agent]:
+        """Materialize scalar Agent views (legacy API; O(N) Python)."""
+        names = self.names or [f"job-{i}" for i in range(len(self))]
+        return [
+            Agent(
+                name=names[i],
+                req=self.req[i].copy(),
+                value=float(self.value[i]),
+                home=int(self.home[i]),
+                relocation_cost=float(self.relocation_cost[i]),
+                mobility=float(self.mobility[i]),
+                margin0=float(self.margin0[i]),
+                margin_decay=float(self.margin_decay[i]),
+                arbitrage=float(self.arbitrage[i]),
+                budget=float(self.budget[i]),
+                placed=int(self.placed[i]),
+                epoch=int(self.epoch[i]),
+            )
+            for i in range(len(self))
+        ]
+
+    def margins(self) -> np.ndarray:
+        """(N,) current bid margin: margin0 · decay^epoch (vectorized)."""
+        return self.margin0 * self.margin_decay ** self.epoch
+
+    def select(self, keep: np.ndarray) -> "AgentPopulation":
+        """Sub-population at a boolean mask or index array (copies)."""
+        keep = np.asarray(keep)
+        idx = np.flatnonzero(keep) if keep.dtype == bool else keep
+        names = [self.names[i] for i in idx] if self.names is not None else None
+        kw = {f: getattr(self, f)[idx].copy() for f in _POP_FIELDS}
+        return AgentPopulation(names=names, **kw)
+
+    def concat(self, other: "AgentPopulation") -> "AgentPopulation":
+        """This population followed by ``other`` (copies)."""
+        if other.num_rtypes != self.num_rtypes:
+            raise ValueError(
+                f"cannot concat {other.num_rtypes}-rtype agents onto "
+                f"{self.num_rtypes}-rtype population"
+            )
+        names = None
+        if self.names is not None or other.names is not None:
+            names = (list(self.names or [f"job-{i}" for i in range(len(self))])
+                     + list(other.names or
+                            [f"new-{i}" for i in range(len(other))]))
+        kw = {
+            f: np.concatenate([getattr(self, f), getattr(other, f)])
+            for f in _POP_FIELDS
+        }
+        return AgentPopulation(names=names, **kw)
+
+
+def believed_bundle_costs(req: np.ndarray, belief: np.ndarray) -> np.ndarray:
+    """(N, C) believed $ cost of each agent's bundle in each cluster.
+
+    ``believed[n, c] = Σ_t req[n, t] · belief[c·T + t]`` accumulated in t
+    order (float64) — the single belief-cost helper both the trader path
+    (expected revenue at the home cluster) and the buy path (bid cap per
+    reachable cluster) price through.
+    """
+    req = np.asarray(req, np.float64)
+    b = np.asarray(belief, np.float64).reshape(-1, req.shape[1])  # (C, T)
+    out = np.zeros((req.shape[0], b.shape[0]), np.float64)
+    for t in range(req.shape[1]):
+        out += req[:, t, None] * b[None, :, t]
+    return out
 
 
 @dataclasses.dataclass
@@ -79,6 +244,31 @@ class EpochStats:
     system_ok: bool
 
 
+# row kinds in a packed bid book
+KIND_OP, KIND_SELL, KIND_BUY = 0, 1, 2
+
+
+@dataclasses.dataclass
+class BidBook:
+    """One epoch's packed bid book plus the row metadata settlement needs.
+
+    ``problem`` is the device-ready sparse encoding; the numpy side arrays
+    map auction rows back to agents so allocations can be applied without
+    re-deriving who bid what.
+    """
+
+    problem: object  # SparseAuctionProblem
+    pi_mat: np.ndarray  # (U, B) float32, −inf padded (host copy for stats)
+    row_kind: np.ndarray  # (U,) int8 ∈ {KIND_OP, KIND_SELL, KIND_BUY}
+    row_agent: np.ndarray  # (U,) int64 agent index (−1 for operator rows)
+    sell_cluster: np.ndarray  # (U,) int64 offered cluster (−1 elsewhere)
+    bundle_cluster: np.ndarray  # (U, B) int64 cluster per buy bundle (−1 pad)
+
+    @property
+    def num_rows(self) -> int:
+        return self.row_kind.shape[0]
+
+
 class Economy:
     """Periodic clock-auction economy over clusters × resource types."""
 
@@ -88,21 +278,28 @@ class Economy:
         rtypes: Sequence[str],
         capacity: np.ndarray,  # (num_clusters, num_rtypes)
         base_cost: np.ndarray,  # (num_rtypes,) former fixed $ per unit
-        agents: Sequence[Agent],
+        agents: Sequence[Agent] | AgentPopulation,
         weighting: WeightingFn = DEFAULT_WEIGHTING,
         clock: ClockConfig = ClockConfig(),
         seed: int = 0,
         settle_mesh=None,
         settle_blocks: int = 8,
+        packer: str = "vectorized",
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
         self.capacity = np.asarray(capacity, dtype=np.float64)
         self.base_cost_rt = np.asarray(base_cost, dtype=np.float64)
-        self.agents = list(agents)
+        if isinstance(agents, AgentPopulation):
+            self.pop = agents
+        else:
+            self.pop = AgentPopulation.from_agents(list(agents))
         self.weighting = weighting
         self.clock = clock
         self.rng = np.random.default_rng(seed)
+        if packer not in ("vectorized", "loop"):
+            raise ValueError(f"packer must be 'vectorized' or 'loop', got {packer!r}")
+        self.packer = packer
         # Multi-device settlement: shard the clock over users on this mesh
         # (None → auto: all local devices whenever there are several and the
         # count divides settle_blocks).  Settlement is bit-identical across
@@ -110,16 +307,45 @@ class Economy:
         self.settle_mesh = settle_mesh
         self.settle_blocks = settle_blocks
         self.C, self.T = self.capacity.shape
+        if self.pop.num_rtypes != self.T:
+            raise ValueError(
+                f"population has {self.pop.num_rtypes} rtypes, economy has {self.T}"
+            )
         self.R = self.C * self.T
         # usage[c, t]: units currently held by placed agents
         self.usage = np.zeros_like(self.capacity)
-        for a in self.agents:
-            if a.placed >= 0:
-                self.usage[a.placed] += a.req
+        held = self.pop.placed >= 0
+        np.add.at(self.usage, self.pop.placed[held], self.pop.req[held])
         self.usage = np.minimum(self.usage, self.capacity)
         # every agent's price belief starts at the former fixed prices
         self.belief = np.tile(self.base_cost_rt, self.C)  # (R,)
         self.price_history: list[np.ndarray] = []
+
+    # -- population bookkeeping ----------------------------------------------
+    @property
+    def agents(self) -> list[Agent]:
+        """Scalar Agent views of the population (read-only convenience —
+        mutations to the returned objects do NOT write back)."""
+        return self.pop.to_agents()
+
+    def add_agents(self, newcomers: AgentPopulation) -> int:
+        """Append arriving agents; placed arrivals claim usage immediately."""
+        self.pop = self.pop.concat(newcomers)
+        held = newcomers.placed >= 0
+        np.add.at(self.usage, newcomers.placed[held], newcomers.req[held])
+        self.usage = np.minimum(self.usage, self.capacity)
+        return int(len(newcomers))
+
+    def remove_agents(self, mask: np.ndarray) -> int:
+        """Remove agents at a boolean mask; placed leavers free their usage.
+        Returns how many of the removed agents were placed."""
+        mask = np.asarray(mask, bool)
+        gone = self.pop.select(mask)
+        held = gone.placed >= 0
+        np.add.at(self.usage, gone.placed[held], -gone.req[held])
+        self.usage = np.maximum(self.usage, 0.0)
+        self.pop = self.pop.select(~mask)
+        return int(held.sum())
 
     # -- pool bookkeeping ----------------------------------------------------
     def pool_idx(self, c: int, t: int) -> int:
@@ -150,12 +376,320 @@ class Economy:
         m = self.utilization().mean(axis=1)
         return 100.0 * (m < m[c] - 1e-12).mean()
 
+    def _util_percentiles(self) -> np.ndarray:
+        """(C,) percentile rank of every cluster's mean utilization."""
+        m = self.utilization().mean(axis=1)
+        return 100.0 * (m[None, :] < m[:, None] - 1e-12).mean(axis=1)
+
     # -- preliminary prices (paper Fig. 5) ------------------------------------
     def preview_prices(self) -> np.ndarray:
         """Provisional settlement prices for the *current* bid book — the
         market front end shows these during the bid-collection window so
         teams can react before the final, binding run."""
         return self.run_epoch(dry_run=True).prices
+
+    # -- epoch randomness -----------------------------------------------------
+    def _draw_bid_randomness(self) -> tuple[np.ndarray, np.ndarray]:
+        """One epoch's random draws, as flat arrays.
+
+        ``u_arb`` (N,): the arbitrage coin per agent; ``perm_keys`` (N, C):
+        sort keys whose row-wise stable argsort is the agent's cluster-reach
+        permutation.  Drawing these up front (instead of per-agent inside the
+        loop) is what lets the vectorized and reference packers consume the
+        identical stream — and it is the only RNG the epoch touches, so
+        ``dry_run`` restores exactly this much state.
+        """
+        n = len(self.pop)
+        u_arb = self.rng.random(n)
+        perm_keys = self.rng.random((n, self.C))
+        return u_arb, perm_keys
+
+    # -- bid-book construction -----------------------------------------------
+    def _pack_bids_vectorized(
+        self,
+        psi_flat: np.ndarray,
+        tilde_p: np.ndarray,
+        base_cost_flat: np.ndarray,
+        u_arb: np.ndarray,
+        perm_keys: np.ndarray,
+    ) -> BidBook:
+        """Assemble the epoch bid book as pure array ops — O(nnz), no
+        per-agent Python.
+
+        Row layout (identical to the reference loop packer): operator lots in
+        pool order, then per agent in index order a trader's sell row (if it
+        offers this epoch) immediately followed by its buy row.  Buy bundles
+        are ordered home-cluster-first, then by the agent's reach
+        permutation, truncated to its reach budget.
+        """
+        pop = self.pop
+        n, C, T, R = len(pop), self.C, self.T, self.R
+        placed, home = pop.placed, pop.home
+
+        # (a) who sells, who buys
+        psi_home0 = psi_flat[np.clip(placed, 0, C - 1) * T]  # rtype-0 util at placed
+        sells = (
+            (placed >= 0)
+            & (pop.arbitrage > 0)
+            & (u_arb < pop.arbitrage)
+            & (psi_home0 > 0.75)
+        )
+        wants = (placed < 0) | sells
+
+        buyers = np.flatnonzero(wants)
+        sellers = np.flatnonzero(sells)
+        nb = buyers.size
+
+        # believed costs only for rows that price something: sellers are a
+        # subset of buyers (a trader always re-buys), so one (nb, C) matrix
+        # serves both the trader and buy paths.
+        believed_b = believed_bundle_costs(pop.req[buyers], self.belief)
+
+        # (b) reach (buyers only): home first, then the reach permutation,
+        # truncated to the agent's reach budget
+        home_b = home[buyers]
+        perm = np.argsort(perm_keys[buyers], axis=1, kind="stable")  # (nb, C)
+        pos = np.empty_like(perm)
+        np.put_along_axis(
+            pos, perm, np.broadcast_to(np.arange(C, dtype=np.int64), (nb, C)), axis=1
+        )
+        n_reach = np.minimum(
+            np.maximum(1, np.rint(pop.mobility[buyers] * C).astype(np.int64)), C
+        )
+        key = pos.astype(np.float64)
+        key[key >= n_reach[:, None]] = np.inf  # outside the reach slice
+        has_home = np.flatnonzero(home_b >= 0)
+        key[has_home, home_b[has_home]] = -1.0  # home always first, always in
+        order = np.argsort(key, axis=1, kind="stable")  # clusters in bundle order
+        free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)  # (R,)
+        op_pools = np.flatnonzero(free > 1e-9)
+        n_op = op_pools.size
+
+        B = max(int(n_reach.max()) if nb else 1, 1)
+        U = n_op + sellers.size + nb
+
+        # (c) row offsets: ops first, then sell-row/buy-row interleaved per agent
+        rows_per_agent = sells.astype(np.int64) + wants.astype(np.int64)
+        row0 = n_op + np.concatenate(([0], np.cumsum(rows_per_agent)[:-1]))
+        sell_row = row0[sellers]
+        buy_row = row0[buyers] + sells[buyers]
+
+        idx = np.zeros((U, B, T), np.int32)
+        val = np.zeros((U, B, T), np.float32)
+        mask = np.zeros((U, B), bool)
+        pi_mat = np.full((U, B), -np.inf, np.float32)
+        row_kind = np.full((U,), KIND_BUY, np.int8)
+        row_agent = np.full((U,), -1, np.int64)
+        sell_cluster = np.full((U,), -1, np.int64)
+        bundle_cluster = np.full((U, B), -1, np.int64)
+
+        # (d) operator sells spare capacity at reserve — one quantity-collapsed
+        # row per pool (the seller stay-in rule is scale-invariant).
+        idx[:n_op, 0, 0] = op_pools
+        val[:n_op, 0, 0] = -free[op_pools]
+        mask[:n_op, 0] = True
+        pi_mat[:n_op, 0] = (
+            -free[op_pools] * tilde_p.astype(np.float64)[op_pools]
+        ).astype(np.float32)
+        row_kind[:n_op] = KIND_OP
+
+        # (e) traders: offer holdings at home at 15% under believed revenue
+        t_ar = np.arange(T, dtype=np.int64)
+        if sellers.size:
+            # sellers ⊂ buyers and both are sorted, so a searchsorted maps a
+            # seller to its believed-cost row
+            sell_pos = np.searchsorted(buyers, sellers)
+            idx[sell_row, 0, :] = (placed[sellers, None] * T + t_ar[None, :])
+            val[sell_row, 0, :] = (-pop.req[sellers]).astype(np.float32)
+            mask[sell_row, 0] = True
+            exp_rev = believed_b[sell_pos, placed[sellers]]
+            pi_mat[sell_row, 0] = (-exp_rev * (1.0 - 0.15)).astype(np.float32)
+            row_kind[sell_row] = KIND_SELL
+            row_agent[sell_row] = sellers
+            sell_cluster[sell_row] = placed[sellers]
+
+        # (f) buyers: one XOR bundle per reachable cluster, π capped at
+        # min(value − relocation, believed·(1+margin), budget)
+        if nb:
+            raw_value = pop.value[buyers, None] - pop.relocation_cost[
+                buyers, None
+            ] * (np.arange(C)[None, :] != home_b[:, None])
+            pi_nc = np.minimum(
+                np.minimum(
+                    raw_value,
+                    believed_b * (1.0 + pop.margins()[buyers])[:, None],
+                ),
+                pop.budget[buyers, None],
+            )
+            bc = order[:, :B]  # (nb, B) clusters in bundle order
+            valid = np.arange(B)[None, :] < n_reach[:, None]
+            bcc = np.where(valid, bc, 0).astype(np.int32)
+            idx[buy_row] = np.where(
+                valid[:, :, None],
+                bcc[:, :, None] * np.int32(T) + t_ar.astype(np.int32)[None, None, :],
+                np.int32(0),
+            )
+            val[buy_row] = np.where(
+                valid[:, :, None],
+                pop.req[buyers].astype(np.float32)[:, None, :],
+                np.float32(0.0),
+            )
+            mask[buy_row] = valid
+            pi_mat[buy_row] = np.where(
+                valid,
+                np.take_along_axis(pi_nc, bcc, axis=1).astype(np.float32),
+                np.float32(-np.inf),
+            )
+            row_agent[buy_row] = buyers
+            bundle_cluster[buy_row] = np.where(valid, bc, -1)
+
+        problem = sparse_problem_from_arrays(
+            idx, val, mask, pi_mat, base_cost=base_cost_flat
+        )
+        return BidBook(
+            problem=problem, pi_mat=pi_mat, row_kind=row_kind,
+            row_agent=row_agent, sell_cluster=sell_cluster,
+            bundle_cluster=bundle_cluster,
+        )
+
+    def _pack_bids_loop(
+        self,
+        psi_flat: np.ndarray,
+        tilde_p: np.ndarray,
+        base_cost_flat: np.ndarray,
+        u_arb: np.ndarray,
+        perm_keys: np.ndarray,
+    ) -> BidBook:
+        """Reference per-agent packer (the pre-vectorization code path).
+
+        Kept as the parity oracle: it consumes the same pre-drawn randomness
+        and must produce a bit-identical bid book (idx/val/π/mask ordering
+        and dtypes) to :meth:`_pack_bids_vectorized`.  O(N) Python — use
+        only for tests and small economies.
+        """
+        pop = self.pop
+        T, C = self.T, self.C
+        t_arange = np.arange(T)
+        believed = believed_bundle_costs(pop.req, self.belief)  # shared helper
+        margins = pop.margins()
+        sparse_rows: list[list[tuple[np.ndarray, np.ndarray]]] = []
+        pi_rows: list[np.ndarray] = []
+        kinds: list[tuple] = []  # (agent_idx, kind, cluster list)
+
+        free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)
+        for r in range(self.R):
+            if free[r] <= 1e-9:
+                continue
+            sparse_rows.append(
+                [(np.array([r], np.int32), np.array([-free[r]], np.float32))]
+            )
+            pi_rows.append(
+                np.array([-free[r] * float(tilde_p[r])], np.float32)
+            )
+            kinds.append((-1, "op", [r // T]))
+
+        max_b = 1
+        for i in range(len(pop)):
+            placed_i, home_i = int(pop.placed[i]), int(pop.home[i])
+            req_i = pop.req[i]
+            wants_placement = placed_i < 0
+            sells = (
+                placed_i >= 0
+                and pop.arbitrage[i] > 0
+                and u_arb[i] < pop.arbitrage[i]
+                and psi_flat[self.pool_idx(placed_i, 0)] > 0.75
+            )
+            if sells:
+                # trader: offer holdings at home, seek to re-buy elsewhere
+                exp_rev = float(believed[i, placed_i])
+                sparse_rows.append(
+                    [
+                        (
+                            (placed_i * T + t_arange).astype(np.int32),
+                            (-req_i).astype(np.float32),
+                        )
+                    ]
+                )
+                pi_rows.append(np.array([-exp_rev * (1.0 - 0.15)], np.float32))
+                kinds.append((i, "sell", [placed_i]))
+                wants_placement = True  # now needs a new home
+            if not wants_placement:
+                continue
+            n_reach = min(max(1, int(round(float(pop.mobility[i]) * C))), C)
+            order = np.argsort(perm_keys[i], kind="stable")
+            reach = sorted(
+                order[:n_reach].tolist(),
+                key=lambda c: 0 if c == home_i else 1,
+            )
+            if home_i >= 0 and home_i not in reach:
+                reach = [home_i] + reach[: max(0, n_reach - 1)]
+            bundles, pis = [], []
+            for c in reach:
+                believed_c = float(believed[i, c])
+                raw_value = float(pop.value[i]) - (
+                    float(pop.relocation_cost[i]) if c != home_i else 0.0
+                )
+                # bid: value capped by belief*(1+margin) — early epochs bid
+                # near private value (wild), later epochs track the market.
+                pi = min(
+                    raw_value,
+                    believed_c * (1.0 + float(margins[i])),
+                    float(pop.budget[i]),
+                )
+                bundles.append(
+                    ((c * T + t_arange).astype(np.int32), req_i.astype(np.float32))
+                )
+                pis.append(pi)
+            sparse_rows.append(bundles)
+            pi_rows.append(np.asarray(pis, np.float32))
+            kinds.append((i, "buy", reach))
+            max_b = max(max_b, len(bundles))
+
+        U = len(sparse_rows)
+        max_b = max(max_b, max(len(b) for b in sparse_rows))
+        pi_mat = np.full((U, max_b), -np.inf, np.float32)
+        for u, pis_u in enumerate(pi_rows):
+            pi_mat[u, : len(pis_u)] = pis_u
+
+        problem = pack_bids_sparse(
+            sparse_rows, pi_mat, base_cost=base_cost_flat, k_max=max(T, 1)
+        )
+        row_kind = np.full((U,), KIND_BUY, np.int8)
+        row_agent = np.full((U,), -1, np.int64)
+        sell_cluster = np.full((U,), -1, np.int64)
+        bundle_cluster = np.full((U, max_b), -1, np.int64)
+        for u, (aidx, kind, cluster_list) in enumerate(kinds):
+            if kind == "op":
+                row_kind[u] = KIND_OP
+            elif kind == "sell":
+                row_kind[u] = KIND_SELL
+                row_agent[u] = aidx
+                sell_cluster[u] = cluster_list[0]
+            else:
+                row_agent[u] = aidx
+                bundle_cluster[u, : len(cluster_list)] = cluster_list
+        return BidBook(
+            problem=problem, pi_mat=pi_mat, row_kind=row_kind,
+            row_agent=row_agent, sell_cluster=sell_cluster,
+            bundle_cluster=bundle_cluster,
+        )
+
+    def pack_bid_book(self) -> BidBook:
+        """Pack the coming epoch's bid book without settling (consumes RNG).
+
+        Mostly useful for inspection and the parity suite; ``run_epoch``
+        draws and packs internally.
+        """
+        psi_flat = self.utilization().reshape(-1)
+        tilde_p = reserve_prices(self.pools(), self.weighting)
+        base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
+        u_arb, perm_keys = self._draw_bid_randomness()
+        pack = (
+            self._pack_bids_vectorized
+            if self.packer == "vectorized"
+            else self._pack_bids_loop
+        )
+        return pack(psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys)
 
     # -- one auction epoch ---------------------------------------------------
     def run_epoch(self, dry_run: bool = False) -> EpochStats:
@@ -177,108 +711,23 @@ class Economy:
         return self._settle_epoch(dry_run=False)
 
     def _settle_epoch(self, dry_run: bool) -> EpochStats:
-        pools = self.pools()
-        psi_flat = np.array([p.utilization for p in pools])
-        tilde_p = reserve_prices(pools, self.weighting)
+        psi_flat = self.utilization().reshape(-1).copy()
+        tilde_p = reserve_prices(self.pools(), self.weighting)
         base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
 
-        # All bids are packed straight into sparse (idx, val) form: every
-        # agent bundle writes exactly T nonzeros per reachable cluster and
-        # every operator lot writes one — no (R,) row is ever materialized,
-        # so epoch setup is O(nnz) host work instead of O(U·B·R).
-        T = self.T
-        t_arange = np.arange(T)
-        # per user: list of (idx (K,), val (K,)) sparse bundle pairs
-        sparse_rows: list[list[tuple[np.ndarray, np.ndarray]]] = []
-        pi_rows: list[np.ndarray] = []  # per-bundle π (vector-π extension)
-        kinds: list[tuple] = []  # (agent_idx, "buy"/"sell"/"op", cluster list)
-
-        # (a) operator sells spare capacity at reserve — ONE quantity-collapsed
-        # row per pool.  The old packing split supply into 8 identical lot
-        # rows; but the seller proxy's stay-in rule (qᵀp ≤ π ⇔ p_r ≥ reserve)
-        # is scale-invariant, so 8 lots always flipped in or out together and
-        # only inflated U (8·R extra rows sharded and re-reduced every clock
-        # round).  Folding the full supply into the row's quantity keeps z,
-        # payments, and surplus totals identical while shrinking per-shard U
-        # before sharding even starts.  π stays in the scalar dtype chain
-        # (python float × tilde_p element) — operator sellers are exactly
-        # marginal at the reserve price, so a 1-ulp π change flips them.
-        for r, pool in enumerate(pools):
-            if pool.supply <= 1e-9:
-                continue
-            sparse_rows.append(
-                [(np.array([r], np.int32), np.array([-pool.supply], np.float32))]
-            )
-            pi_rows.append(np.array([-pool.supply * tilde_p[r]], np.float32))
-            kinds.append((-1, "op", [r // T]))
-
-        # (b) agent buy bids (XOR across reachable clusters)
-        max_b = 1
-        for i, a in enumerate(self.agents):
-            wants_placement = a.placed < 0
-            sells = (
-                a.placed >= 0
-                and a.arbitrage > 0
-                and self.rng.random() < a.arbitrage
-                and psi_flat[self.pool_idx(a.placed, 0)] > 0.75
-            )
-            if sells:
-                # trader: offer holdings at home, seek to re-buy elsewhere
-                exp_rev = float(
-                    sum(
-                        a.req[t] * self.belief[self.pool_idx(a.placed, t)]
-                        for t in range(self.T)
-                    )
-                )
-                sparse_rows.append(
-                    [
-                        (
-                            (a.placed * T + t_arange).astype(np.int32),
-                            (-a.req).astype(np.float32),
-                        )
-                    ]
-                )
-                pi_rows.append(np.array([-exp_rev * (1.0 - 0.15)], np.float32))
-                kinds.append((i, "sell", [a.placed]))
-                wants_placement = True  # now needs a new home
-            if not wants_placement:
-                continue
-            n_reach = max(1, int(round(a.mobility * self.C)))
-            order = self.rng.permutation(self.C)
-            reach = sorted(
-                order[:n_reach].tolist(),
-                key=lambda c: 0 if c == a.home else 1,
-            )
-            if a.home >= 0 and a.home not in reach:
-                reach = [a.home] + reach[: max(0, n_reach - 1)]
-            bundles, pis = [], []
-            for c in reach:
-                believed = float(
-                    sum(a.req[t] * self.belief[self.pool_idx(c, t)] for t in range(self.T))
-                )
-                raw_value = a.value - (a.relocation_cost if c != a.home else 0.0)
-                # bid: value capped by belief*(1+margin) — early epochs bid
-                # near private value (wild), later epochs track the market.
-                pi = min(raw_value, believed * (1.0 + a.margin()), a.budget)
-                bundles.append(
-                    ((c * T + t_arange).astype(np.int32), a.req.astype(np.float32))
-                )
-                pis.append(pi)
-            sparse_rows.append(bundles)
-            pi_rows.append(np.asarray(pis, np.float32))
-            kinds.append((i, "buy", reach))
-            max_b = max(max_b, len(bundles))
-
-        # pad π rows to rectangle (vector-π mode) and pack sparse tensors
-        U = len(sparse_rows)
-        max_b = max(max_b, max(len(b) for b in sparse_rows))
-        pi_mat = np.full((U, max_b), -np.inf, np.float32)
-        for u, pis_u in enumerate(pi_rows):
-            pi_mat[u, : len(pis_u)] = pis_u
-
-        problem = pack_bids_sparse(
-            sparse_rows, pi_mat, base_cost=base_cost_flat, k_max=max(T, 1)
+        u_arb, perm_keys = self._draw_bid_randomness()
+        pack = (
+            self._pack_bids_vectorized
+            if self.packer == "vectorized"
+            else self._pack_bids_loop
         )
+        book = pack(psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys)
+        if book.num_rows == 0:
+            raise RuntimeError(
+                "empty bid book: no operator supply and no bidding agents"
+            )
+        problem = book.problem
+
         # Settlement uses the blocked demand variant: z is a fixed left-fold
         # over contiguous user blocks, which makes EpochStats bit-identical
         # whether the clock runs on one device or sharded over users across
@@ -303,7 +752,6 @@ class Economy:
         sys_ok = all(verify_system(problem, result).values())
         surplus, trade = surplus_and_trade(problem, result)
 
-        # -- settle: apply allocations, record stats -------------------------
         prices = np.asarray(result.prices)
         if dry_run:
             return EpochStats(
@@ -317,50 +765,17 @@ class Economy:
                 rounds=int(result.rounds), converged=bool(result.converged),
                 system_ok=sys_ok,
             )
-        won = np.asarray(result.won)
-        chosen = np.asarray(result.chosen_bundle)
-        payments = np.asarray(result.payments)
 
-        migrations = 0
-        gammas: list[float] = []
-        buy_util_pct: list[float] = []
-        sell_util_pct: list[float] = []
-        util_pct_by_cluster = {c: self.util_percentile(c) for c in range(self.C)}
-        n_agent_bids = 0
-        n_agent_wins = 0
-        for u, (aidx, kind, cluster_list) in enumerate(kinds):
-            if kind == "op":
-                continue
-            n_agent_bids += 1
-            if not won[u]:
-                continue
-            n_agent_wins += 1
-            a = self.agents[aidx]
-            pay = float(payments[u])
-            pi_u = float(pi_mat[u, max(chosen[u], 0)])
-            if abs(pay) > 1e-9:
-                gammas.append(abs(pi_u - pay) / abs(pay))
-            if kind == "sell":
-                c = cluster_list[0]
-                self.usage[c] = np.maximum(self.usage[c] - a.req, 0.0)
-                a.placed = -1
-                sell_util_pct.append(util_pct_by_cluster[c])
-            else:  # buy
-                c = cluster_list[chosen[u]]
-                self.usage[c] = self.usage[c] + a.req
-                if a.placed >= 0 and a.placed != c:
-                    self.usage[a.placed] = np.maximum(self.usage[a.placed] - a.req, 0.0)
-                if a.home != c and a.home >= 0:
-                    migrations += 1
-                a.placed = c
-                a.home = c
-                buy_util_pct.append(util_pct_by_cluster[c])
-        self.usage = np.minimum(self.usage, self.capacity)
+        apply = (
+            self._apply_settlement
+            if self.packer == "vectorized"
+            else self._apply_settlement_loop
+        )
+        stats = apply(book, result)
 
         # -- learning: beliefs drift toward settled prices --------------------
         self.belief = 0.25 * self.belief + 0.75 * prices
-        for a in self.agents:
-            a.epoch += 1
+        self.pop.epoch += 1
         self.price_history.append(prices)
 
         return EpochStats(
@@ -369,18 +784,175 @@ class Economy:
             reserve=np.asarray(tilde_p),
             psi=psi_flat,
             price_ratio=prices / base_cost_flat,
-            gamma_median=float(np.median(gammas)) if gammas else float("nan"),
-            gamma_mean=float(np.mean(gammas)) if gammas else float("nan"),
-            pct_settled=100.0 * n_agent_wins / max(n_agent_bids, 1),
-            buy_util_percentiles=np.asarray(buy_util_pct),
-            sell_util_percentiles=np.asarray(sell_util_pct),
-            migrations=migrations,
+            gamma_median=stats["gamma_median"],
+            gamma_mean=stats["gamma_mean"],
+            pct_settled=stats["pct_settled"],
+            buy_util_percentiles=stats["buy_util_pct"],
+            sell_util_percentiles=stats["sell_util_pct"],
+            migrations=stats["migrations"],
             surplus=float(surplus),
             value_of_trade=float(trade),
             rounds=int(result.rounds),
             converged=bool(result.converged),
             system_ok=sys_ok,
         )
+
+    def _apply_settlement(self, book: BidBook, result) -> dict:
+        """Apply won allocations to population + usage, fully vectorized.
+
+        Usage semantics: all settled deltas (trader give-backs, buyer
+        additions, movers' old-home releases) are accumulated into one
+        per-pool delta and the result clipped to [0, capacity] — an
+        order-independent formulation, so the outcome does not depend on
+        agent index order.
+        """
+        pop = self.pop
+        won = np.asarray(result.won)
+        chosen = np.asarray(result.chosen_bundle)
+        payments = np.asarray(result.payments)
+        U = book.num_rows
+        kind = book.row_kind
+
+        agent_rows = kind != KIND_OP
+        win_rows = won & agent_rows
+        n_agent_bids = int(agent_rows.sum())
+        n_agent_wins = int(win_rows.sum())
+
+        # premiums γ_u = |π − pay| / |pay| over winning agent rows (f64, as the
+        # scalar reference computed them)
+        pay64 = payments.astype(np.float64)
+        pi_sel = book.pi_mat[np.arange(U), np.maximum(chosen, 0)].astype(np.float64)
+        g_rows = win_rows & (np.abs(pay64) > 1e-9)
+        gammas = np.abs(pi_sel[g_rows] - pay64[g_rows]) / np.abs(pay64[g_rows])
+
+        util_pct = self._util_percentiles()  # pre-apply utilization ranks
+
+        sell_rows = np.flatnonzero(win_rows & (kind == KIND_SELL))
+        buy_rows = np.flatnonzero(win_rows & (kind == KIND_BUY))
+        sell_agents = book.row_agent[sell_rows]
+        sc = book.sell_cluster[sell_rows]
+        buy_agents = book.row_agent[buy_rows]
+        bc = book.bundle_cluster[buy_rows, chosen[buy_rows]]
+
+        migrations = int(
+            ((pop.home[buy_agents] >= 0) & (pop.home[buy_agents] != bc)).sum()
+        )
+
+        # one usage delta per pool: sells release, buys claim, movers release
+        # their old home (skipped if the same agent's sell already released it)
+        delta = np.zeros_like(self.usage)
+        np.add.at(delta, sc, -pop.req[sell_agents])
+        placed_eff = pop.placed.copy()
+        placed_eff[sell_agents] = -1
+        np.add.at(delta, bc, pop.req[buy_agents])
+        old = placed_eff[buy_agents]
+        move = (old >= 0) & (old != bc)
+        np.add.at(delta, old[move], -pop.req[buy_agents][move])
+        self.usage = np.clip(self.usage + delta, 0.0, self.capacity)
+
+        pop.placed[sell_agents] = -1
+        pop.placed[buy_agents] = bc
+        pop.home[buy_agents] = bc
+
+        return {
+            "gamma_median": float(np.median(gammas)) if gammas.size else float("nan"),
+            "gamma_mean": float(np.mean(gammas)) if gammas.size else float("nan"),
+            "pct_settled": 100.0 * n_agent_wins / max(n_agent_bids, 1),
+            "buy_util_pct": util_pct[bc] if bc.size else np.empty(0),
+            "sell_util_pct": util_pct[sc] if sc.size else np.empty(0),
+            "migrations": migrations,
+        }
+
+    def _apply_settlement_loop(self, book: BidBook, result) -> dict:
+        """Per-agent reference of :meth:`_apply_settlement` (the legacy epoch
+        path, and the benchmark baseline's apply half).
+
+        Walks rows in order with scalar Python, but accumulates the usage
+        delta in the same three passes (trader releases, buyer claims,
+        movers' releases) as the vectorized apply so both produce
+        bit-identical EpochStats.
+        """
+        pop = self.pop
+        won = np.asarray(result.won)
+        chosen = np.asarray(result.chosen_bundle)
+        payments = np.asarray(result.payments)
+        util_pct = self._util_percentiles()
+
+        gammas: list[float] = []
+        n_agent_bids = n_agent_wins = 0
+        sell_pairs: list[tuple[int, int]] = []  # (agent, cluster)
+        buy_pairs: list[tuple[int, int]] = []
+        for u in range(book.num_rows):
+            kind = book.row_kind[u]
+            if kind == KIND_OP:
+                continue
+            n_agent_bids += 1
+            if not won[u]:
+                continue
+            n_agent_wins += 1
+            pay = float(payments[u])
+            pi_u = float(book.pi_mat[u, max(int(chosen[u]), 0)])
+            if abs(pay) > 1e-9:
+                gammas.append(abs(pi_u - pay) / abs(pay))
+            a = int(book.row_agent[u])
+            if kind == KIND_SELL:
+                sell_pairs.append((a, int(book.sell_cluster[u])))
+            else:
+                buy_pairs.append((a, int(book.bundle_cluster[u, int(chosen[u])])))
+
+        migrations = 0
+        delta = np.zeros_like(self.usage)
+        placed_eff = pop.placed.copy()
+        for a, c in sell_pairs:
+            delta[c] += -pop.req[a]
+            placed_eff[a] = -1
+        for a, c in buy_pairs:
+            delta[c] += pop.req[a]
+            if pop.home[a] >= 0 and pop.home[a] != c:
+                migrations += 1
+        for a, c in buy_pairs:
+            old = placed_eff[a]
+            if old >= 0 and old != c:
+                delta[old] += -pop.req[a]
+        self.usage = np.clip(self.usage + delta, 0.0, self.capacity)
+
+        for a, _ in sell_pairs:
+            pop.placed[a] = -1
+        for a, c in buy_pairs:
+            pop.placed[a] = c
+            pop.home[a] = c
+
+        g = np.asarray(gammas, np.float64)
+        return {
+            "gamma_median": float(np.median(g)) if g.size else float("nan"),
+            "gamma_mean": float(np.mean(g)) if g.size else float("nan"),
+            "pct_settled": 100.0 * n_agent_wins / max(n_agent_bids, 1),
+            "buy_util_pct": np.asarray([util_pct[c] for _, c in buy_pairs]),
+            "sell_util_pct": np.asarray([util_pct[c] for _, c in sell_pairs]),
+            "migrations": migrations,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDistribution:
+    """The fleet-agent distribution, shared between the per-agent builder
+    (:func:`make_fleet_economy`) and the array builder
+    (:func:`repro.core.markets.fleet_population`) so the two cannot drift
+    apart.  Tuples are (lo, hi) uniform ranges unless noted."""
+
+    chip_sizes: tuple = (64.0, 128.0, 256.0, 512.0)  # job size choices
+    hbm_per_chip: tuple = (8.0, 16.0)
+    ici_per_chip: tuple = (40.0, 200.0)
+    congested_home_frac: float = 0.7  # P(home drawn from congested clusters)
+    placed_frac: float = 0.6  # P(agent starts holding resources at home)
+    value_mult: tuple = (1.2, 3.5)  # private value / base-cost estimate
+    relocation_mult: tuple = (0.02, 0.8)  # relocation cost / base-cost estimate
+    mobility: tuple = (0.3, 1.0)
+    margin0: tuple = (0.5, 2.0)
+    arbitrage: tuple = (0.0, 0.5)
+
+
+FLEET_DISTRIBUTION = FleetDistribution()
 
 
 def make_fleet_economy(
@@ -390,9 +962,16 @@ def make_fleet_economy(
     congested_frac: float = 0.4,
     rtypes: Sequence[str] = ("tpu_chips", "hbm_gb", "ici_gbps"),
     base_cost: Sequence[float] = (10.0, 0.05, 0.2),
+    **economy_kwargs,
 ) -> Economy:
     """A planet-wide TPU fleet: clusters with heterogeneous congestion, agents
-    whose demand vectors look like LM training/serving jobs."""
+    whose demand vectors look like LM training/serving jobs.
+
+    Agent draws are per-agent (stream-stable with the seed corpus) — use
+    :func:`repro.core.markets.fleet_economy` for vectorized construction at
+    10⁵–10⁶ agents.
+    """
+    d = FLEET_DISTRIBUTION
     rng = np.random.default_rng(seed)
     T = len(rtypes)
     capacity = np.zeros((num_clusters, T))
@@ -402,24 +981,30 @@ def make_fleet_economy(
     agents = []
     n_congested = int(round(congested_frac * num_clusters))
     for i in range(num_agents):
-        chips = float(rng.choice([64, 128, 256, 512]))
-        req = np.array([chips, chips * rng.uniform(8, 16), chips * rng.uniform(40, 200)])
+        chips = float(rng.choice(d.chip_sizes))
+        req = np.array([
+            chips,
+            chips * rng.uniform(*d.hbm_per_chip),
+            chips * rng.uniform(*d.ici_per_chip),
+        ])
         cost_est = float((req * np.asarray(base_cost)).sum())
-        home = int(rng.integers(0, n_congested)) if rng.random() < 0.7 else int(
-            rng.integers(0, num_clusters)
+        home = (
+            int(rng.integers(0, n_congested))
+            if rng.random() < d.congested_home_frac
+            else int(rng.integers(0, num_clusters))
         )
-        placed = home if rng.random() < 0.6 else -1
+        placed = home if rng.random() < d.placed_frac else -1
         agents.append(
             Agent(
                 name=f"job-{i}",
                 req=req,
-                value=cost_est * rng.uniform(1.2, 3.5),
+                value=cost_est * rng.uniform(*d.value_mult),
                 home=home,
                 placed=placed,
-                relocation_cost=cost_est * rng.uniform(0.02, 0.8),
-                mobility=float(rng.uniform(0.3, 1.0)),
-                margin0=float(rng.uniform(0.5, 2.0)),
-                arbitrage=float(rng.uniform(0.0, 0.5)),
+                relocation_cost=cost_est * rng.uniform(*d.relocation_mult),
+                mobility=float(rng.uniform(*d.mobility)),
+                margin0=float(rng.uniform(*d.margin0)),
+                arbitrage=float(rng.uniform(*d.arbitrage)),
             )
         )
     eco = Economy(
@@ -429,6 +1014,7 @@ def make_fleet_economy(
         base_cost=np.asarray(base_cost),
         agents=agents,
         seed=seed + 1,
+        **economy_kwargs,
     )
     # pre-load congestion into the first n_congested clusters
     for c in range(n_congested):

@@ -12,7 +12,12 @@ from __future__ import annotations
 
 import numpy as np
 
+from .auction import ClockConfig
+from .economy import FLEET_DISTRIBUTION, AgentPopulation, Economy
 from .types import SparseAuctionProblem, pack_bids_sparse
+
+FLEET_RTYPES = ("tpu_chips", "hbm_gb", "ici_gbps")
+FLEET_BASE_COST = (10.0, 0.05, 0.2)
 
 
 def random_market(
@@ -54,3 +59,107 @@ def random_market(
     return pack_bids_sparse(
         bundle_lists, pis, base_cost=np.ones(num_resources, np.float32)
     )
+
+
+def fleet_population(
+    num_agents: int,
+    num_clusters: int,
+    *,
+    seed: int = 0,
+    congested_frac: float = 0.4,
+    base_cost: tuple = FLEET_BASE_COST,
+    value_mult: float = 1.0,
+    home: int | None = None,
+    placed_frac: float | None = None,  # None → the shared fleet default
+) -> AgentPopulation:
+    """Vectorized fleet agents — ``make_fleet_economy``'s distribution drawn
+    as whole arrays, so 10⁶ agents materialize in milliseconds.
+
+    Demand vectors look like LM training/serving jobs (chips, HBM ∝ chips,
+    ICI ∝ chips); homes skew 70/30 toward the congested clusters unless a
+    fixed ``home`` is given.  ``value_mult`` scales private values (flash
+    crowds bid hot).
+    """
+    d = FLEET_DISTRIBUTION
+    if placed_frac is None:
+        placed_frac = d.placed_frac
+    rng = np.random.default_rng(seed)
+    n = int(num_agents)
+    chips = rng.choice(np.asarray(d.chip_sizes), size=n)
+    req = np.stack(
+        [
+            chips,
+            chips * rng.uniform(*d.hbm_per_chip, n),
+            chips * rng.uniform(*d.ici_per_chip, n),
+        ],
+        axis=1,
+    )
+    cost_est = req @ np.asarray(base_cost, np.float64)
+    n_congested = max(int(round(congested_frac * num_clusters)), 1)
+    if home is None:
+        home_arr = np.where(
+            rng.random(n) < d.congested_home_frac,
+            rng.integers(0, n_congested, n),
+            rng.integers(0, num_clusters, n),
+        )
+    else:
+        home_arr = np.full(n, int(home), np.int64)
+    placed = np.where(rng.random(n) < placed_frac, home_arr, -1)
+    return AgentPopulation(
+        req=req,
+        value=cost_est * rng.uniform(*d.value_mult, n) * value_mult,
+        home=home_arr,
+        relocation_cost=cost_est * rng.uniform(*d.relocation_mult, n),
+        mobility=rng.uniform(*d.mobility, n),
+        margin0=rng.uniform(*d.margin0, n),
+        margin_decay=np.full(n, 0.30),
+        arbitrage=rng.uniform(*d.arbitrage, n),
+        budget=np.full(n, np.inf),
+        placed=placed,
+        epoch=np.zeros(n, np.int64),
+    )
+
+
+def fleet_economy(
+    num_agents: int = 10_000,
+    num_clusters: int = 8,
+    *,
+    seed: int = 0,
+    congested_frac: float = 0.4,
+    headroom: float = 1.3,
+    clock: ClockConfig = ClockConfig(),
+    **economy_kwargs,
+) -> Economy:
+    """A fleet economy built entirely from arrays — the scale twin of
+    ``make_fleet_economy`` for 10⁴–10⁶-agent benchmarks and scenarios.
+
+    Capacity is sized to aggregate demand (mean 240 chips/agent) times
+    ``headroom``, spread unevenly across clusters, with the first
+    ``congested_frac`` of clusters pre-loaded to 88% utilization so the
+    market has congestion to relieve.
+    """
+    rng = np.random.default_rng(seed)
+    pop = fleet_population(
+        num_agents, num_clusters, seed=seed, congested_frac=congested_frac
+    )
+    chips_c = (
+        240.0 * num_agents / num_clusters * headroom
+        * rng.uniform(0.7, 1.5, num_clusters)
+    )
+    capacity = np.stack([chips_c, chips_c * 16.0, chips_c * 200.0], axis=1)
+    eco = Economy(
+        clusters=[f"cluster-{c}" for c in range(num_clusters)],
+        rtypes=FLEET_RTYPES,
+        capacity=capacity,
+        base_cost=np.asarray(FLEET_BASE_COST),
+        agents=pop,
+        clock=clock,
+        seed=seed + 1,
+        **economy_kwargs,
+    )
+    # same floor as fleet_population, so the clusters it skews homes into are
+    # exactly the ones pre-loaded here
+    n_congested = max(int(round(congested_frac * num_clusters)), 1)
+    for c in range(n_congested):
+        eco.usage[c] = np.maximum(eco.usage[c], 0.88 * eco.capacity[c])
+    return eco

@@ -1,0 +1,361 @@
+"""Declarative scenario engine for the multi-epoch economy.
+
+A :class:`Scenario` is an epoch count plus an epoch-indexed stream of
+*events* — capacity loss/outage, demand flash-crowds, agent arrivals and
+departures, base-cost changes, reserve-weighting swaps — applied to the
+economy *between* auction epochs.  :func:`run_scenario` drives the loop,
+logs every event, checks the economy's physical invariants (usage within
+[0, capacity], placed-agent conservation under arrivals/departures), and
+returns the full per-epoch :class:`~repro.core.economy.EpochStats`
+trajectory plus the cross-cluster utilization-spread series the paper's
+Fig. 6 congestion-relief argument is about.
+
+The point (cf. Lai's "Markets are Dead, Long Live Markets" critique) is to
+stress the mechanism beyond the single toy trajectory most market-allocator
+evaluations run: the :data:`SCENARIOS` library covers congestion relief,
+cluster drain (outage), price shocks with a mid-run reserve-curve swap,
+flash crowds with arrivals/departures, and bimodal relocation costs —
+each runnable from ``examples/market_sim.py --scenario <name>``.
+
+Adding a scenario: write a builder ``my_case(seed=0, **kw) ->
+(Economy, Scenario)`` composing the event dataclasses below, and register
+it in :data:`SCENARIOS`.  Events are frozen dataclasses with an ``epoch``
+and an ``apply(economy) -> EventReport``; new event types only need that
+contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .auction import ClockConfig
+from .economy import AgentPopulation, Economy, EpochStats, make_fleet_economy
+from .markets import fleet_population
+from .reserve import CURVE_FAMILIES, WeightingFn
+
+
+@dataclasses.dataclass(frozen=True)
+class EventReport:
+    """What one event did — consumed by the invariant checks and the log."""
+
+    epoch: int
+    description: str
+    agents_added: int = 0
+    agents_removed: int = 0
+    placed_added: int = 0  # arrivals that came in already holding resources
+    placed_removed: int = 0  # departures that freed held resources
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityShock:
+    """Scale one cluster's capacity (scale<1: outage/decommission; >1: new
+    hardware landing).  Held usage is clamped to the new capacity — jobs on
+    failed machines lose them."""
+
+    epoch: int
+    cluster: int
+    scale: float
+    rtype: int | None = None  # None = every resource type
+
+    def apply(self, eco: Economy) -> EventReport:
+        sel = slice(None) if self.rtype is None else self.rtype
+        eco.capacity[self.cluster, sel] *= self.scale
+        eco.usage = np.minimum(eco.usage, eco.capacity)
+        what = "all rtypes" if self.rtype is None else eco.rtypes[self.rtype]
+        return EventReport(
+            self.epoch,
+            f"capacity x{self.scale:g} on {eco.clusters[self.cluster]} ({what})",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowd:
+    """Demand surge: scale the private values of a random fraction of agents
+    (optionally only those homed in one cluster) — they bid like launches."""
+
+    epoch: int
+    value_scale: float
+    fraction: float = 1.0
+    cluster: int | None = None
+    seed: int = 0
+
+    def apply(self, eco: Economy) -> EventReport:
+        rng = np.random.default_rng(self.seed)
+        hit = rng.random(len(eco.pop)) < self.fraction
+        if self.cluster is not None:
+            hit &= eco.pop.home == self.cluster
+        eco.pop.value[hit] *= self.value_scale
+        where = "" if self.cluster is None else f" in {eco.clusters[self.cluster]}"
+        return EventReport(
+            self.epoch,
+            f"flash crowd: value x{self.value_scale:g} for "
+            f"{int(hit.sum())} agents{where}",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrivals:
+    """New teams join the economy (fleet-distribution draws; unplaced, so
+    they enter the next auction as wild first-epoch bidders)."""
+
+    epoch: int
+    num_agents: int
+    seed: int = 0
+    value_mult: float = 1.0
+    home: int | None = None
+
+    def apply(self, eco: Economy) -> EventReport:
+        if eco.T != 3:
+            raise ValueError(
+                "Arrivals draws fleet-shaped (3-rtype) agents; economy has "
+                f"{eco.T} rtypes — add a pre-built AgentPopulation instead"
+            )
+        pop = fleet_population(
+            self.num_agents, eco.C, seed=self.seed,
+            value_mult=self.value_mult, home=self.home, placed_frac=0.0,
+        )
+        eco.add_agents(pop)
+        return EventReport(
+            self.epoch,
+            f"{self.num_agents} agents arrive",
+            agents_added=self.num_agents,
+            placed_added=int((pop.placed >= 0).sum()),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Departures:
+    """A random fraction of agents (optionally only those placed in one
+    cluster) leave; placed leavers free their held resources.  Always keeps
+    at least one agent so the economy never empties."""
+
+    epoch: int
+    fraction: float
+    cluster: int | None = None
+    seed: int = 0
+
+    def apply(self, eco: Economy) -> EventReport:
+        rng = np.random.default_rng(self.seed)
+        eligible = np.ones(len(eco.pop), bool)
+        if self.cluster is not None:
+            eligible = eco.pop.placed == self.cluster
+        leave = eligible & (rng.random(len(eco.pop)) < self.fraction)
+        if leave.all():
+            leave[np.flatnonzero(leave)[-1]] = False  # keep the economy alive
+        placed_removed = eco.remove_agents(leave)
+        return EventReport(
+            self.epoch,
+            f"{int(leave.sum())} agents depart"
+            + ("" if self.cluster is None else f" from {eco.clusters[self.cluster]}"),
+            agents_removed=int(leave.sum()),
+            placed_removed=placed_removed,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseCostChange:
+    """Operator re-costs one resource type (e.g. a power-price change) —
+    shifts reserve prices and the Fig. 6 price-ratio baseline."""
+
+    epoch: int
+    rtype: int
+    scale: float
+
+    def apply(self, eco: Economy) -> EventReport:
+        eco.base_cost_rt[self.rtype] *= self.scale
+        return EventReport(
+            self.epoch, f"base cost x{self.scale:g} on {eco.rtypes[self.rtype]}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightingSwap:
+    """Swap the congestion-weighting curve (paper §IV) mid-run — the operator
+    knob for how hard reserves punish congestion."""
+
+    epoch: int
+    weighting: str  # key into reserve.CURVE_FAMILIES
+
+    def apply(self, eco: Economy) -> EventReport:
+        eco.weighting = CURVE_FAMILIES[self.weighting]
+        return EventReport(self.epoch, f"reserve weighting -> {self.weighting}")
+
+
+Event = CapacityShock | FlashCrowd | Arrivals | Departures | BaseCostChange | WeightingSwap
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named experiment: how many epochs to run and what happens when."""
+
+    name: str
+    epochs: int
+    events: tuple = ()
+    description: str = ""
+
+    def events_at(self, epoch: int) -> list:
+        return [ev for ev in self.events if ev.epoch == epoch]
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    scenario: Scenario
+    stats: list  # one EpochStats per epoch
+    events: list  # EventReports in application order
+    util_spread: list  # len epochs+1: std of cluster mean-utilization
+
+    @property
+    def converged(self) -> bool:
+        return all(s.converged for s in self.stats)
+
+    @property
+    def feasible(self) -> bool:
+        return all(s.system_ok for s in self.stats)
+
+    @property
+    def total_migrations(self) -> int:
+        return int(sum(s.migrations for s in self.stats))
+
+    @property
+    def spread_shrank(self) -> bool:
+        """Did the market even out cross-cluster utilization (Fig. 6)?"""
+        return self.util_spread[-1] < self.util_spread[0]
+
+
+def _check_physical_invariants(eco: Economy, context: str) -> None:
+    if np.any(eco.usage < -1e-9) or np.any(eco.usage > eco.capacity + 1e-9):
+        raise RuntimeError(f"usage out of [0, capacity] after {context}")
+    if len(eco.pop) < 1:
+        raise RuntimeError(f"economy emptied after {context}")
+
+
+def _spread(eco: Economy) -> float:
+    return float(np.std(eco.utilization().mean(axis=1)))
+
+
+def run_scenario(
+    eco: Economy,
+    scenario: Scenario,
+    check_invariants: bool = True,
+    verbose: bool = False,
+) -> ScenarioResult:
+    """Apply each epoch's events, settle the auction, repeat.
+
+    With ``check_invariants`` (default), every event and epoch is followed
+    by the physical checks — usage within [0, capacity], population
+    non-empty — and arrival/departure events must conserve the placed-agent
+    count exactly (placed after == placed before + placed_added −
+    placed_removed).
+    """
+    reports: list[EventReport] = []
+    stats: list[EpochStats] = []
+    spread = [_spread(eco)]
+    for e in range(scenario.epochs):
+        for ev in scenario.events_at(e):
+            placed_before = int((eco.pop.placed >= 0).sum())
+            rep = ev.apply(eco)
+            reports.append(rep)
+            if verbose:
+                print(f"  [epoch {e}] event: {rep.description}")
+            if check_invariants:
+                _check_physical_invariants(eco, f"event {rep.description!r}")
+                placed_after = int((eco.pop.placed >= 0).sum())
+                expect = placed_before + rep.placed_added - rep.placed_removed
+                if placed_after != expect:
+                    raise RuntimeError(
+                        f"placed-agent conservation broken by {rep.description!r}: "
+                        f"{placed_before} -> {placed_after}, expected {expect}"
+                    )
+        s = eco.run_epoch()
+        stats.append(s)
+        if check_invariants:
+            _check_physical_invariants(eco, f"epoch {e} settlement")
+        spread.append(_spread(eco))
+        if verbose:
+            print(
+                f"  [epoch {e}] gamma_med={s.gamma_median:.4f} "
+                f"settled={s.pct_settled:.0f}% migrations={s.migrations} "
+                f"spread={spread[-1]:.3f} rounds={s.rounds}"
+            )
+    return ScenarioResult(scenario, stats, reports, spread)
+
+
+# ---------------------------------------------------------------------------
+# Scenario library
+# ---------------------------------------------------------------------------
+
+
+def congestion_relief(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Paper Fig. 6: congested clusters priced high, repeated auctions drain
+    them toward uniform utilization.  No events — the baseline mechanism."""
+    eco = make_fleet_economy(seed=seed, **eco_kwargs)
+    return eco, Scenario(
+        "congestion_relief", epochs=epochs,
+        description="repeated auctions relieve pre-loaded congestion",
+    )
+
+
+def cluster_drain(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Outage: cluster-0 loses 70% of its capacity after epoch 2; displaced
+    demand must re-place into the survivors at market prices."""
+    eco = make_fleet_economy(seed=seed, **eco_kwargs)
+    return eco, Scenario(
+        "cluster_drain", epochs=epochs,
+        events=(CapacityShock(epoch=2, cluster=0, scale=0.3),),
+        description="70% capacity loss on cluster-0 at epoch 2",
+    )
+
+
+def price_shock(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Chip base cost jumps 2.5x and the operator swaps to the logistic
+    reserve curve mid-run — reserves and beliefs must re-converge."""
+    eco = make_fleet_economy(seed=seed, **eco_kwargs)
+    return eco, Scenario(
+        "price_shock", epochs=epochs,
+        events=(
+            BaseCostChange(epoch=2, rtype=0, scale=2.5),
+            WeightingSwap(epoch=2, weighting="logistic"),
+        ),
+        description="tpu_chips base cost x2.5 + logistic reserve curve at epoch 2",
+    )
+
+
+def flash_crowd(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Launch traffic: a wave of hot new bidders arrives at epoch 1, a
+    quarter of the fleet churns out at epoch 4."""
+    eco = make_fleet_economy(seed=seed, **eco_kwargs)
+    return eco, Scenario(
+        "flash_crowd", epochs=epochs,
+        events=(
+            Arrivals(epoch=1, num_agents=16, seed=seed + 100, value_mult=2.0),
+            FlashCrowd(epoch=2, value_scale=1.5, fraction=0.5, seed=seed + 200),
+            Departures(epoch=4, fraction=0.25, seed=seed + 300),
+        ),
+        description="hot arrivals at 1, value surge at 2, 25% churn at 4",
+    )
+
+
+def sticky_relocation(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Heterogeneous relocation costs: half the fleet is data-gravity-bound
+    (10x relocation cost), half is free to move — the paper's 'some agents
+    pay large premiums to stay' population, made extreme."""
+    eco = make_fleet_economy(seed=seed, **eco_kwargs)
+    rng = np.random.default_rng(seed + 1000)
+    sticky = rng.random(len(eco.pop)) < 0.5
+    eco.pop.relocation_cost[sticky] *= 10.0
+    eco.pop.relocation_cost[~sticky] *= 0.1
+    return eco, Scenario(
+        "sticky_relocation", epochs=epochs,
+        description="bimodal relocation costs: 50% sticky x10, 50% mobile x0.1",
+    )
+
+
+SCENARIOS: dict[str, Callable] = {
+    "congestion_relief": congestion_relief,
+    "cluster_drain": cluster_drain,
+    "price_shock": price_shock,
+    "flash_crowd": flash_crowd,
+    "sticky_relocation": sticky_relocation,
+}

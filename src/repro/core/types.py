@@ -215,16 +215,22 @@ def pack_bids(
     )
 
 
-def _sparse_supply_scale(idx: np.ndarray, val: np.ndarray, num_res: int) -> np.ndarray:
+def sparse_supply_scale(idx: np.ndarray, val: np.ndarray, num_res: int) -> np.ndarray:
     """|q| volume per resource from (idx, val) pairs, floored at 1.
 
     Accumulates in (u, b, k) order — the same fold order as the dense
     ``np.abs(bundles).sum(axis=(0, 1))`` — so dense and sparse packers of the
-    same bid book produce bit-identical normalizers.
+    same bid book produce bit-identical normalizers.  Public because packers
+    that assemble the (U, B, K) arrays directly (e.g. the vectorized
+    ``AgentPopulation`` bid-book builder) must normalize exactly like
+    :func:`pack_bids_sparse` does.
     """
     acc = np.zeros((num_res,), np.float32)
     np.add.at(acc, idx.reshape(-1), np.abs(val.astype(np.float32)).reshape(-1))
     return np.maximum(acc, 1.0)
+
+
+_sparse_supply_scale = sparse_supply_scale  # internal alias kept for callers
 
 
 def pack_bids_sparse(
@@ -292,6 +298,47 @@ def pack_bids_sparse(
         pi=jnp.asarray(np.asarray(pis, dtype=np.float32)),
         base_cost=jnp.asarray(np.asarray(base_cost, dtype=np.float32)),
         supply_scale=jnp.asarray(np.asarray(supply_scale, dtype=np.float32)),
+        num_resources=num_res,
+    )
+
+
+def sparse_problem_from_arrays(
+    idx: np.ndarray,
+    val: np.ndarray,
+    bundle_mask: np.ndarray,
+    pi: np.ndarray,
+    base_cost: np.ndarray,
+    supply_scale: np.ndarray | None = None,
+) -> SparseAuctionProblem:
+    """Wrap pre-assembled (U, B, K) arrays into a SparseAuctionProblem.
+
+    The fast path for vectorized packers (``AgentPopulation`` bid books) that
+    already emit ``pack_bids_sparse``'s exact layout: idx int32 ascending per
+    bundle with 0-padding, val float32 with 0-padding, π padded with −inf.
+    Only cheap invariants are checked — index range and shape agreement — so
+    a 10⁶-row book wraps in O(nnz) with no per-row Python.
+    """
+    idx = np.asarray(idx, np.int32)
+    val = np.asarray(val, np.float32)
+    num_res = int(np.asarray(base_cost).shape[0])
+    if idx.shape != val.shape or idx.ndim != 3:
+        raise ValueError(f"idx {idx.shape} / val {val.shape} must be (U, B, K)")
+    if bundle_mask.shape != idx.shape[:2]:
+        raise ValueError(f"bundle_mask {bundle_mask.shape} != {idx.shape[:2]}")
+    if idx.size and (idx.min() < 0 or idx.max() >= num_res):
+        raise ValueError(
+            f"bundle pool indices must be in [0, {num_res}), got "
+            f"[{idx.min()}, {idx.max()}]"
+        )
+    if supply_scale is None:
+        supply_scale = sparse_supply_scale(idx, val, num_res)
+    return SparseAuctionProblem(
+        idx=jnp.asarray(idx),
+        val=jnp.asarray(val),
+        bundle_mask=jnp.asarray(np.asarray(bundle_mask, bool)),
+        pi=jnp.asarray(np.asarray(pi, np.float32)),
+        base_cost=jnp.asarray(np.asarray(base_cost, np.float32)),
+        supply_scale=jnp.asarray(np.asarray(supply_scale, np.float32)),
         num_resources=num_res,
     )
 

@@ -1,0 +1,58 @@
+"""CI smoke for the runnable examples — the quickstart and market sim must
+not rot: they run in a fresh subprocess exactly as the README tells a user
+to run them, and their printed outcomes are asserted (convergence,
+SYSTEM-feasibility, and that the market actually moves agents)."""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(script: str, *args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+
+
+def test_quickstart_smoke():
+    out = _run_example("quickstart.py")
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "SYSTEM feasible: True" in out.stdout
+    assert "settled unit prices" in out.stdout
+
+
+def test_market_sim_smoke():
+    out = _run_example("market_sim.py", "--epochs", "4", "--seed", "3")
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "all epochs SYSTEM-feasible: True" in out.stdout
+    m = re.search(r"total migrations: (\d+)", out.stdout)
+    assert m, out.stdout
+    assert int(m.group(1)) > 0, "the market must move agents"
+
+
+def test_market_sim_scenario_smoke():
+    out = _run_example(
+        "market_sim.py", "--scenario", "congestion_relief",
+        "--epochs", "4", "--seed", "3",
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "all epochs converged: True" in out.stdout
+    assert "all epochs SYSTEM-feasible: True" in out.stdout
+    m = re.search(r"total migrations: (\d+)", out.stdout)
+    assert m and int(m.group(1)) > 0, out.stdout
+
+
+def test_market_sim_lists_scenarios():
+    out = _run_example("market_sim.py", "--list-scenarios")
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    for name in ("congestion_relief", "cluster_drain", "price_shock",
+                 "flash_crowd", "sticky_relocation"):
+        assert name in out.stdout

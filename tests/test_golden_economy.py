@@ -1,0 +1,57 @@
+"""Golden regression: settlement output pinned for make_fleet_economy.
+
+Each fixture in tests/golden/ snapshots three epochs of EpochStats (prices,
+reserves, premiums, migrations, surplus) for one seed.  A refactor that is
+supposed to be settlement-neutral must reproduce them exactly; a deliberate
+numerics change regenerates them with ``python tests/update_golden.py``
+(and says why in the commit).
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.economy import make_fleet_economy
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+SEEDS = (0, 3, 7)
+
+
+def _load(seed):
+    path = os.path.join(GOLDEN_DIR, f"economy_seed{seed}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check_scalar(actual, expected, ctx):
+    if isinstance(expected, float) and math.isnan(expected):
+        assert math.isnan(actual), ctx
+    else:
+        assert actual == expected, (ctx, actual, expected)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_epochstats_match_golden(seed):
+    golden = _load(seed)
+    eco = make_fleet_economy(seed=seed)
+    for rec in golden["stats"]:
+        s = eco.run_epoch()
+        ctx = (seed, rec["epoch"])
+        # float(np.float32) widens exactly, so equality here is bit-exact
+        np.testing.assert_array_equal(
+            s.prices.astype(np.float64), np.asarray(rec["prices"]),
+            err_msg=f"{ctx} prices",
+        )
+        np.testing.assert_array_equal(
+            s.reserve.astype(np.float64), np.asarray(rec["reserve"]),
+            err_msg=f"{ctx} reserve",
+        )
+        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus",
+                  "value_of_trade"):
+            _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
+        for k in ("epoch", "migrations", "rounds"):
+            _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
+        for k in ("converged", "system_ok"):
+            _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))

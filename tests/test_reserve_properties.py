@@ -17,3 +17,40 @@ from repro.core import CURVE_FAMILIES
 def test_property_weights_positive_finite(psi, name):
     v = float(CURVE_FAMILIES[name](np.float32(psi)))
     assert np.isfinite(v) and v > 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    psi_a=st.floats(0, 1),
+    psi_b=st.floats(0, 1),
+    name=st.sampled_from(list(CURVE_FAMILIES)),
+)
+def test_property_weights_monotone_in_utilization(psi_a, psi_b, name):
+    """§IV.A property 1 for every curve family: ψ₁ ≤ ψ₂ ⇒ φ(ψ₁) ≤ φ(ψ₂),
+    hence reserve prices are monotone in utilization under all weightings."""
+    lo, hi = sorted((psi_a, psi_b))
+    phi = CURVE_FAMILIES[name]
+    v_lo = float(phi(np.float32(lo)))
+    v_hi = float(phi(np.float32(hi)))
+    assert v_lo <= v_hi * (1 + 1e-6), (name, lo, hi, v_lo, v_hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    psi=st.lists(st.floats(0, 1), min_size=1, max_size=8),
+    name=st.sampled_from(list(CURVE_FAMILIES)),
+    cost=st.floats(0.01, 100.0),
+)
+def test_property_reserve_prices_monotone(psi, name, cost):
+    """reserve_prices itself (φ·c) preserves the utilization ordering for a
+    fixed base cost, under all three weightings."""
+    from repro.core import ResourcePool
+    from repro.core.reserve import reserve_prices
+
+    pools = [
+        ResourcePool("c", "r", base_cost=cost, utilization=p) for p in psi
+    ]
+    prices = reserve_prices(pools, CURVE_FAMILIES[name])
+    order = np.argsort(np.asarray(psi, np.float32), kind="stable")
+    sorted_prices = prices[order]
+    assert (np.diff(sorted_prices) >= -1e-6 * np.abs(sorted_prices[:-1])).all()

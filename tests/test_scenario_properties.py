@@ -1,0 +1,125 @@
+"""Hypothesis property tests for the scenario engine + economy invariants.
+
+Event streams are pure state transforms (no settlement), so these run fast:
+whatever events hypothesis throws at the economy, usage must stay inside
+[0, capacity], the population must never silently lose or gain placed
+agents, and capacity must stay non-negative.  Optional dependency — skipped
+when hypothesis is absent (see requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.economy import make_fleet_economy
+from repro.core.scenarios import (
+    Arrivals,
+    BaseCostChange,
+    CapacityShock,
+    Departures,
+    FlashCrowd,
+    WeightingSwap,
+)
+
+N_CLUSTERS = 4
+
+_events = st.one_of(
+    st.builds(
+        CapacityShock,
+        epoch=st.just(0),
+        cluster=st.integers(0, N_CLUSTERS - 1),
+        scale=st.floats(0.0, 2.0, allow_nan=False),
+        rtype=st.sampled_from([None, 0, 1, 2]),
+    ),
+    st.builds(
+        FlashCrowd,
+        epoch=st.just(0),
+        value_scale=st.floats(0.1, 5.0, allow_nan=False),
+        fraction=st.floats(0.0, 1.0, allow_nan=False),
+        cluster=st.sampled_from([None, 0, 1]),
+        seed=st.integers(0, 2**16),
+    ),
+    st.builds(
+        Arrivals,
+        epoch=st.just(0),
+        num_agents=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+        value_mult=st.floats(0.5, 3.0, allow_nan=False),
+    ),
+    st.builds(
+        Departures,
+        epoch=st.just(0),
+        fraction=st.floats(0.0, 1.0, allow_nan=False),
+        cluster=st.sampled_from([None, 0, 2]),
+        seed=st.integers(0, 2**16),
+    ),
+    st.builds(
+        BaseCostChange,
+        epoch=st.just(0),
+        rtype=st.integers(0, 2),
+        scale=st.floats(0.25, 4.0, allow_nan=False),
+    ),
+    st.builds(
+        WeightingSwap,
+        epoch=st.just(0),
+        weighting=st.sampled_from(["exp", "logistic", "piecewise"]),
+    ),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(events=st.lists(_events, max_size=6), seed=st.integers(0, 7))
+def test_any_event_stream_keeps_economy_physical(events, seed):
+    """Usage ∈ [0, capacity], capacity ≥ 0, population non-empty, and placed
+    agents conserved through arbitrary event streams."""
+    eco = make_fleet_economy(num_clusters=N_CLUSTERS, num_agents=12, seed=seed)
+    for ev in events:
+        placed_before = int((eco.pop.placed >= 0).sum())
+        rep = ev.apply(eco)
+        placed_after = int((eco.pop.placed >= 0).sum())
+        assert placed_after == placed_before + rep.placed_added - rep.placed_removed
+        assert (eco.usage >= -1e-9).all()
+        assert (eco.usage <= eco.capacity + 1e-9).all()
+        assert (eco.capacity >= 0).all()
+        assert len(eco.pop) >= 1
+        # population arrays stay consistent
+        assert len(eco.pop) == eco.pop.placed.shape[0] == eco.pop.req.shape[0]
+        assert (eco.pop.placed < eco.C).all() and (eco.pop.home < eco.C).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    frac=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**16),
+)
+def test_departures_free_exactly_their_usage(frac, seed):
+    """remove_agents subtracts exactly the leavers' held bundles (up to the
+    0-floor) and reports the placed-leaver count faithfully."""
+    eco = make_fleet_economy(num_clusters=N_CLUSTERS, num_agents=12, seed=3)
+    rng = np.random.default_rng(seed)
+    leave = rng.random(len(eco.pop)) < frac
+    held = leave & (eco.pop.placed >= 0)
+    expected = eco.usage.copy()
+    np.add.at(expected, eco.pop.placed[held], -eco.pop.req[held])
+    expected = np.maximum(expected, 0.0)
+    n_placed = eco.remove_agents(leave)
+    assert n_placed == int(held.sum())
+    np.testing.assert_array_equal(eco.usage, expected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), num=st.integers(1, 10))
+def test_arrivals_conserve_existing_state(seed, num):
+    """add_agents leaves existing agents' state untouched and appends."""
+    eco = make_fleet_economy(num_clusters=N_CLUSTERS, num_agents=12, seed=5)
+    placed0 = eco.pop.placed.copy()
+    value0 = eco.pop.value.copy()
+    from repro.core.markets import fleet_population
+
+    newcomers = fleet_population(num, eco.C, seed=seed)
+    eco.add_agents(newcomers)
+    assert len(eco.pop) == 12 + num
+    np.testing.assert_array_equal(eco.pop.placed[:12], placed0)
+    np.testing.assert_array_equal(eco.pop.value[:12], value0)
+    assert (eco.usage <= eco.capacity + 1e-9).all()

@@ -1,0 +1,60 @@
+"""Regenerate the golden EpochStats fixtures in tests/golden/.
+
+    PYTHONPATH=src python tests/update_golden.py
+
+Run this ONLY when settlement output is *supposed* to change (a deliberate
+mechanism/numerics change), and say so in the commit message — the fixtures
+exist so refactors that should be settlement-neutral (like packer rewrites)
+cannot silently shift prices, premiums, migrations, or surplus.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.core.economy import make_fleet_economy  # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+SEEDS = (0, 3, 7)
+EPOCHS = 3
+
+
+def snapshot(seed: int) -> dict:
+    eco = make_fleet_economy(seed=seed)
+    stats = []
+    for _ in range(EPOCHS):
+        s = eco.run_epoch()
+        stats.append(
+            {
+                "epoch": s.epoch,
+                # float() reprs round-trip exactly, so the JSON is bit-exact
+                "prices": [float(p) for p in s.prices],
+                "reserve": [float(p) for p in s.reserve],
+                "gamma_median": float(s.gamma_median),
+                "gamma_mean": float(s.gamma_mean),
+                "pct_settled": float(s.pct_settled),
+                "migrations": int(s.migrations),
+                "surplus": float(s.surplus),
+                "value_of_trade": float(s.value_of_trade),
+                "rounds": int(s.rounds),
+                "converged": bool(s.converged),
+                "system_ok": bool(s.system_ok),
+            }
+        )
+    return {"seed": seed, "epochs": EPOCHS, "stats": stats}
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for seed in SEEDS:
+        path = os.path.join(GOLDEN_DIR, f"economy_seed{seed}.json")
+        with open(path, "w") as f:
+            json.dump(snapshot(seed), f, indent=1, allow_nan=True)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
