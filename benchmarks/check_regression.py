@@ -1,0 +1,60 @@
+"""CI benchmark regression guard over the BENCH_settlement.json trajectory.
+
+    PYTHONPATH=src python -m benchmarks.check_regression economy_epoch bid_eval_sparse
+
+For each named benchmark, compares the *latest* record's ``us_per_call``
+against the most recent earlier record of the same name and fails (exit 1)
+on a > ``--threshold`` (default 1.5×) slowdown.  Benchmarks with fewer than
+two records are skipped — a brand-new benchmark has no baseline to regress
+against.  Run it right after a ``--json`` benchmark pass, so the comparison
+is fresh-run vs last-recorded.
+
+Caveat: records carry no machine metadata, so a comparison across hosts
+(dev container vs CI runner) or across workload overrides
+(ECONOMY_EPOCH_AGENTS) measures the environment as much as the code — the
+1.5× default leaves headroom for same-class hardware, and the guard is a
+tripwire, not a verdict: on a failure, rerun on the baseline record's host
+before treating it as a code regression.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .run import JSON_PATH, _load_records
+
+
+def check(names: list[str], threshold: float, path: str = JSON_PATH) -> int:
+    records = _load_records(path)
+    failed = False
+    for name in names:
+        same = [r for r in records if r.get("name") == name]
+        if len(same) < 2:
+            print(f"# {name}: {len(same)} record(s) — no prior baseline, skipped")
+            continue
+        prev, last = same[-2], same[-1]
+        ratio = last["us_per_call"] / max(prev["us_per_call"], 1e-9)
+        line = (
+            f"{name}: {last['us_per_call']:.1f} us (@{last['git_sha']}) vs "
+            f"{prev['us_per_call']:.1f} us (@{prev['git_sha']}) = {ratio:.2f}x"
+        )
+        if ratio > threshold:
+            print(f"REGRESSION {line} > {threshold}x", file=sys.stderr)
+            failed = True
+        else:
+            print(f"ok {line}")
+    return 1 if failed else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="+", help="benchmark names to guard")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed us_per_call ratio vs the prior record")
+    ap.add_argument("--path", default=JSON_PATH)
+    args = ap.parse_args()
+    sys.exit(check(args.names, args.threshold, args.path))
+
+
+if __name__ == "__main__":
+    main()

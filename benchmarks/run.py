@@ -213,9 +213,10 @@ def economy_epoch():
     """AgentPopulation epoch throughput (ROADMAP: 'millions of users'): one
     full auction epoch — vectorized bid-book pack + sparse settle, 1 device —
     at 10k / 100k / 1M agents, against the legacy per-agent loop (pack +
-    per-agent apply) at the sizes where the loop is still runnable.  The 1M
-    case is round-capped like auction_scaling's largest case.  Override
-    sizes with ECONOMY_EPOCH_AGENTS=10000,100000 (comma-separated).
+    per-agent apply) at the sizes where the loop is still runnable.  Every
+    size must report converged=True (asserted): the adaptive clock schedule
+    replaced the max_rounds=40 cap the fixed coarse clock used to hit at 1M.
+    Override sizes with ECONOMY_EPOCH_AGENTS=10000,100000 (comma-separated).
     us_per_call: vectorized epoch wall at the last (largest) size run.
     derived: loop/vectorized epoch speedup at the largest loop-compared
     size (null when every size is beyond the loop baseline's cap)."""
@@ -228,9 +229,13 @@ def economy_epoch():
     env_sizes = os.environ.get("ECONOMY_EPOCH_AGENTS")
     if env_sizes:
         sizes = [int(s) for s in env_sizes.split(",") if s]
-    # coarse ticks, round-capped: big markets are an operator-knob question,
-    # and the benchmark measures epoch machinery, not clock patience
-    cfg = ClockConfig(max_rounds=40, alpha=0.6, delta=0.25)
+    # coarse ticks with the adaptive schedule: the fixed coarse clock used to
+    # hit max_rounds=40 unconverged at 1M agents; the accelerating step +
+    # decaying cap clears the same book in ~34 rounds, so every size now
+    # settles to an actual equilibrium (converged=True) instead of a cap
+    cfg = ClockConfig(
+        max_rounds=2000, alpha=0.6, delta=0.25, alpha_growth=1.6, delta_decay=0.6
+    )
     loop_max = 100_000  # beyond this the per-agent loop is pointless to wait on
 
     fleet_economy(512, seed=0, clock=cfg).run_epoch()  # warm jax/numpy init
@@ -267,7 +272,42 @@ def economy_epoch():
             speedup = round(t_loop / best_vec, 1)
         us_vec_largest = best_vec * 1e6  # last (largest) size wins
         print(line, file=sys.stderr)
+        assert bool(s_v.converged), (
+            f"economy_epoch at {n} agents hit max_rounds — the adaptive "
+            "clock is supposed to converge every size"
+        )
     return us_vec_largest, speedup
+
+
+def economy_epoch_warm():
+    """Warm-started repeated auctions (ROADMAP: 'warm-start prices from the
+    previous epoch'): a 4-epoch run under the default fine-step clock, cold
+    (reserve-curve restart, the paper's baseline) vs warm
+    (Economy(warm_start=True): each clock seeded with max(p_prev, reserve)).
+    Override the fleet size with ECONOMY_EPOCH_WARM_AGENTS.
+    us_per_call: mean warm epoch wall.  derived: cold/warm total clock
+    rounds — the mechanism-cost saving of carrying price memory."""
+    import time as _time
+
+    from repro.core import fleet_economy
+
+    n = int(os.environ.get("ECONOMY_EPOCH_WARM_AGENTS", 20_000))
+    epochs = 4
+    totals, walls = {}, {}
+    for warm in (False, True):
+        eco = fleet_economy(n, seed=0, warm_start=warm)
+        t0 = _time.perf_counter()
+        stats = [eco.run_epoch() for _ in range(epochs)]
+        walls[warm] = _time.perf_counter() - t0
+        totals[warm] = sum(s.rounds for s in stats)
+        assert all(s.converged for s in stats)
+        print(
+            f"#   {n} agents, {'warm' if warm else 'cold'}: rounds "
+            f"{[s.rounds for s in stats]} (total {totals[warm]}), "
+            f"wall {walls[warm]:.1f} s",
+            file=sys.stderr,
+        )
+    return walls[True] / epochs * 1e6, round(totals[False] / totals[True], 1)
 
 
 def bid_eval_round():
@@ -337,6 +377,72 @@ def bid_eval_sparse():
     return us_sp, round(us_d / us_sp, 1)
 
 
+def bid_eval_csr():
+    """Variable-K settlement hot loop: the same 100k bids × 1k pools with a
+    *skewed* bundle-size profile (K ∈ {1..16}, geometric with mean ≈ 4) —
+    the book shape K_max padding is worst at.  Times one CSR proxy round
+    (csr_proxy_demand with the scatter-free CSRDemandAux layouts, jnp on
+    CPU) against the K_max=16 padded path on the identical book.
+    derived: padded/CSR speedup (us_per_call ratio)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import csr_demand_aux, csr_proxy_demand, csr_problem_from_arrays
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    U, B, R = 100_000, 4, 1_000
+    counts = np.minimum(rng.geometric(0.25, size=(U, B)), 16).astype(np.int64)
+    K = int(counts.max())
+    idx_np = np.zeros((U, B, K), np.int32)
+    val_np = np.zeros((U, B, K), np.float32)
+    for k in range(K):
+        live = counts > k
+        idx_np[..., k] = np.where(live, rng.integers(0, R, size=(U, B)), 0)
+        val_np[..., k] = np.where(live, rng.normal(size=(U, B)), 0.0)
+    mask_np = rng.random((U, B)) < 0.9
+    pi_np = (rng.normal(size=(U,)) * 5).astype(np.float32)
+    prices = jnp.asarray(np.abs(rng.normal(size=(R,))).astype(np.float32))
+
+    # flat CSR streams of the same book (bundle-major, same k order)
+    offsets = np.zeros(U * B + 1, np.int64)
+    offsets[1:] = np.cumsum(counts.reshape(-1))
+    nnz = int(offsets[-1])
+    flat_idx = np.zeros(nnz, np.int32)
+    flat_val = np.zeros(nnz, np.float32)
+    starts = offsets[:-1].reshape(U, B)
+    for k in range(K):
+        live = counts > k
+        pos = (starts + k)[live]
+        flat_idx[pos] = idx_np[..., k][live]
+        flat_val[pos] = val_np[..., k][live]
+    prob = csr_problem_from_arrays(
+        flat_idx, flat_val, offsets, mask_np, pi_np,
+        base_cost=np.ones(R, np.float32),
+    )
+    aux = csr_demand_aux(prob)
+    f_csr = jax.jit(csr_proxy_demand)
+    f_csr(prob, prices, aux)[0].block_until_ready()
+    us_csr = _timeit(
+        lambda: f_csr(prob, prices, aux)[0].block_until_ready(), n=5, warmup=1
+    )
+
+    idx, val = jnp.asarray(idx_np), jnp.asarray(val_np)
+    mask, pi = jnp.asarray(mask_np), jnp.asarray(pi_np)
+    f_pad = jax.jit(
+        lambda i, v, m, p, pr: ops.sparse_bid_eval(i, v, m, p, pr, R, backend="jnp")[0]
+    )
+    f_pad(idx, val, mask, pi, prices).block_until_ready()
+    us_pad = _timeit(
+        lambda: f_pad(idx, val, mask, pi, prices).block_until_ready(), n=5, warmup=1
+    )
+    print(
+        f"# bid_eval_csr: nnz {nnz} (vs {U * B * K} padded slots), csr "
+        f"{us_csr:.0f} us/round, padded {us_pad:.0f} us/round",
+        file=sys.stderr,
+    )
+    return us_csr, round(us_pad / us_csr, 1)
+
+
 def roofline_summary():
     """§Roofline — aggregate the dry-run matrix artifacts.
     derived: count of single-pod cells whose compile succeeded."""
@@ -367,8 +473,10 @@ BENCHES = {
     "auction_scaling": auction_scaling,
     "auction_scaling_sharded": auction_scaling_sharded,
     "economy_epoch": economy_epoch,
+    "economy_epoch_warm": economy_epoch_warm,
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
+    "bid_eval_csr": bid_eval_csr,
     "roofline_summary": roofline_summary,
 }
 
@@ -390,11 +498,22 @@ def _git_sha() -> str:
 
 def _load_records(path: str) -> list:
     """Existing trajectory records, or [] when absent/corrupt (never raise —
-    a broken file must not block recording fresh numbers)."""
+    a broken file must not block recording fresh numbers).
+
+    Every record is stamped: pre-PR-2 records predate the git_sha field, so
+    they are normalized to ``"unknown"`` on load — downstream consumers (the
+    CI regression guard, perf-trajectory plots) can rely on the key existing
+    unconditionally.
+    """
     try:
         with open(path) as f:
             prev = json.load(f)
-        return prev if isinstance(prev, list) else []
+        if not isinstance(prev, list):
+            return []
+        for rec in prev:
+            if isinstance(rec, dict):
+                rec.setdefault("git_sha", "unknown")
+        return prev
     except (OSError, ValueError):
         return []
 

@@ -11,6 +11,7 @@ Or run a library scenario (outages, flash crowds, price shocks, ...):
     PYTHONPATH=src python examples/market_sim.py --list-scenarios
 """
 import argparse
+import sys
 
 import numpy as np
 
@@ -30,8 +31,14 @@ def run_scenario_mode(args) -> None:
           f"{[round(s, 3) for s in res.util_spread]}")
     print(f"spread shrank: {res.spread_shrank}")
     print(f"total migrations: {res.total_migrations}")
+    print(f"total clock rounds: {res.total_rounds}")
     print(f"all epochs converged: {res.converged}")
     print(f"all epochs SYSTEM-feasible: {res.feasible}")
+    if not res.converged:
+        starved = [s.epoch for s in res.stats if not s.converged]
+        print(f"*** WARNING: epochs {starved} hit max_rounds without "
+              "clearing — prices are truncated, not settled",
+              file=sys.stderr)
 
 
 def main():
@@ -59,13 +66,20 @@ def main():
           f"{(eco.utilization().mean(axis=1) * 100).round(0).tolist()}")
 
     print("\n== Table I: bid premium statistics ==")
-    print("auction  median(γ)  mean(γ)  %settled  migrations  rounds")
+    print("auction  median(γ)  mean(γ)  %settled  migrations  rounds  converged")
     stats = []
     for _ in range(args.epochs):
         s = eco.run_epoch()
         stats.append(s)
         print(f"  {s.epoch:2d}     {s.gamma_median:8.4f} {s.gamma_mean:8.4f}  "
-              f"{s.pct_settled:6.1f}%   {s.migrations:4d}       {s.rounds}")
+              f"{s.pct_settled:6.1f}%   {s.migrations:4d}       {s.rounds:5d}  "
+              f"{s.converged}")
+        if not s.converged:
+            print(f"  *** WARNING: epoch {s.epoch} hit max_rounds="
+                  f"{eco.clock.max_rounds} without clearing — prices are "
+                  "truncated, not settled (raise max_rounds, enable the "
+                  "adaptive schedule, or warm-start the economy)",
+                  file=sys.stderr)
 
     print("\n== Fig 6: settled price / former fixed price (last auction) ==")
     r = stats[-1].price_ratio.reshape(eco.C, eco.T)

@@ -45,9 +45,14 @@ from ..sharding import shard_map
 from .types import (
     AuctionProblem,
     AuctionResult,
+    CSRAuctionProblem,
+    CSRDemandAux,
     SparseAuctionProblem,
     SparseAuctionResult,
+    csr_demand_aux,
+    csr_padded_views,
     pad_users,
+    padded_from_csr,
 )
 
 # dense demand_fn(bundles, mask, pi, prices) -> (x (U,R), chosen (U,), active (U,))
@@ -312,6 +317,121 @@ def blocked_demand_fn(num_blocks: int = 8) -> DemandFn:
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Variable-K CSR demand evaluation
+# ---------------------------------------------------------------------------
+
+
+def csr_proxy_demand(
+    problem: CSRAuctionProblem,
+    prices: jax.Array,
+    aux: CSRDemandAux | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """O(nnz) proxy demand on the flat CSR encoding → (z, chosen, active).
+
+    Without ``aux`` this is the readable segment formulation: per-element
+    price gathers, a sorted ``segment_sum`` into per-bundle costs, and a
+    keep-masked scatter into z — the right shape for TPU, where scatters
+    vectorize.  With ``aux`` (see :class:`~repro.core.types.CSRDemandAux`)
+    every large scatter is replaced by pack-time reorderings: costs fold as
+    ``k_bound`` prefix-slice adds over the count-sorted k-major stream, and z
+    reduces pool-major in dense ``chunk``-wide tiles — which is what makes
+    the CSR round beat the K_max-padded round on CPU instead of losing to
+    it.  Both variants select identically; z differs from the padded
+    scatter's association only within a pool (float-close, like every
+    non-exact demand path).  Scalar-π and vector-π are both supported.
+    """
+    mask, pi = problem.bundle_mask, problem.pi
+    num_users, num_bundles = mask.shape
+    num_res = problem.num_resources
+    prices = prices.astype(jnp.float32)
+
+    if problem.nnz == 0:
+        costs = jnp.zeros((num_users, num_bundles), jnp.float32)
+    elif aux is None:
+        prod = problem.val * prices[problem.idx]
+        costs = jax.ops.segment_sum(
+            prod,
+            problem.rows,
+            num_segments=num_users * num_bundles,
+            indices_are_sorted=True,
+        ).reshape(num_users, num_bundles)
+    else:
+        prod = aux.kmaj_val * prices[aux.kmaj_idx]
+        costs_sorted = jnp.zeros((num_users * num_bundles,), jnp.float32)
+        off = 0
+        for m in aux.m_k:
+            costs_sorted = costs_sorted.at[:m].add(
+                jax.lax.dynamic_slice(prod, (off,), (m,))
+            )
+            off += m
+        costs = costs_sorted[aux.inv_count_perm].reshape(num_users, num_bundles)
+    costs = jnp.where(mask, costs, jnp.inf)
+
+    if pi.ndim == 1:
+        bhat = jnp.argmin(costs, axis=1)
+        cost_hat = jnp.take_along_axis(costs, bhat[:, None], axis=1)[:, 0]
+        active = cost_hat <= pi
+    else:
+        surplus = jnp.where(mask, pi - costs, -jnp.inf)
+        bhat = jnp.argmax(surplus, axis=1)
+        s_hat = jnp.take_along_axis(surplus, bhat[:, None], axis=1)[:, 0]
+        active = s_hat >= 0.0
+    chosen = jnp.where(active, bhat, -1)
+
+    if problem.nnz == 0:
+        z = jnp.zeros((num_res,), jnp.float32)
+        return z, chosen, active
+    b_of = problem.rows % num_bundles
+    u_of = problem.rows // num_bundles
+    kept = jnp.where(chosen[u_of] == b_of, problem.val, 0.0)  # -1 never matches
+    if aux is None:
+        z = jnp.zeros((num_res,), jnp.float32).at[problem.idx].add(kept)
+    else:
+        chunk_sums = (
+            jnp.where(aux.pool_live, kept[aux.pool_pos], 0.0)
+            .reshape(-1, aux.chunk)
+            .sum(axis=1)
+        )
+        z = jnp.zeros((num_res,), jnp.float32).at[aux.chunk_pool].add(chunk_sums)
+    return z, chosen, active
+
+
+csr_proxy_demand.csr_signature = True  # type: ignore[attr-defined]
+csr_proxy_demand.csr_wants_aux = True  # type: ignore[attr-defined]
+
+
+def _csr_settle(
+    problem: CSRAuctionProblem,
+    prices: jax.Array,
+    chosen: jax.Array,
+    active: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Award the chosen bundles from the flat streams → padded (U, k_bound)
+    allocations, same result layout as the padded settle."""
+    num_users, num_bundles = problem.bundle_mask.shape
+    k = problem.k_bound
+    starts = problem.offsets[:-1].reshape(num_users, num_bundles)
+    counts = (problem.offsets[1:] - problem.offsets[:-1]).reshape(
+        num_users, num_bundles
+    )
+    bsel = jnp.maximum(chosen, 0)
+    start_u = jnp.take_along_axis(starts, bsel[:, None], axis=1)[:, 0]
+    count_u = jnp.take_along_axis(counts, bsel[:, None], axis=1)[:, 0]
+    kk = jnp.arange(k, dtype=start_u.dtype)
+    live = kk[None, :] < count_u[:, None]
+    if problem.nnz == 0:
+        alloc_idx = jnp.zeros((num_users, k), jnp.int32)
+        alloc_val = jnp.zeros((num_users, k), jnp.float32)
+    else:
+        pos = jnp.clip(start_u[:, None] + kk[None, :], 0, problem.nnz - 1)
+        alloc_idx = jnp.where(live, problem.idx[pos], 0)
+        alloc_val = jnp.where(live, problem.val[pos], 0.0)
+    alloc_val = alloc_val.astype(jnp.float32) * active[:, None]
+    payments = jnp.sum(alloc_val * prices[alloc_idx], axis=-1)
+    return alloc_idx, alloc_val, payments
+
+
 @dataclasses.dataclass(frozen=True)
 class ClockConfig:
     """Auction hyper-parameters (paper §III.C.2)."""
@@ -336,6 +456,25 @@ class ClockConfig:
     # ~delta/2^k and is what lets a tie_eps-perturbed tie actually split
     # (without it the final coarse step drops all tied bidders together).
     refine_rounds: int = 0
+    # Adaptive step schedule (both default to 1.0 = off, which keeps the loop
+    # body — and therefore every pinned price trajectory — bit-identical to
+    # the fixed schedule).  alpha_growth > 1 multiplies a per-resource step
+    # accelerator every consecutive round a resource stays over-demanded
+    # (capped at accel_cap, reset to 1 the moment it is not), so a clock that
+    # would crawl at the step floor covers the same ground geometrically.
+    # delta_decay < 1 shrinks that resource's per-round cap fraction each
+    # time its excess-demand sign flips from + to ≤ 0 (floored at
+    # delta_floor_frac·delta), so re-entrant demand is approached in ever
+    # finer steps — bisection-like convergence instead of limit-cycling at
+    # the coarse tick.
+    alpha_growth: float = 1.0
+    accel_cap: float = 64.0
+    delta_decay: float = 1.0
+    delta_floor_frac: float = 0.05
+
+    @property
+    def adaptive(self) -> bool:
+        return self.alpha_growth != 1.0 or self.delta_decay != 1.0
 
 
 def _apply_tie_jitter(pi: jax.Array, config: ClockConfig) -> jax.Array:
@@ -360,6 +499,13 @@ def _run_clock(
     Shared verbatim between :func:`clock_auction` and
     :func:`sharded_clock_auction`: only ``excess`` differs, so the price
     trajectory is identical whenever the two paths produce identical z.
+
+    With ``config.adaptive`` the loop carries two extra per-resource state
+    vectors — a step accelerator and a decaying cap fraction (see
+    :class:`ClockConfig`) — and a warm or cold start converges in a fraction
+    of the fixed schedule's rounds.  The non-adaptive branch below is the
+    original loop body, untouched, so default-config trajectories stay
+    bit-identical.
     """
     alpha = jnp.float32(config.alpha)
     delta = jnp.float32(config.delta)
@@ -367,26 +513,75 @@ def _run_clock(
     tol = jnp.float32(config.tol)
     floor = jnp.float32(config.step_floor_frac)
 
-    # eq. (3): additive step ∝ normalized excess demand, capped at a fixed
-    # fraction of the current price, scaled by base cost (the paper's
-    # normalization so cheap resources don't outrun expensive ones).
-    def cond2(state):
-        t, _, _, done = state
-        return jnp.logical_and(~done, t < config.max_rounds)
-
-    def body2(state):
-        t, p, p_prev, _ = state
-        z = excess(p)
-        done = jnp.all(z <= tol)
-        rel = jnp.maximum(alpha * jnp.maximum(z, 0.0) / s, floor)
-        step = jnp.minimum(rel * c, delta * jnp.maximum(p, eps * c))
-        p_next = jnp.where(z > tol, p + step, p)
-        return t + 1, jnp.where(done, p, p_next), jnp.where(done, p_prev, p), done
-
     t0 = jnp.int32(0)
     done0 = jnp.asarray(False)
     p0 = start_prices.astype(jnp.float32)
-    rounds, prices, p_prev, _ = jax.lax.while_loop(cond2, body2, (t0, p0, p0, done0))
+
+    # eq. (3): additive step ∝ normalized excess demand, capped at a fixed
+    # fraction of the current price, scaled by base cost (the paper's
+    # normalization so cheap resources don't outrun expensive ones).
+    if not config.adaptive:
+
+        def cond2(state):
+            t, _, _, done = state
+            return jnp.logical_and(~done, t < config.max_rounds)
+
+        def body2(state):
+            t, p, p_prev, _ = state
+            z = excess(p)
+            done = jnp.all(z <= tol)
+            rel = jnp.maximum(alpha * jnp.maximum(z, 0.0) / s, floor)
+            step = jnp.minimum(rel * c, delta * jnp.maximum(p, eps * c))
+            p_next = jnp.where(z > tol, p + step, p)
+            return t + 1, jnp.where(done, p, p_next), jnp.where(done, p_prev, p), done
+
+        rounds, prices, p_prev, _ = jax.lax.while_loop(
+            cond2, body2, (t0, p0, p0, done0)
+        )
+    else:
+        growth = jnp.float32(config.alpha_growth)
+        decay = jnp.float32(config.delta_decay)
+        accel_cap = jnp.float32(config.accel_cap)
+        dfloor = jnp.float32(config.delta_floor_frac) * delta
+
+        def cond2(state):
+            t = state[0]
+            done = state[3]
+            return jnp.logical_and(~done, t < config.max_rounds)
+
+        def body2(state):
+            t, p, p_prev, _, accel, dcap, prev_pos = state
+            z = excess(p)
+            done = jnp.all(z <= tol)
+            pos = z > tol
+            # this round steps with the accumulated accelerator; the state
+            # update below grows it while the sign holds and resets it the
+            # moment the resource clears
+            rel = jnp.maximum(alpha * jnp.maximum(z, 0.0) / s, floor) * accel
+            step = jnp.minimum(rel * c, dcap * jnp.maximum(p, eps * c))
+            p_next = jnp.where(pos, p + step, p)
+            accel_n = jnp.where(
+                pos & prev_pos, jnp.minimum(accel * growth, accel_cap), 1.0
+            )
+            dcap_n = jnp.where(
+                prev_pos & ~pos, jnp.maximum(dcap * decay, dfloor), dcap
+            )
+            return (
+                t + 1,
+                jnp.where(done, p, p_next),
+                jnp.where(done, p_prev, p),
+                done,
+                accel_n,
+                dcap_n,
+                pos,
+            )
+
+        accel0 = jnp.ones_like(p0)
+        dcap0 = jnp.full_like(p0, delta)
+        pos0 = jnp.zeros(p0.shape, bool)
+        rounds, prices, p_prev, _, _, _, _ = jax.lax.while_loop(
+            cond2, body2, (t0, p0, p0, done0, accel0, dcap0, pos0)
+        )
 
     if config.refine_rounds > 0:
         # λ-bisection on the final segment: λ=1 clears (post-loop prices),
@@ -439,14 +634,12 @@ def _sparse_settle(
     return alloc_idx, alloc_val, payments
 
 
-@functools.partial(
-    jax.jit, static_argnames=("config", "demand_fn"), donate_argnums=()
-)
 def clock_auction(
-    problem: AuctionProblem | SparseAuctionProblem,
+    problem: AuctionProblem | SparseAuctionProblem | CSRAuctionProblem,
     start_prices: jax.Array,
     config: ClockConfig = ClockConfig(),
     demand_fn: DemandFn | None = None,
+    csr_aux: CSRDemandAux | None = None,
 ) -> AuctionResult | SparseAuctionResult:
     """Run Algorithm 1 to convergence (or ``max_rounds``) and settle.
 
@@ -454,9 +647,57 @@ def clock_auction(
     ``AuctionResult``; sparse problems evaluate in O(U·B·K) and settle to a
     ``SparseAuctionResult`` whose allocations stay in (idx, val) form.  The
     demand_fn must match the problem encoding (sparse demand fns carry a
-    ``sparse_signature`` attribute; ``None`` selects the matching
-    pure-jnp proxy).
+    ``sparse_signature`` attribute, CSR demand fns ``csr_signature``;
+    ``None`` selects the matching pure-jnp proxy).
+
+    CSR problems settle two ways.  A ``csr_signature`` demand fn (default:
+    :func:`csr_proxy_demand`) evaluates the flat streams natively in O(nnz);
+    ``csr_aux`` (built automatically for concrete problems) supplies the
+    scatter-free layouts.  A padded ``sparse_signature`` demand fn (the
+    exact/blocked settlement family) runs on the in-trace padded
+    reconstruction instead — the identical program the K_max-padded book
+    compiles — so CSR settlement through those fns is *bit-identical* to
+    padded settlement of the same book.
     """
+    if isinstance(problem, CSRAuctionProblem):
+        if demand_fn is None:
+            demand_fn = csr_proxy_demand
+        if getattr(demand_fn, "sparse_signature", False):
+            # settlement-grade padded fns: reconstruct the padded layout
+            # in-trace and run the unchanged padded program (bit-identical)
+            return _clock_auction_csr_padded(problem, start_prices, config, demand_fn)
+        if not getattr(demand_fn, "csr_signature", False):
+            raise TypeError(
+                f"demand_fn {demand_fn} does not match the CSR problem encoding"
+            )
+        if (
+            csr_aux is None
+            and getattr(demand_fn, "csr_wants_aux", False)
+            and not isinstance(problem.idx, jax.core.Tracer)
+        ):
+            # only fns that consume the scatter-free layouts pay the pack-time
+            # argsorts (the kernel adapters' compare-and-add z never scatters)
+            csr_aux = csr_demand_aux(problem)
+        return _clock_auction_csr_native(
+            problem, start_prices, config, demand_fn, csr_aux
+        )
+    if getattr(demand_fn, "csr_signature", False):
+        raise TypeError(
+            f"demand_fn {demand_fn} evaluates CSR problems, got "
+            f"{type(problem).__name__}"
+        )
+    return _clock_auction_jit(problem, start_prices, config, demand_fn)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("config", "demand_fn"), donate_argnums=()
+)
+def _clock_auction_jit(
+    problem: AuctionProblem | SparseAuctionProblem,
+    start_prices: jax.Array,
+    config: ClockConfig = ClockConfig(),
+    demand_fn: DemandFn | None = None,
+) -> AuctionResult | SparseAuctionResult:
     is_sparse = isinstance(problem, SparseAuctionProblem)
     mask, pi = problem.bundle_mask, problem.pi
     if config.break_ties:
@@ -513,6 +754,72 @@ def clock_auction(
     return AuctionResult(
         prices=prices,
         allocations=x,
+        chosen_bundle=chosen,
+        won=active,
+        payments=payments,
+        excess_demand=z,
+        rounds=rounds,
+        converged=jnp.all(z <= tol),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config", "demand_fn"))
+def _clock_auction_csr_padded(
+    problem: CSRAuctionProblem,
+    start_prices: jax.Array,
+    config: ClockConfig,
+    demand_fn: DemandFn,
+) -> SparseAuctionResult:
+    """CSR settlement through a padded-signature demand fn.
+
+    The padded (U, B, k_bound) views are reconstructed once in-trace —
+    loop-invariant, so the clock never re-gathers them — and from there the
+    program is the padded clock verbatim: identical selection, identical z
+    fold, identical settle, hence bit-identical output.
+    """
+    idx, val = csr_padded_views(problem)
+    padded = SparseAuctionProblem(
+        idx=idx,
+        val=val,
+        bundle_mask=problem.bundle_mask,
+        pi=problem.pi,
+        base_cost=problem.base_cost,
+        supply_scale=problem.supply_scale,
+        num_resources=problem.num_resources,
+    )
+    return _clock_auction_jit(padded, start_prices, config, demand_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "demand_fn"))
+def _clock_auction_csr_native(
+    problem: CSRAuctionProblem,
+    start_prices: jax.Array,
+    config: ClockConfig,
+    demand_fn: DemandFn,
+    aux: CSRDemandAux | None,
+) -> SparseAuctionResult:
+    pi = problem.pi
+    if config.break_ties:
+        pi = _apply_tie_jitter(pi, config)
+        problem = dataclasses.replace(problem, pi=pi)
+
+    def demand(prices):
+        return demand_fn(problem, prices, aux)
+
+    def excess(prices):
+        z, _, _ = demand(prices)
+        return z
+
+    rounds, prices = _run_clock(
+        excess, start_prices, config, problem.base_cost, problem.supply_scale
+    )
+    tol = jnp.float32(config.tol)
+    z, chosen, active = demand(prices)
+    alloc_idx, alloc_val, payments = _csr_settle(problem, prices, chosen, active)
+    return SparseAuctionResult(
+        prices=prices,
+        alloc_idx=alloc_idx,
+        alloc_val=alloc_val,
         chosen_bundle=chosen,
         won=active,
         payments=payments,
@@ -665,6 +972,12 @@ def sharded_clock_auction(
 
     ``mesh=None`` shards over all local devices (``users_mesh()``).
     """
+    if isinstance(problem, CSRAuctionProblem):
+        # CSR's variable-length rows don't split evenly over a mesh axis;
+        # shard the padded reconstruction instead.  The conversion is exact
+        # (see csr_padded_views), so the cross-device bit-identity guarantee
+        # carries over to CSR books unchanged.
+        problem = padded_from_csr(problem)
     if not isinstance(problem, SparseAuctionProblem):
         raise TypeError(
             "sharded_clock_auction needs a SparseAuctionProblem — dense "
@@ -708,7 +1021,7 @@ def sharded_clock_auction(
 
 
 def verify_system(
-    problem: AuctionProblem | SparseAuctionProblem,
+    problem: AuctionProblem | SparseAuctionProblem | CSRAuctionProblem,
     result: AuctionResult | SparseAuctionResult,
     atol: float = 1e-3,
 ) -> dict[str, bool]:
@@ -726,13 +1039,17 @@ def verify_system(
 
 @functools.partial(jax.jit, static_argnames=("atol",))
 def _verify_system_checks(
-    problem: AuctionProblem | SparseAuctionProblem,
+    problem: AuctionProblem | SparseAuctionProblem | CSRAuctionProblem,
     result: AuctionResult | SparseAuctionResult,
     atol: float,
 ) -> dict[str, jax.Array]:
     mask, pi = problem.bundle_mask, problem.pi
     p, won = result.prices, result.won
-    if isinstance(problem, SparseAuctionProblem):
+    if isinstance(problem, CSRAuctionProblem):
+        vidx, vval = csr_padded_views(problem)  # same checks as padded, exactly
+        costs = sparse_bundle_costs(vidx, vval, mask, p)
+        lost_zero = jnp.all(result.alloc_val == 0, axis=1)
+    elif isinstance(problem, SparseAuctionProblem):
         costs = sparse_bundle_costs(problem.idx, problem.val, mask, p)
         lost_zero = jnp.all(result.alloc_val == 0, axis=1)
     else:
@@ -786,7 +1103,7 @@ def _verify_system_checks(
 
 
 def surplus_and_trade(
-    problem: AuctionProblem | SparseAuctionProblem,
+    problem: AuctionProblem | SparseAuctionProblem | CSRAuctionProblem,
     result: AuctionResult | SparseAuctionResult,
 ):
     """Realized total surplus and value-of-trade (paper §III.B objectives).

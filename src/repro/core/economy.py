@@ -49,7 +49,7 @@ from .auction import (
     verify_system,
 )
 from .reserve import DEFAULT_WEIGHTING, WeightingFn, reserve_prices
-from .types import ResourcePool, pack_bids_sparse, sparse_problem_from_arrays
+from .types import ResourcePool, csr_problem_from_arrays, pack_bids_sparse
 
 
 @dataclasses.dataclass
@@ -242,6 +242,9 @@ class EpochStats:
     rounds: int
     converged: bool
     system_ok: bool
+    # True when the clock was seeded with max(p_prev, reserve) instead of the
+    # reserve curve (Economy(warm_start=True), second epoch onward)
+    warm_started: bool = False
 
 
 # row kinds in a packed bid book
@@ -257,7 +260,7 @@ class BidBook:
     re-deriving who bid what.
     """
 
-    problem: object  # SparseAuctionProblem
+    problem: object  # CSRAuctionProblem (vectorized packer) / SparseAuctionProblem (loop)
     pi_mat: np.ndarray  # (U, B) float32, −inf padded (host copy for stats)
     row_kind: np.ndarray  # (U,) int8 ∈ {KIND_OP, KIND_SELL, KIND_BUY}
     row_agent: np.ndarray  # (U,) int64 agent index (−1 for operator rows)
@@ -285,6 +288,7 @@ class Economy:
         settle_mesh=None,
         settle_blocks: int = 8,
         packer: str = "vectorized",
+        warm_start: bool = False,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -306,6 +310,15 @@ class Economy:
         # device counts dividing settle_blocks — see sparse_proxy_demand_blocked.
         self.settle_mesh = settle_mesh
         self.settle_blocks = settle_blocks
+        # Warm starts (paper-adjacent: prices "fluctuate like a real-world
+        # economy", so last epoch's clearing point is the best prior): seed
+        # each clock with max(p_prev, reserve) — p_prev is the last binding
+        # epoch's settled prices (price_history[-1]) — instead of the reserve
+        # curve.  The reserve stays a hard floor; the clock is ascending-only,
+        # so a warm start trades re-discovery rounds for a one-epoch price
+        # memory (prices can only fall back as far as the next epoch's
+        # reserve).  Cold (default) keeps every pinned trajectory unchanged.
+        self.warm_start = warm_start
         self.C, self.T = self.capacity.shape
         if self.pop.num_rtypes != self.T:
             raise ValueError(
@@ -414,13 +427,20 @@ class Economy:
         perm_keys: np.ndarray,
     ) -> BidBook:
         """Assemble the epoch bid book as pure array ops — O(nnz), no
-        per-agent Python.
+        per-agent Python — emitting the variable-K CSR encoding directly.
 
         Row layout (identical to the reference loop packer): operator lots in
         pool order, then per agent in index order a trader's sell row (if it
         offers this epoch) immediately followed by its buy row.  Buy bundles
         are ordered home-cluster-first, then by the agent's reach
         permutation, truncated to its reach budget.
+
+        The CSR streams hold exactly the nonzeros the padded loop book holds
+        (operator rows: 1 element; sell/buy bundles: T each; unreached XOR
+        slots: none), in the same (row, bundle, k) order, so settlement
+        through the padded-reconstruction path is bit-identical to the loop
+        packer's padded book — low-mobility fleets just stop paying for the
+        unreached slots.
         """
         pop = self.pop
         n, C, T, R = len(pop), self.C, self.T, self.R
@@ -474,19 +494,33 @@ class Economy:
         sell_row = row0[sellers]
         buy_row = row0[buyers] + sells[buyers]
 
-        idx = np.zeros((U, B, T), np.int32)
-        val = np.zeros((U, B, T), np.float32)
         mask = np.zeros((U, B), bool)
+        counts = np.zeros((U, B), np.int64)
         pi_mat = np.full((U, B), -np.inf, np.float32)
         row_kind = np.full((U,), KIND_BUY, np.int8)
         row_agent = np.full((U,), -1, np.int64)
         sell_cluster = np.full((U,), -1, np.int64)
         bundle_cluster = np.full((U, B), -1, np.int64)
 
+        t_ar = np.arange(T, dtype=np.int64)
+        counts[:n_op, 0] = 1  # operator lots carry one nonzero
+        if sellers.size:
+            counts[sell_row, 0] = T
+        if nb:
+            bc = order[:, :B]  # (nb, B) clusters in bundle order
+            valid = np.arange(B)[None, :] < n_reach[:, None]
+            counts[buy_row] = np.where(valid, T, 0)  # unreached slots: nothing
+        offsets = np.zeros(U * B + 1, np.int64)
+        offsets[1:] = np.cumsum(counts.reshape(-1))
+        starts = offsets[:-1].reshape(U, B)
+        nnz = int(offsets[-1])
+        flat_idx = np.zeros(nnz, np.int32)
+        flat_val = np.zeros(nnz, np.float32)
+
         # (d) operator sells spare capacity at reserve — one quantity-collapsed
         # row per pool (the seller stay-in rule is scale-invariant).
-        idx[:n_op, 0, 0] = op_pools
-        val[:n_op, 0, 0] = -free[op_pools]
+        flat_idx[starts[:n_op, 0]] = op_pools
+        flat_val[starts[:n_op, 0]] = -free[op_pools]
         mask[:n_op, 0] = True
         pi_mat[:n_op, 0] = (
             -free[op_pools] * tilde_p.astype(np.float64)[op_pools]
@@ -494,13 +528,13 @@ class Economy:
         row_kind[:n_op] = KIND_OP
 
         # (e) traders: offer holdings at home at 15% under believed revenue
-        t_ar = np.arange(T, dtype=np.int64)
         if sellers.size:
             # sellers ⊂ buyers and both are sorted, so a searchsorted maps a
             # seller to its believed-cost row
             sell_pos = np.searchsorted(buyers, sellers)
-            idx[sell_row, 0, :] = (placed[sellers, None] * T + t_ar[None, :])
-            val[sell_row, 0, :] = (-pop.req[sellers]).astype(np.float32)
+            spos = starts[sell_row, 0][:, None] + t_ar[None, :]
+            flat_idx[spos] = placed[sellers, None] * T + t_ar[None, :]
+            flat_val[spos] = (-pop.req[sellers]).astype(np.float32)
             mask[sell_row, 0] = True
             exp_rev = believed_b[sell_pos, placed[sellers]]
             pi_mat[sell_row, 0] = (-exp_rev * (1.0 - 0.15)).astype(np.float32)
@@ -521,19 +555,14 @@ class Economy:
                 ),
                 pop.budget[buyers, None],
             )
-            bc = order[:, :B]  # (nb, B) clusters in bundle order
-            valid = np.arange(B)[None, :] < n_reach[:, None]
             bcc = np.where(valid, bc, 0).astype(np.int32)
-            idx[buy_row] = np.where(
-                valid[:, :, None],
-                bcc[:, :, None] * np.int32(T) + t_ar.astype(np.int32)[None, None, :],
-                np.int32(0),
+            bpos = (starts[buy_row][:, :, None] + t_ar[None, None, :])[valid]
+            flat_idx[bpos] = (
+                bcc[valid][:, None] * np.int32(T) + t_ar.astype(np.int32)[None, :]
             )
-            val[buy_row] = np.where(
-                valid[:, :, None],
-                pop.req[buyers].astype(np.float32)[:, None, :],
-                np.float32(0.0),
-            )
+            flat_val[bpos] = pop.req[buyers].astype(np.float32)[
+                np.nonzero(valid)[0]
+            ]
             mask[buy_row] = valid
             pi_mat[buy_row] = np.where(
                 valid,
@@ -543,8 +572,9 @@ class Economy:
             row_agent[buy_row] = buyers
             bundle_cluster[buy_row] = np.where(valid, bc, -1)
 
-        problem = sparse_problem_from_arrays(
-            idx, val, mask, pi_mat, base_cost=base_cost_flat
+        problem = csr_problem_from_arrays(
+            flat_idx, flat_val, offsets, mask, pi_mat,
+            base_cost=base_cost_flat, k_bound=max(T, 1),
         )
         return BidBook(
             problem=problem, pi_mat=pi_mat, row_kind=row_kind,
@@ -739,7 +769,13 @@ class Economy:
             and self.settle_blocks % jax.device_count() == 0
         ):
             mesh = users_mesh()  # auto-shard over all local devices
-        start = jnp.asarray(tilde_p)
+        warm = self.warm_start and bool(self.price_history)
+        if warm:
+            # last clearing point floored at this epoch's reserve curve: the
+            # ascending clock re-discovers only what actually moved
+            start = jnp.asarray(np.maximum(self.price_history[-1], tilde_p))
+        else:
+            start = jnp.asarray(tilde_p)
         if mesh is not None:
             result = sharded_clock_auction(
                 problem, start, self.clock, mesh=mesh, num_blocks=self.settle_blocks
@@ -763,7 +799,7 @@ class Economy:
                 buy_util_percentiles=np.empty(0), sell_util_percentiles=np.empty(0),
                 migrations=0, surplus=float(surplus), value_of_trade=float(trade),
                 rounds=int(result.rounds), converged=bool(result.converged),
-                system_ok=sys_ok,
+                system_ok=sys_ok, warm_started=warm,
             )
 
         apply = (
@@ -776,7 +812,7 @@ class Economy:
         # -- learning: beliefs drift toward settled prices --------------------
         self.belief = 0.25 * self.belief + 0.75 * prices
         self.pop.epoch += 1
-        self.price_history.append(prices)
+        self.price_history.append(prices)  # also next epoch's warm-start seed
 
         return EpochStats(
             epoch=len(self.price_history) - 1,
@@ -795,6 +831,7 @@ class Economy:
             rounds=int(result.rounds),
             converged=bool(result.converged),
             system_ok=sys_ok,
+            warm_started=warm,
         )
 
     def _apply_settlement(self, book: BidBook, result) -> dict:

@@ -26,6 +26,7 @@ contract.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Sequence
 
 import numpy as np
@@ -199,6 +200,14 @@ class Scenario:
         return [ev for ev in self.events if ev.epoch == epoch]
 
 
+class RoundStarvedWarning(RuntimeWarning):
+    """An epoch's clock hit ``max_rounds`` without clearing — the reported
+    prices are a truncated trajectory, not a market equilibrium.  Raise
+    ``max_rounds``, enable the adaptive schedule
+    (``ClockConfig(alpha_growth=..., delta_decay=...)``), or warm-start the
+    economy (``Economy(warm_start=True)``)."""
+
+
 @dataclasses.dataclass
 class ScenarioResult:
     scenario: Scenario
@@ -209,6 +218,12 @@ class ScenarioResult:
     @property
     def converged(self) -> bool:
         return all(s.converged for s in self.stats)
+
+    @property
+    def total_rounds(self) -> int:
+        """Clock rounds summed over the run — the mechanism-cost headline a
+        warm-started economy drives down (cf. Lai's hidden-cost critique)."""
+        return int(sum(s.rounds for s in self.stats))
 
     @property
     def feasible(self) -> bool:
@@ -270,6 +285,16 @@ def run_scenario(
                     )
         s = eco.run_epoch()
         stats.append(s)
+        if not s.converged:
+            # loud, not just a stats bit: every downstream number this epoch
+            # (prices, premiums, migrations) describes a round-starved clock
+            warnings.warn(
+                f"scenario {scenario.name!r} epoch {e}: clock hit "
+                f"max_rounds={eco.clock.max_rounds} without clearing "
+                f"(rounds={s.rounds}) — prices are truncated, not settled",
+                RoundStarvedWarning,
+                stacklevel=2,
+            )
         if check_invariants:
             _check_physical_invariants(eco, f"epoch {e} settlement")
         spread.append(_spread(eco))
@@ -277,7 +302,9 @@ def run_scenario(
             print(
                 f"  [epoch {e}] gamma_med={s.gamma_median:.4f} "
                 f"settled={s.pct_settled:.0f}% migrations={s.migrations} "
-                f"spread={spread[-1]:.3f} rounds={s.rounds}"
+                f"spread={spread[-1]:.3f} rounds={s.rounds} "
+                f"converged={s.converged}"
+                + (" warm" if s.warm_started else "")
             )
     return ScenarioResult(scenario, stats, reports, spread)
 

@@ -9,21 +9,27 @@ Terminology follows the paper (Stokely et al.):
   vectors over the R pools (positive components = buy, negative = sell) and a
   scalar willingness-to-pay (negative = minimum acceptable revenue).
 
-Two device-ready encodings exist:
+Three device-ready encodings exist:
 
 * dense ``AuctionProblem``: bundles ``(U, B, R)`` float32 — simple, but a real
   bid touches only K ≈ 3–6 of the R = clusters×rtypes pools, so at planet
   scale this streams gigabytes of zeros through every clock round;
 * sparse ``SparseAuctionProblem``: per-bundle ``(idx, val)`` nonzero pairs
   padded to ``K_max`` — ``idx (U, B, K) int32`` / ``val (U, B, K) float32`` —
-  which makes one proxy-evaluation round O(U·B·K) instead of O(U·B·R).  This
-  is the primary settlement path; ``pack_bids_sparse`` builds it directly and
-  ``sparsify``/``densify`` convert between the two.
+  which makes one proxy-evaluation round O(U·B·K) instead of O(U·B·R);
+* CSR ``CSRAuctionProblem``: the same nonzeros stored *flat* (``idx/val
+  (nnz,)``) with per-bundle ``offsets`` — no ``K_max`` padding at all, so a
+  book whose bundle sizes are skewed (K ∈ {1..16}, mean 4) stores and moves
+  only its true nnz.  ``pack_bids_csr`` builds it directly,
+  ``csr_from_padded``/``padded_from_csr`` convert, and ``csr_padded_views``
+  reconstructs the padded layout in-trace (bit-identically) so the
+  settlement-grade blocked/exact demand paths run unchanged on CSR books.
 
 Padded ``(idx, val)`` slots carry ``idx = 0, val = 0`` (they gather pool 0's
 price, multiply by zero, and scatter nothing), and nonzeros are stored in
 ascending pool order so sparse cost sums fold in the same order as a dense
-row reduction.
+row reduction.  CSR stores the identical nonzeros in the identical (u, b, k)
+order, minus the padding.
 """
 from __future__ import annotations
 
@@ -184,6 +190,331 @@ class SparseAuctionResult:
             .at[rows, self.alloc_idx.reshape(-1)]
             .add(self.alloc_val.reshape(-1).astype(jnp.float32))
         )
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "idx", "val", "rows", "offsets", "bundle_mask", "pi", "base_cost",
+        "supply_scale",
+    ),
+    meta_fields=("num_resources", "k_bound"),
+)
+@dataclasses.dataclass(frozen=True)
+class CSRAuctionProblem:
+    """Variable-K CSR encoding of all bids for one auction.
+
+    The flat twin of :class:`SparseAuctionProblem`: bundle ``(u, b)`` owns the
+    slice ``offsets[u*B+b] : offsets[u*B+b+1]`` of the flat ``idx``/``val``
+    streams, in the same ascending-pool order the padded layout stores, with
+    no K_max padding anywhere.  ``rows`` is the flat bundle id of each
+    element (``u*B + b``, redundant with ``offsets`` but carried so O(nnz)
+    demand evaluation never rebuilds it).
+
+    Attributes:
+      idx: (nnz,) int32 pool indices, bundle-major, ascending within a bundle.
+      val: (nnz,) float32 quantities.  Positive = demanded, negative = offered.
+      rows: (nnz,) int32 flat bundle id (u·B + b) of each element.
+      offsets: (U·B + 1,) int32 bundle boundaries into idx/val.
+      bundle_mask: (U, B) True for valid XOR alternatives.
+      pi: (U,) scalar willingness-to-pay, or (U, B) per-bundle (vector-π).
+      base_cost: (R,) c(r), used for price normalization.
+      supply_scale: (R,) normalization for excess demand.
+      num_resources: R — static.
+      k_bound: static upper bound on any bundle's nnz (the padded layout this
+        book would round-trip to has K_max = k_bound); loop extent for the
+        in-trace padded reconstruction and the Pallas CSR kernel.
+    """
+
+    idx: jax.Array
+    val: jax.Array
+    rows: jax.Array
+    offsets: jax.Array
+    bundle_mask: jax.Array
+    pi: jax.Array
+    base_cost: jax.Array
+    supply_scale: jax.Array
+    num_resources: int
+    k_bound: int
+
+    @property
+    def num_users(self) -> int:
+        return self.bundle_mask.shape[0]
+
+    @property
+    def num_bundles(self) -> int:
+        return self.bundle_mask.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return self.idx.shape[0]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "kmaj_idx", "kmaj_val", "inv_count_perm", "pool_pos", "pool_live",
+        "chunk_pool",
+    ),
+    meta_fields=("m_k", "chunk"),
+)
+@dataclasses.dataclass(frozen=True)
+class CSRDemandAux:
+    """Pack-time layouts that make one CSR proxy round scatter-free.
+
+    CPU (and any backend with serialized scatter) pays ~100 ns per scattered
+    element, which makes the naive segment-sum CSR round *slower* than the
+    padded one it replaces.  Two host-precomputed reorderings remove every
+    large scatter from the round:
+
+    * bundle costs — bundles are sorted by nnz (descending); pass ``k`` then
+      touches exactly the first ``m_k[k]`` sorted bundles, so the K-term cost
+      fold becomes ``k_bound`` *prefix-slice* adds over the k-major element
+      stream (``kmaj_idx``/``kmaj_val``), no scatter, O(nnz) total work;
+    * excess demand z — elements are sorted by pool and each pool's run is
+      padded to a multiple of ``chunk``; the selected values are gathered
+      into that layout, chunk-summed by a dense reshape, and only the
+      ~nnz/chunk chunk sums hit a scatter.
+
+    Both reorderings are pure data layout: selection is unchanged, and z
+    reassociates only across elements of one pool (float-close, like every
+    non-exact demand path).  ``m_k`` is static metadata, so a jit'd demand
+    round specializes on the book's bundle-size profile.
+    """
+
+    kmaj_idx: jax.Array  # (nnz,) int32 — k-major, count-sorted element stream
+    kmaj_val: jax.Array  # (nnz,) float32
+    inv_count_perm: jax.Array  # (U·B,) int32 — sorted-bundle pos of each bundle
+    pool_pos: jax.Array  # (chunks·chunk,) int32 — flat element pos, pool-major
+    pool_live: jax.Array  # (chunks·chunk,) bool — False on pool-run padding
+    chunk_pool: jax.Array  # (chunks,) int32 — owning pool of each chunk
+    m_k: tuple  # static: #bundles with nnz > k, for k in range(k_bound)
+    chunk: int  # static: z chunk width
+
+
+def csr_demand_aux(problem: CSRAuctionProblem, chunk: int = 128) -> CSRDemandAux:
+    """Build the scatter-free demand layouts for a (concrete) CSR problem.
+
+    Host-side numpy — call it once per packed book, next to the packer, not
+    inside a trace.
+    """
+    idx = np.asarray(problem.idx)
+    val = np.asarray(problem.val)
+    offsets = np.asarray(problem.offsets).astype(np.int64)
+    counts = offsets[1:] - offsets[:-1]  # (U·B,)
+    ub = counts.shape[0]
+    nnz = idx.shape[0]
+
+    perm = np.argsort(-counts, kind="stable")  # bundles by nnz, descending
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(ub)
+    sorted_counts = counts[perm]
+    m_k = tuple(int((sorted_counts > k).sum()) for k in range(problem.k_bound))
+    kmaj_idx = np.concatenate(
+        [idx[offsets[:-1][perm[: m_k[k]]] + k] for k in range(problem.k_bound)]
+        or [np.zeros(0, np.int32)]
+    )
+    kmaj_val = np.concatenate(
+        [val[offsets[:-1][perm[: m_k[k]]] + k] for k in range(problem.k_bound)]
+        or [np.zeros(0, np.float32)]
+    )
+
+    pool_order = np.argsort(idx, kind="stable")
+    pool_counts = np.bincount(idx, minlength=problem.num_resources)
+    pool_chunks = (pool_counts + chunk - 1) // chunk
+    n_chunks = int(pool_chunks.sum())
+    pool_pos = np.zeros(max(n_chunks, 1) * chunk, np.int32)
+    pool_live = np.zeros(max(n_chunks, 1) * chunk, bool)
+    chunk_pool = np.repeat(
+        np.arange(problem.num_resources), pool_chunks
+    ).astype(np.int32)
+    if nnz:
+        sorted_pools = idx[pool_order]
+        elem_off = np.zeros(problem.num_resources + 1, np.int64)
+        elem_off[1:] = np.cumsum(pool_counts)
+        write_off = np.zeros(problem.num_resources + 1, np.int64)
+        write_off[1:] = np.cumsum(pool_chunks) * chunk
+        rank = np.arange(nnz) - elem_off[sorted_pools]
+        wpos = write_off[sorted_pools] + rank
+        pool_pos[wpos] = pool_order.astype(np.int32)
+        pool_live[wpos] = True
+    return CSRDemandAux(
+        kmaj_idx=jnp.asarray(kmaj_idx.astype(np.int32)),
+        kmaj_val=jnp.asarray(kmaj_val.astype(np.float32)),
+        inv_count_perm=jnp.asarray(inv_perm.astype(np.int32)),
+        pool_pos=jnp.asarray(pool_pos),
+        pool_live=jnp.asarray(pool_live),
+        chunk_pool=jnp.asarray(chunk_pool),
+        m_k=m_k,
+        chunk=chunk,
+    )
+
+
+def csr_padded_views(problem: CSRAuctionProblem) -> tuple[jax.Array, jax.Array]:
+    """In-trace (U, B, k_bound) idx/val views of a CSR problem.
+
+    Bit-identical to the padded layout the same book packs to: live slots
+    gather the flat nonzeros in ascending k order, dead slots are
+    ``(idx=0, val=0)`` exactly like ``pack_bids_sparse`` padding.  This is
+    how the settlement-grade (exact/blocked) demand paths — whose fold order
+    defines bit-reproducibility — run on CSR books without a second
+    numerics contract: reconstruct once, then execute the identical padded
+    program.
+    """
+    u, b = problem.bundle_mask.shape
+    k = problem.k_bound
+    start = problem.offsets[:-1].reshape(u, b)
+    count = (problem.offsets[1:] - problem.offsets[:-1]).reshape(u, b)
+    kk = jnp.arange(k, dtype=problem.offsets.dtype)
+    live = kk[None, None, :] < count[:, :, None]
+    if problem.nnz == 0:
+        return (
+            jnp.zeros((u, b, k), jnp.int32),
+            jnp.zeros((u, b, k), jnp.float32),
+        )
+    pos = jnp.clip(start[:, :, None] + kk[None, None, :], 0, problem.nnz - 1)
+    idx = jnp.where(live, problem.idx[pos], 0)
+    val = jnp.where(live, problem.val[pos], 0.0)
+    return idx, val
+
+
+def padded_from_csr(problem: CSRAuctionProblem) -> SparseAuctionProblem:
+    """CSR → K_max-padded conversion (exact; arrays stay on device)."""
+    idx, val = csr_padded_views(problem)
+    return SparseAuctionProblem(
+        idx=idx,
+        val=val,
+        bundle_mask=problem.bundle_mask,
+        pi=problem.pi,
+        base_cost=problem.base_cost,
+        supply_scale=problem.supply_scale,
+        num_resources=problem.num_resources,
+    )
+
+
+def csr_from_padded(problem: SparseAuctionProblem) -> CSRAuctionProblem:
+    """Padded → CSR conversion (host-side, vectorized).
+
+    A slot counts as live up to the bundle's last ``(idx, val) != (0, 0)``
+    entry; interior explicit-zero entries are kept, trailing padding is
+    dropped.  Dropping a trailing all-zero slot is exact — it gathered pool
+    0's price and contributed 0.0 — and the reconstruction
+    (:func:`csr_padded_views`) regenerates it as ``(0, 0)`` bit for bit.
+    """
+    idx = np.asarray(problem.idx)
+    val = np.asarray(problem.val)
+    u, b, k = idx.shape
+    live = (idx != 0) | (val != 0)
+    any_live = live.any(axis=-1)
+    counts = np.where(
+        any_live, k - np.argmax(live[..., ::-1], axis=-1), 0
+    ).reshape(-1)
+    offsets = np.zeros(u * b + 1, np.int32)
+    offsets[1:] = np.cumsum(counts)
+    nnz = int(offsets[-1])
+    flat_idx = np.zeros(nnz, np.int32)
+    flat_val = np.zeros(nnz, np.float32)
+    starts = offsets[:-1]
+    kk = np.arange(k)
+    take = kk[None, :] < counts[:, None]  # (U·B, K)
+    wpos = (starts[:, None] + kk[None, :])[take]
+    flat_idx[wpos] = idx.reshape(u * b, k)[take]
+    flat_val[wpos] = val.reshape(u * b, k)[take]
+    rows = np.repeat(np.arange(u * b, dtype=np.int32), counts)
+    return CSRAuctionProblem(
+        idx=jnp.asarray(flat_idx),
+        val=jnp.asarray(flat_val),
+        rows=jnp.asarray(rows),
+        offsets=jnp.asarray(offsets),
+        bundle_mask=problem.bundle_mask,
+        pi=problem.pi,
+        base_cost=problem.base_cost,
+        supply_scale=problem.supply_scale,
+        num_resources=problem.num_resources,
+        k_bound=max(k, 1),
+    )
+
+
+def csr_problem_from_arrays(
+    idx: np.ndarray,
+    val: np.ndarray,
+    offsets: np.ndarray,
+    bundle_mask: np.ndarray,
+    pi: np.ndarray,
+    base_cost: np.ndarray,
+    supply_scale: np.ndarray | None = None,
+    k_bound: int | None = None,
+) -> CSRAuctionProblem:
+    """Wrap pre-assembled flat CSR arrays into a CSRAuctionProblem.
+
+    The fast path for vectorized packers (the ``AgentPopulation`` bid-book
+    builder emits this layout directly).  Only cheap invariants are checked —
+    index range, monotone offsets, shape agreement — so a 10⁶-row book wraps
+    in O(nnz) with no per-row Python.
+    """
+    idx = np.asarray(idx, np.int32)
+    val = np.asarray(val, np.float32)
+    offsets = np.asarray(offsets, np.int32)
+    bundle_mask = np.asarray(bundle_mask, bool)
+    num_res = int(np.asarray(base_cost).shape[0])
+    if idx.shape != val.shape or idx.ndim != 1:
+        raise ValueError(f"idx {idx.shape} / val {val.shape} must be flat (nnz,)")
+    u, b = bundle_mask.shape
+    if offsets.shape != (u * b + 1,):
+        raise ValueError(f"offsets {offsets.shape} != ({u * b + 1},)")
+    counts = offsets[1:].astype(np.int64) - offsets[:-1].astype(np.int64)
+    if offsets[0] != 0 or offsets[-1] != idx.shape[0] or (counts < 0).any():
+        raise ValueError("offsets must grow monotonically from 0 to nnz")
+    if idx.size and (idx.min() < 0 or idx.max() >= num_res):
+        raise ValueError(
+            f"bundle pool indices must be in [0, {num_res}), got "
+            f"[{idx.min()}, {idx.max()}]"
+        )
+    if k_bound is None:
+        k_bound = int(counts.max()) if counts.size else 1
+    elif counts.size and k_bound < counts.max():
+        raise ValueError(f"k_bound={k_bound} < densest bundle nnz={counts.max()}")
+    if supply_scale is None:
+        # same f32 running accumulation as sparse_supply_scale — the flat
+        # stream is the padded (u, b, k) order minus its zeros, and skipping
+        # an exact +0.0 preserves every partial sum bit for bit, so CSR and
+        # padded packs of one book normalize identically
+        acc = np.zeros((num_res,), np.float32)
+        np.add.at(acc, idx, np.abs(val))
+        supply_scale = np.maximum(acc, 1.0)
+    rows = np.repeat(np.arange(u * b, dtype=np.int32), counts)
+    return CSRAuctionProblem(
+        idx=jnp.asarray(idx),
+        val=jnp.asarray(val),
+        rows=jnp.asarray(rows),
+        offsets=jnp.asarray(offsets),
+        bundle_mask=jnp.asarray(bundle_mask),
+        pi=jnp.asarray(np.asarray(pi, np.float32)),
+        base_cost=jnp.asarray(np.asarray(base_cost, np.float32)),
+        supply_scale=jnp.asarray(np.asarray(supply_scale, np.float32)),
+        num_resources=num_res,
+        k_bound=max(int(k_bound), 1),
+    )
+
+
+def pack_bids_csr(
+    bundle_lists: Sequence[Sequence],
+    pis: Sequence[float] | np.ndarray,
+    base_cost: np.ndarray,
+    supply_scale: np.ndarray | None = None,
+) -> CSRAuctionProblem:
+    """Pack per-user XOR bundle lists straight into a CSRAuctionProblem.
+
+    Accepts the same inputs as :func:`pack_bids_sparse` (dense ``(R,)``
+    vectors or ``(idx, val)`` pairs) and produces a book whose settlement is
+    bit-identical to the padded pack of the same lists — the supply_scale
+    normalizer folds the identical |q| stream (padding zeros add exact 0.0),
+    and :func:`csr_padded_views` reconstructs the identical padded arrays.
+    """
+    padded = pack_bids_sparse(
+        bundle_lists, pis, base_cost=base_cost, supply_scale=supply_scale
+    )
+    return csr_from_padded(padded)
 
 
 def pack_bids(

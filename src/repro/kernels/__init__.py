@@ -2,7 +2,9 @@
 
 - clock_bid_eval: fused dense bidder-proxy evaluation (scalar-π, O(U·B·R))
 - sparse_bid_eval: sparse-bundle proxy evaluation (scalar- and vector-π,
-  O(U·B·K) — the primary settlement path)
+  O(U·B·K_max) over the padded layout)
+- sparse_bid_eval_csr: segment-offset variant over the flat variable-K CSR
+  streams (O(nnz) HBM traffic — the primary settlement encoding)
 - wkv6: chunked RWKV-6 linear recurrence (assigned ssm architecture)
 - ops: jit'd wrappers with jnp/pallas/interpret backend switch
 - ref: pure-jnp oracles (also the dry-run compile path)

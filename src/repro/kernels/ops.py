@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from . import ref
 from . import clock_bid_eval as _cbe
 from . import sparse_bid_eval as _sbe
+from . import sparse_bid_eval_csr as _sbec
 from . import wkv6 as _wkv6
 
 Backend = Literal["jnp", "pallas", "interpret"]
@@ -56,6 +57,71 @@ def sparse_bid_eval(
     return _sbe.sparse_bid_eval(
         idx, val, mask, pi, prices, num_resources, interpret=backend == "interpret"
     )
+
+
+def sparse_bid_eval_csr(
+    idx,
+    val,
+    rows,
+    offsets,
+    mask,
+    pi,
+    prices,
+    num_resources: int,
+    k_bound: int,
+    backend: Backend | None = None,
+):
+    """(z, chosen) — one proxy round over flat CSR bundles, O(nnz).
+
+    The variable-K twin of :func:`sparse_bid_eval`: no K_max padding, so a
+    skewed book moves only its true nonzeros.  ``rows`` feeds the jnp
+    oracle's segment reduction; ``offsets``/``k_bound`` feed the kernel's
+    segment-offset addressing.  Scalar-π and vector-π on every backend.
+    """
+    backend = backend or default_backend()
+    if backend == "jnp":
+        return ref.sparse_bid_eval_csr(
+            idx, val, rows, mask, pi, prices, num_resources
+        )
+    return _sbec.sparse_bid_eval_csr(
+        idx,
+        val,
+        offsets,
+        mask,
+        pi,
+        prices,
+        num_resources,
+        k_bound,
+        interpret=backend == "interpret",
+    )
+
+
+def csr_bid_demand_fn(backend: Backend | None = None):
+    """Adapter with the auction's CSR DemandFn signature (z, chosen, active).
+
+    Takes the :class:`~repro.core.types.CSRAuctionProblem` directly (CSR
+    demand fns close over no layout aux; the optional scatter-free aux is
+    ignored here — the kernel's compare-and-add z never scatters anyway).
+    """
+
+    def demand(problem, prices, aux=None):
+        z, chosen = sparse_bid_eval_csr(
+            problem.idx,
+            problem.val,
+            problem.rows,
+            problem.offsets,
+            problem.bundle_mask,
+            problem.pi,
+            prices,
+            problem.num_resources,
+            problem.k_bound,
+            backend=backend,
+        )
+        active = chosen >= 0
+        return z, chosen, active
+
+    demand.csr_signature = True  # type: ignore[attr-defined]
+    return demand
 
 
 def _dense_to_sparse(bundles):

@@ -101,6 +101,58 @@ def sparse_bid_eval(
 
 
 # ---------------------------------------------------------------------------
+# sparse_bid_eval_csr: one proxy round over flat CSR bundles — O(nnz)
+# ---------------------------------------------------------------------------
+
+
+def sparse_bid_eval_csr(
+    idx: jax.Array,  # (nnz,) int32 — flat pool indices, bundle-major
+    val: jax.Array,  # (nnz,) float — flat quantities
+    rows: jax.Array,  # (nnz,) int32 — flat bundle id (u·B + b) per element
+    mask: jax.Array,  # (U, B) bool/int — valid XOR alternatives
+    pi: jax.Array,  # (U,) scalar-π or (U, B) vector-π willingness-to-pay
+    prices: jax.Array,  # (R,) float
+    num_resources: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (z (R,) excess demand, chosen (U,) int32 with -1 = dropped out).
+
+    Variable-K twin of :func:`sparse_bid_eval`: per-element price gathers, a
+    sorted segment-sum into per-bundle costs, and a keep-masked scatter into
+    z — O(nnz) end to end, no K_max padding anywhere.  Selection semantics
+    (scalar-π cheapest / vector-π max-surplus, first-extremum tie-break)
+    match the padded oracle; a bundle with no elements costs exactly 0.0,
+    like an all-padding bundle in the padded layout.
+    """
+    num_users, num_bundles = mask.shape
+    prod = val.astype(jnp.float32) * prices.astype(jnp.float32)[idx]
+    costs = jax.ops.segment_sum(
+        prod, rows, num_segments=num_users * num_bundles, indices_are_sorted=True
+    ).reshape(num_users, num_bundles)
+    valid = mask.astype(bool)
+    iota = jax.lax.broadcasted_iota(jnp.int32, costs.shape, 1)
+    if pi.ndim == 1:
+        costs = jnp.where(valid, costs, jnp.inf)
+        cost_hat = jnp.min(costs, axis=1)
+        bhat = jnp.min(
+            jnp.where(costs == cost_hat[:, None], iota, num_bundles), axis=1
+        )
+        bhat = jnp.minimum(bhat, num_bundles - 1)
+        active = cost_hat <= pi.astype(jnp.float32)
+    else:
+        surplus = jnp.where(valid, pi.astype(jnp.float32) - costs, -jnp.inf)
+        s_hat = jnp.max(surplus, axis=1)
+        bhat = jnp.min(
+            jnp.where(surplus == s_hat[:, None], iota, num_bundles), axis=1
+        )
+        bhat = jnp.minimum(bhat, num_bundles - 1)
+        active = s_hat >= 0.0
+    chosen = jnp.where(active, bhat, -1).astype(jnp.int32)
+    kept = jnp.where(chosen[rows // num_bundles] == rows % num_bundles, val, 0.0)
+    z = jnp.zeros((num_resources,), jnp.float32).at[idx].add(kept)
+    return z, chosen
+
+
+# ---------------------------------------------------------------------------
 # wkv6: RWKV-6 linear recurrence with data-dependent decay (chunked oracle
 # uses the plain sequential form; the kernel's chunked algebra must match it)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel: segment-offset (CSR) bidder-proxy evaluation, O(nnz).
+
+The padded twin (``sparse_bid_eval``) pays O(U·B·K_max) per round — every
+bundle is padded to the densest bundle's nnz, so a skewed book (K ∈ {1..16},
+mean 4) streams and masks 4× its true nonzeros.  This variant takes the flat
+CSR encoding instead: ``idx``/``val`` are (nnz,) element streams and each
+bundle owns the slice ``offsets[row] : offsets[row+1]``, so HBM traffic per
+round is the book's true nnz.
+
+TPU mapping:
+
+* users are blocked over a 1-D sequential grid, exactly like the padded
+  kernel; per block the (BU, B) ``starts``/``counts`` tiles say where each
+  bundle's elements live in the flat streams;
+* the flat idx/val streams and the (1, R⁺) price row are whole VMEM
+  residents revisited by every step (fetched once).  Bundle costs come from
+  ``k_bound`` masked passes of lane dynamic-gathers — pass k gathers element
+  k of every bundle that has one (``jnp.take`` by ``starts + k``) and
+  compare-adds it, so dead (bundle, k) slots cost a mask, not a DMA;
+* selection and the compare-and-add z scatter are shared with the padded
+  kernel: iota-min tie-breaks, scalar-π affordability or vector-π surplus,
+  K passes of ``z += Σ_u val_k·[idx_k == iota_r]`` into the revisited z row.
+
+Keeping the flat streams VMEM-resident caps nnz at ~1M elements per core on
+real hardware; beyond that the streams need scalar-prefetch chunking
+(ROADMAP item — this container exercises interpret mode only, like the
+padded kernel's lane dynamic-gather).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sparse_bid_eval import LANE, _BIG, _round_up, pick_block_u
+
+
+def _sparse_bid_eval_csr_kernel(
+    prices_ref,
+    fidx_ref,
+    fval_ref,
+    pi_ref,
+    mask_ref,
+    starts_ref,
+    counts_ref,
+    z_ref,
+    chosen_ref,
+    *,
+    scalar_pi,
+    k_bound,
+):
+    i = pl.program_id(0)
+    prices = prices_ref[...].reshape(-1)  # (Rp,)
+    rp = prices.shape[0]
+    fidx = fidx_ref[...].reshape(-1)  # (NNZp,)
+    fval = fval_ref[...].astype(jnp.float32).reshape(-1)
+    starts = starts_ref[...]  # (BU, B) int32
+    counts = counts_ref[...]  # (BU, B) int32
+    bu, nb = starts.shape
+
+    # bundle costs: k_bound masked passes of lane dynamic-gathers over the
+    # flat streams (dead slots gather element 0 and add an exact 0.0)
+    costs = jnp.zeros((bu, nb), jnp.float32)
+    for k in range(k_bound):
+        live = counts > k
+        pos = jnp.where(live, starts + k, 0)
+        ii = jnp.take(fidx, pos)  # (BU, B)
+        vv = jnp.take(fval, pos)
+        pp = jnp.take(prices, ii)
+        costs += jnp.where(live, vv * pp, 0.0)
+    valid = mask_ref[...] > 0  # (BU, B)
+
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (bu, nb), 1)
+    big = jnp.float32(_BIG)
+    if scalar_pi:
+        costs = jnp.where(valid, costs, big)
+        cost_hat = jnp.min(costs, axis=1)  # (BU,)
+        bhat = jnp.min(jnp.where(costs == cost_hat[:, None], iota_b, nb), axis=1)
+        bhat = jnp.minimum(bhat, nb - 1)
+        pi = pi_ref[...].reshape(bu)
+        active = jnp.logical_and(cost_hat <= pi, cost_hat < big)
+    else:
+        pi = pi_ref[...]  # (BU, B)
+        surplus = jnp.where(valid, pi - costs, -big)
+        s_hat = jnp.max(surplus, axis=1)  # (BU,)
+        bhat = jnp.min(jnp.where(surplus == s_hat[:, None], iota_b, nb), axis=1)
+        bhat = jnp.minimum(bhat, nb - 1)
+        active = jnp.logical_and(s_hat >= 0.0, s_hat > -big)
+
+    # chosen bundle's segment via B-step masked select, like the padded
+    # kernel's slot extraction — B is static and small
+    sel_start = jnp.zeros((bu,), jnp.int32)
+    sel_count = jnp.zeros((bu,), jnp.int32)
+    for b in range(nb):
+        hit = bhat == b
+        sel_start = jnp.where(hit, starts[:, b], sel_start)
+        sel_count = jnp.where(hit, counts[:, b], sel_count)
+    sel_count = jnp.where(active, sel_count, 0)
+
+    # one-hot-free scatter: k_bound compare-and-add passes into the z row
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (bu, rp), 1)
+    z_tile = jnp.zeros((1, rp), jnp.float32)
+    for k in range(k_bound):
+        live = sel_count > k
+        pos = jnp.where(live, sel_start + k, 0)
+        ii = jnp.take(fidx, pos)  # (BU,)
+        vv = jnp.where(live, jnp.take(fval, pos), 0.0)
+        hit_r = ii[:, None] == iota_r  # (BU, Rp)
+        z_tile += jnp.sum(
+            jnp.where(hit_r, vv[:, None], 0.0), axis=0, keepdims=True
+        )
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += z_tile
+    chosen_ref[...] = jnp.where(active, bhat, -1).astype(jnp.int32).reshape(bu, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_resources", "k_bound", "interpret")
+)
+def sparse_bid_eval_csr(
+    idx: jax.Array,  # (nnz,) int32 — flat pool indices, bundle-major
+    val: jax.Array,  # (nnz,) — flat quantities
+    offsets: jax.Array,  # (U·B + 1,) int32 — per-bundle element boundaries
+    mask: jax.Array,  # (U, B)
+    pi: jax.Array,  # (U,) or (U, B)
+    prices: jax.Array,  # (R,)
+    num_resources: int,
+    k_bound: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused CSR proxy evaluation. Returns (z (R,), chosen (U,), -1 = out).
+
+    ``k_bound`` is the static per-bundle nnz ceiling (the loop extent).
+    Pads U to the block size and R/nnz to the lane width; padded users carry
+    zero counts, an all-invalid mask, and π = −∞, so they never activate and
+    scatter nothing.
+    """
+    u, b = mask.shape
+    r = num_resources
+    rp = _round_up(max(r, LANE), LANE)
+    bu = pick_block_u(b, k_bound, rp)
+    up = _round_up(max(u, bu), bu)
+    nnz = idx.shape[0]
+    nnzp = _round_up(max(nnz, LANE), LANE)
+    scalar_pi = pi.ndim == 1
+
+    starts = offsets[:-1].reshape(u, b).astype(jnp.int32)
+    counts = (offsets[1:] - offsets[:-1]).reshape(u, b).astype(jnp.int32)
+    starts_p = jnp.zeros((up, b), jnp.int32).at[:u].set(starts)
+    counts_p = jnp.zeros((up, b), jnp.int32).at[:u].set(counts)
+    mask_p = jnp.zeros((up, b), jnp.int32).at[:u].set(mask.astype(jnp.int32))
+    fidx_p = jnp.zeros((1, nnzp), jnp.int32).at[0, :nnz].set(idx.astype(jnp.int32))
+    fval_p = jnp.zeros((1, nnzp), jnp.float32).at[0, :nnz].set(
+        val.astype(jnp.float32)
+    )
+    if scalar_pi:
+        pi_p = jnp.full((up, 1), -3.0e38, jnp.float32).at[:u, 0].set(
+            pi.astype(jnp.float32)
+        )
+        pi_spec = pl.BlockSpec((bu, 1), lambda i: (i, 0))
+    else:
+        pi_p = jnp.full((up, b), -3.0e38, jnp.float32).at[:u].set(
+            pi.astype(jnp.float32)
+        )
+        pi_spec = pl.BlockSpec((bu, b), lambda i: (i, 0))
+    prices_p = jnp.zeros((1, rp), jnp.float32).at[0, :r].set(
+        prices.astype(jnp.float32)
+    )
+
+    grid = (up // bu,)
+    z, chosen = pl.pallas_call(
+        functools.partial(
+            _sparse_bid_eval_csr_kernel, scalar_pi=scalar_pi, k_bound=k_bound
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),  # prices: broadcast
+            pl.BlockSpec((1, nnzp), lambda i: (0, 0)),  # flat idx: resident
+            pl.BlockSpec((1, nnzp), lambda i: (0, 0)),  # flat val: resident
+            pi_spec,  # pi
+            pl.BlockSpec((bu, b), lambda i: (i, 0)),  # mask
+            pl.BlockSpec((bu, b), lambda i: (i, 0)),  # starts
+            pl.BlockSpec((bu, b), lambda i: (i, 0)),  # counts
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),  # z: revisited/accumulated
+            pl.BlockSpec((bu, 1), lambda i: (i, 0)),  # chosen
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, rp), jnp.float32),
+            jax.ShapeDtypeStruct((up, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(prices_p, fidx_p, fval_p, pi_p, mask_p, starts_p, counts_p)
+    return z[0, :r], chosen[:u, 0]

@@ -1,4 +1,5 @@
-"""Clock auction: Algorithm 1 behavior + SYSTEM feasibility (paper §III)."""
+"""Clock auction: Algorithm 1 behavior + SYSTEM feasibility (paper §III),
+plus the adaptive step schedule and warm-start interactions."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -11,7 +12,9 @@ from repro.core import (
     operator_supply_bids,
     pack_bids,
     proxy_demand,
+    random_market,
     reserve_prices,
+    sparse_proxy_demand_blocked,
     surplus_and_trade,
     verify_system,
 )
@@ -85,6 +88,90 @@ class TestClockAuction:
         prob, p0 = _simple_market([1e9] * 40, supply=1.0, lots=1)
         res = clock_auction(prob, p0, ClockConfig(max_rounds=5))
         assert int(res.rounds) <= 5
+
+
+class TestAdaptiveClock:
+    def test_default_config_is_not_adaptive(self):
+        assert not ClockConfig().adaptive
+        assert ClockConfig(alpha_growth=1.3).adaptive
+        assert ClockConfig(delta_decay=0.6).adaptive
+
+    def test_adaptive_converges_in_fewer_rounds(self):
+        """On a contested market the accelerating schedule must clear in a
+        fraction of the fixed schedule's rounds, to a feasible point."""
+        prob = random_market(203, 37, seed=0, supply=(2.0, 6.0))
+        p0 = jnp.full((37,), 0.1)
+        fixed = ClockConfig(max_rounds=20000, alpha=0.6, delta=0.25)
+        adapt = ClockConfig(max_rounds=20000, alpha=0.6, delta=0.25,
+                            alpha_growth=1.6, delta_decay=0.6)
+        rf = clock_auction(prob, p0, fixed, demand_fn=sparse_proxy_demand_blocked)
+        ra = clock_auction(prob, p0, adapt, demand_fn=sparse_proxy_demand_blocked)
+        assert bool(rf.converged) and bool(ra.converged)
+        assert int(ra.rounds) < int(rf.rounds) / 2, (int(ra.rounds), int(rf.rounds))
+        checks = verify_system(prob, ra)
+        assert all(checks.values()), checks
+
+    def test_adaptive_prices_still_monotone_from_start(self):
+        prob = random_market(57, 11, seed=3, supply=(2.0, 6.0))
+        p0 = jnp.full((11,), 0.1)
+        cfg = ClockConfig(max_rounds=20000, alpha=0.6, delta=0.25,
+                          alpha_growth=2.0, delta_decay=0.5)
+        res = clock_auction(prob, p0, cfg)
+        assert bool(jnp.all(res.prices >= p0 - 1e-6))
+
+
+class TestWarmStart:
+    """Warm starts seed the clock above the reserve curve; the refiner and
+    the loop itself must respect that floor (the clock is ascending-only,
+    and the λ-bisection searches only the final [p_prev, p*] segment, whose
+    lower end is ≥ p0)."""
+
+    def _market(self):
+        prob = random_market(57, 11, seed=5, supply=(2.0, 6.0))
+        return prob, jnp.full((11,), 0.1)
+
+    def test_warm_start_from_clearing_point_converges_immediately(self):
+        prob, p0 = self._market()
+        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25)
+        cold = clock_auction(prob, p0, cfg)
+        assert bool(cold.converged)
+        rewarm = clock_auction(prob, cold.prices, cfg)
+        assert bool(rewarm.converged)
+        assert int(rewarm.rounds) <= 1
+        np.testing.assert_array_equal(
+            np.asarray(rewarm.prices), np.asarray(cold.prices)
+        )
+
+    @pytest.mark.parametrize("refine_rounds", [0, 30])
+    def test_refiner_never_undershoots_warm_start(self, refine_rounds):
+        """ClockConfig.refine_rounds > 0 with a warm p0 strictly above the
+        cold clearing point: the bisection must not hand back prices below
+        the warm start (it searches [p_prev, p*] with p_prev ≥ p0)."""
+        prob, p0 = self._market()
+        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25,
+                          refine_rounds=refine_rounds)
+        cold = clock_auction(prob, p0, cfg)
+        warm_p0 = cold.prices * 1.1  # above the clearing point everywhere
+        res = clock_auction(prob, warm_p0, cfg)
+        assert bool(res.converged)
+        assert bool(jnp.all(res.prices >= warm_p0 - 1e-6)), (
+            np.asarray(res.prices) - np.asarray(warm_p0)
+        )
+
+    def test_refiner_with_warm_start_on_adaptive_clock(self):
+        """Warm start + adaptive schedule + refiner compose: overshoot from
+        the coarse accelerated steps is polished back toward — never below —
+        the warm start."""
+        prob, p0 = self._market()
+        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25,
+                          alpha_growth=1.6, delta_decay=0.6, refine_rounds=30)
+        cold = clock_auction(prob, p0, cfg)
+        warm_p0 = jnp.maximum(cold.prices, p0)
+        res = clock_auction(prob, warm_p0, cfg)
+        assert bool(res.converged)
+        assert bool(jnp.all(res.prices >= warm_p0 - 1e-6))
+        checks = verify_system(prob, res)
+        assert all(checks.values()), checks
 
 
 def test_break_ties_resolves_exact_tie():

@@ -5,6 +5,12 @@ reserves, premiums, migrations, surplus) for one seed.  A refactor that is
 supposed to be settlement-neutral must reproduce them exactly; a deliberate
 numerics change regenerates them with ``python tests/update_golden.py``
 (and says why in the commit).
+
+Two sets are pinned per seed: the default cold-start economy and the
+``warm_start=True`` economy (epoch 0 identical by construction — there is
+no previous clearing point yet — later epochs seeded with
+max(p_prev, reserve)), so neither path can drift while the other stays
+green.
 """
 import json
 import math
@@ -19,8 +25,9 @@ GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 SEEDS = (0, 3, 7)
 
 
-def _load(seed):
-    path = os.path.join(GOLDEN_DIR, f"economy_seed{seed}.json")
+def _load(seed, warm):
+    stem = "economy_warm" if warm else "economy"
+    path = os.path.join(GOLDEN_DIR, f"{stem}_seed{seed}.json")
     with open(path) as f:
         return json.load(f)
 
@@ -32,13 +39,14 @@ def _check_scalar(actual, expected, ctx):
         assert actual == expected, (ctx, actual, expected)
 
 
+@pytest.mark.parametrize("warm", [False, True], ids=["cold", "warm"])
 @pytest.mark.parametrize("seed", SEEDS)
-def test_epochstats_match_golden(seed):
-    golden = _load(seed)
-    eco = make_fleet_economy(seed=seed)
+def test_epochstats_match_golden(seed, warm):
+    golden = _load(seed, warm)
+    eco = make_fleet_economy(seed=seed, warm_start=warm)
     for rec in golden["stats"]:
         s = eco.run_epoch()
-        ctx = (seed, rec["epoch"])
+        ctx = (seed, warm, rec["epoch"])
         # float(np.float32) widens exactly, so equality here is bit-exact
         np.testing.assert_array_equal(
             s.prices.astype(np.float64), np.asarray(rec["prices"]),
@@ -53,5 +61,23 @@ def test_epochstats_match_golden(seed):
             _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
         for k in ("epoch", "migrations", "rounds"):
             _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
-        for k in ("converged", "system_ok"):
+        for k in ("converged", "system_ok", "warm_started"):
             _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))
+
+
+def test_warm_golden_differs_after_epoch0():
+    """The warm fixtures must actually exercise the warm path: epoch 0
+    matches cold (nothing to seed from), and at least one later epoch's
+    round count or prices differ from the cold trajectory."""
+    for seed in SEEDS:
+        cold, warm = _load(seed, False), _load(seed, True)
+        c0, w0 = cold["stats"][0], warm["stats"][0]
+        assert c0["prices"] == w0["prices"], seed
+        assert not w0["warm_started"] and all(
+            s["warm_started"] for s in warm["stats"][1:]
+        ), seed
+    assert any(
+        _load(s, False)["stats"][e] != _load(s, True)["stats"][e]
+        for s in SEEDS
+        for e in (1, 2)
+    )

@@ -7,28 +7,47 @@ idx/val/π/mask/supply_scale values, dtypes, row order, and bundle order —
 and bit-identical EpochStats end-to-end (the loop path also applies
 settlement per-agent).  Seeds 0/3/7 × 4 epochs, per the roadmap's parity
 protocol.
+
+The vectorized packer emits the variable-K CSR encoding; the loop oracle
+emits the K_max-padded layout.  The two are compared through the exact
+converters (`padded_from_csr` / `csr_from_padded`), which pins both the
+padded reconstruction of the CSR book and the CSR flat streams of the
+padded book — economy books are the real-world variable-K case (operator
+rows carry 1 nonzero, agent bundles T).
 """
 import dataclasses
 
 import numpy as np
 import pytest
 
+from repro.core import csr_from_padded, padded_from_csr
 from repro.core.economy import AgentPopulation, make_fleet_economy
 
 SEEDS = (0, 3, 7)
 EPOCHS = 4
 
-PROBLEM_FIELDS = ("idx", "val", "bundle_mask", "pi", "base_cost", "supply_scale")
+PADDED_FIELDS = ("idx", "val", "bundle_mask", "pi", "base_cost", "supply_scale")
+CSR_FIELDS = ("idx", "val", "rows", "offsets", "bundle_mask", "pi", "base_cost",
+              "supply_scale")
 BOOK_FIELDS = ("pi_mat", "row_kind", "row_agent", "sell_cluster", "bundle_cluster")
 
 
 def _assert_books_identical(ba, bb, ctx):
-    for f in PROBLEM_FIELDS:
-        va = np.asarray(getattr(ba.problem, f))
-        vb = np.asarray(getattr(bb.problem, f))
+    # ba: vectorized (CSR problem); bb: loop reference (padded problem)
+    pa, pb = padded_from_csr(ba.problem), bb.problem
+    assert pa.num_resources == pb.num_resources, ctx
+    for f in PADDED_FIELDS:
+        va, vb = np.asarray(getattr(pa, f)), np.asarray(getattr(pb, f))
         assert va.dtype == vb.dtype, (ctx, f, va.dtype, vb.dtype)
         assert va.shape == vb.shape, (ctx, f, va.shape, vb.shape)
-        np.testing.assert_array_equal(va, vb, err_msg=f"{ctx} problem.{f}")
+        np.testing.assert_array_equal(va, vb, err_msg=f"{ctx} padded.{f}")
+    ca, cb = ba.problem, csr_from_padded(bb.problem)
+    assert ca.k_bound == cb.k_bound, ctx
+    for f in CSR_FIELDS:
+        va, vb = np.asarray(getattr(ca, f)), np.asarray(getattr(cb, f))
+        assert va.dtype == vb.dtype, (ctx, f, va.dtype, vb.dtype)
+        assert va.shape == vb.shape, (ctx, f, va.shape, vb.shape)
+        np.testing.assert_array_equal(va, vb, err_msg=f"{ctx} csr.{f}")
     for f in BOOK_FIELDS:
         va, vb = getattr(ba, f), getattr(bb, f)
         assert va.dtype == vb.dtype, (ctx, f)

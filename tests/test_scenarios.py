@@ -1,7 +1,10 @@
 """Scenario engine: library scenarios run green, events do what they say."""
+import warnings
+
 import numpy as np
 import pytest
 
+from repro.core import ClockConfig
 from repro.core.economy import make_fleet_economy
 from repro.core.scenarios import (
     Arrivals,
@@ -9,6 +12,7 @@ from repro.core.scenarios import (
     CapacityShock,
     Departures,
     FlashCrowd,
+    RoundStarvedWarning,
     SCENARIOS,
     Scenario,
     WeightingSwap,
@@ -26,6 +30,27 @@ def test_library_scenario_runs_green(name):
     assert res.feasible, name
     assert res.total_migrations > 0, name
     assert len(res.stats) == 4 and len(res.util_spread) == 5
+
+
+def test_round_starved_epoch_warns_loudly():
+    """An epoch that hits max_rounds without clearing must raise
+    RoundStarvedWarning — silent non-convergence is how truncated prices
+    masquerade as settled ones."""
+    eco, sc = SCENARIOS["congestion_relief"](seed=3, epochs=2)
+    eco.clock = ClockConfig(max_rounds=1)  # starve the clock
+    with pytest.warns(RoundStarvedWarning, match="max_rounds=1"):
+        res = run_scenario(eco, sc)
+    assert not res.converged
+    assert res.total_rounds <= 2
+
+
+def test_converged_scenario_does_not_warn():
+    eco, sc = SCENARIOS["congestion_relief"](seed=3, epochs=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RoundStarvedWarning)
+        res = run_scenario(eco, sc)
+    assert res.converged
+    assert res.total_rounds == sum(s.rounds for s in res.stats) > 0
 
 
 def test_congestion_relief_shrinks_utilization_spread():

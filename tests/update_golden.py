@@ -6,6 +6,15 @@ Run this ONLY when settlement output is *supposed* to change (a deliberate
 mechanism/numerics change), and say so in the commit message — the fixtures
 exist so refactors that should be settlement-neutral (like packer rewrites)
 cannot silently shift prices, premiums, migrations, or surplus.
+
+Two fixture sets are pinned per seed:
+
+* ``economy_seed<seed>.json`` — the default economy (cold starts, fixed
+  clock schedule).  A change here means default settlement output moved.
+* ``economy_warm_seed<seed>.json`` — ``Economy(warm_start=True)``: epoch 0
+  is bit-identical to the cold set (nothing to warm-start from), later
+  epochs seed the clock with max(p_prev, reserve).  Pinned separately so
+  the warm path cannot drift while the cold path stays green.
 """
 import json
 import os
@@ -22,8 +31,8 @@ SEEDS = (0, 3, 7)
 EPOCHS = 3
 
 
-def snapshot(seed: int) -> dict:
-    eco = make_fleet_economy(seed=seed)
+def snapshot(seed: int, warm_start: bool = False) -> dict:
+    eco = make_fleet_economy(seed=seed, warm_start=warm_start)
     stats = []
     for _ in range(EPOCHS):
         s = eco.run_epoch()
@@ -42,18 +51,22 @@ def snapshot(seed: int) -> dict:
                 "rounds": int(s.rounds),
                 "converged": bool(s.converged),
                 "system_ok": bool(s.system_ok),
+                "warm_started": bool(s.warm_started),
             }
         )
-    return {"seed": seed, "epochs": EPOCHS, "stats": stats}
+    return {"seed": seed, "epochs": EPOCHS, "warm_start": warm_start,
+            "stats": stats}
 
 
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     for seed in SEEDS:
-        path = os.path.join(GOLDEN_DIR, f"economy_seed{seed}.json")
-        with open(path, "w") as f:
-            json.dump(snapshot(seed), f, indent=1, allow_nan=True)
-        print(f"wrote {path}")
+        for warm in (False, True):
+            stem = "economy_warm" if warm else "economy"
+            path = os.path.join(GOLDEN_DIR, f"{stem}_seed{seed}.json")
+            with open(path, "w") as f:
+                json.dump(snapshot(seed, warm), f, indent=1, allow_nan=True)
+            print(f"wrote {path}")
 
 
 if __name__ == "__main__":
