@@ -9,6 +9,12 @@ two records are skipped — a brand-new benchmark has no baseline to regress
 against.  Run it right after a ``--json`` benchmark pass, so the comparison
 is fresh-run vs last-recorded.
 
+When ``$GITHUB_STEP_SUMMARY`` is set (i.e. inside a GitHub Actions job),
+a per-benchmark markdown trend table — latest vs previous us_per_call,
+ratio, verdict, and the recent record history with git SHAs — is appended
+to the job summary, so the settlement perf trajectory is readable from the
+Actions UI without downloading the artifact.
+
 Caveat: records carry no machine metadata, so a comparison across hosts
 (dev container vs CI runner) or across workload overrides
 (ECONOMY_EPOCH_AGENTS) measures the environment as much as the code — the
@@ -19,21 +25,79 @@ before treating it as a code regression.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from .run import JSON_PATH, _load_records
 
+HISTORY = 5  # records per benchmark shown in the trend table
+
+
+def _trend_rows(names: list[str], records: list) -> list[dict]:
+    """One summary row per guarded benchmark (newest record last)."""
+    rows = []
+    for name in names:
+        same = [r for r in records if r.get("name") == name]
+        row = {"name": name, "history": same[-HISTORY:]}
+        if len(same) >= 2:
+            prev, last = same[-2], same[-1]
+            row["prev"], row["last"] = prev, last
+            row["ratio"] = last["us_per_call"] / max(prev["us_per_call"], 1e-9)
+        rows.append(row)
+    return rows
+
+
+def _markdown_table(rows: list[dict], threshold: float) -> str:
+    lines = [
+        "### Settlement benchmark trend",
+        "",
+        f"Guard threshold: >{threshold:g}x us_per_call vs the prior record "
+        "fails the job.",
+        "",
+        "| benchmark | latest us/call | prev us/call | ratio | verdict | "
+        f"last {HISTORY} records (us/call @ sha) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for row in rows:
+        hist = "; ".join(
+            f"{r['us_per_call']:.0f} @{r['git_sha']}" for r in row["history"]
+        ) or "—"
+        if "ratio" in row:
+            verdict = "REGRESSION" if row["ratio"] > threshold else "ok"
+            lines.append(
+                f"| {row['name']} | {row['last']['us_per_call']:.1f} | "
+                f"{row['prev']['us_per_call']:.1f} | {row['ratio']:.2f}x | "
+                f"{verdict} | {hist} |"
+            )
+        else:
+            lines.append(
+                f"| {row['name']} | — | — | — | no baseline | {hist} |"
+            )
+    return "\n".join(lines) + "\n"
+
+
+def _write_step_summary(table: str) -> None:
+    """Append the trend table to the GitHub Actions job summary, if any."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write(table)
+
 
 def check(names: list[str], threshold: float, path: str = JSON_PATH) -> int:
     records = _load_records(path)
+    rows = _trend_rows(names, records)
     failed = False
-    for name in names:
-        same = [r for r in records if r.get("name") == name]
-        if len(same) < 2:
-            print(f"# {name}: {len(same)} record(s) — no prior baseline, skipped")
+    for row in rows:
+        name = row["name"]
+        if "ratio" not in row:
+            print(
+                f"# {name}: {len(row['history'])} record(s) — no prior "
+                "baseline, skipped"
+            )
             continue
-        prev, last = same[-2], same[-1]
-        ratio = last["us_per_call"] / max(prev["us_per_call"], 1e-9)
+        prev, last, ratio = row["prev"], row["last"], row["ratio"]
         line = (
             f"{name}: {last['us_per_call']:.1f} us (@{last['git_sha']}) vs "
             f"{prev['us_per_call']:.1f} us (@{prev['git_sha']}) = {ratio:.2f}x"
@@ -43,6 +107,7 @@ def check(names: list[str], threshold: float, path: str = JSON_PATH) -> int:
             failed = True
         else:
             print(f"ok {line}")
+    _write_step_summary(_markdown_table(rows, threshold))
     return 1 if failed else 0
 
 

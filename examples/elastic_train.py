@@ -15,7 +15,6 @@ it on real accelerators or be patient on CPU).
     PYTHONPATH=src python examples/elastic_train.py [--production]
 """
 import argparse
-import os
 import tempfile
 import time
 
@@ -24,7 +23,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import Checkpointer
-from repro.checkpoint.elastic import reshard
 from repro.configs import get_smoke
 from repro.core import (
     ClockConfig, ResourcePool, clock_auction, operator_supply_bids,

@@ -24,9 +24,17 @@ def run_scenario_mode(args) -> None:
     print(f"scenario: {sc.name} — {sc.description}")
     print(f"fleet: {len(eco.clusters)} clusters × {eco.rtypes}, "
           f"{len(eco.pop)} engineering teams")
+    if eco.policies:
+        counts = np.bincount(eco.pop.policy, minlength=len(eco.policies))
+        mix = ", ".join(
+            f"{type(p).__name__}×{int(c)}" for p, c in zip(eco.policies, counts)
+        )
+        print(f"policy mix: {mix}")
     res = run_scenario(eco, sc, verbose=True)
     print("\n== outcome ==")
     print(f"events applied: {len(res.events)}")
+    util0 = [round(float(s.psi[:eco.T].mean()), 3) for s in res.stats]
+    print(f"cluster-0 utilization per epoch: {util0}")
     print(f"utilization spread trajectory: "
           f"{[round(s, 3) for s in res.util_spread]}")
     print(f"spread shrank: {res.spread_shrank}")

@@ -48,8 +48,14 @@ from .auction import (
     users_mesh,
     verify_system,
 )
+from .policies import BidderPolicy, Observation
 from .reserve import DEFAULT_WEIGHTING, WeightingFn, reserve_prices
-from .types import ResourcePool, csr_problem_from_arrays, pack_bids_sparse
+from .types import (
+    ResourcePool,
+    bundle_cluster_costs,
+    csr_problem_from_arrays,
+    pack_bids_sparse,
+)
 
 
 @dataclasses.dataclass
@@ -75,12 +81,18 @@ class Agent:
     # mutable state
     placed: int = -1  # cluster currently holding its resources
     epoch: int = 0
+    fill_rate: float = 1.0  # EMA of buy-bid fills (policy observation)
+    policy: int = 0  # index into the economy's policy list
 
 
 _POP_FIELDS = (
     "req", "value", "home", "relocation_cost", "mobility",
     "margin0", "margin_decay", "arbitrage", "budget", "placed", "epoch",
+    "fill_rate", "policy",
 )
+
+# per-epoch EMA weight of the newest fill observation in fill_rate
+FILL_EMA = 0.5
 
 
 @dataclasses.dataclass
@@ -104,16 +116,22 @@ class AgentPopulation:
     budget: np.ndarray  # (N,) float64
     placed: np.ndarray  # (N,) int64 cluster holding resources (-1 = none)
     epoch: np.ndarray  # (N,) int64 epochs this agent has bid (drives margin)
+    fill_rate: np.ndarray | None = None  # (N,) float64 EMA of buy fills
+    policy: np.ndarray | None = None  # (N,) int64 policy-list index
     names: list[str] | None = None  # optional display names
 
     def __post_init__(self):
         self.req = np.atleast_2d(np.asarray(self.req, np.float64))
         n = self.req.shape[0]
+        if self.fill_rate is None:
+            self.fill_rate = np.ones(n, np.float64)
+        if self.policy is None:
+            self.policy = np.zeros(n, np.int64)
         for f in ("value", "relocation_cost", "mobility", "margin0",
-                  "margin_decay", "arbitrage", "budget"):
+                  "margin_decay", "arbitrage", "budget", "fill_rate"):
             setattr(self, f, np.broadcast_to(
                 np.asarray(getattr(self, f), np.float64), (n,)).copy())
-        for f in ("home", "placed", "epoch"):
+        for f in ("home", "placed", "epoch", "policy"):
             setattr(self, f, np.broadcast_to(
                 np.asarray(getattr(self, f), np.int64), (n,)).copy())
         if self.names is not None and len(self.names) != n:
@@ -144,6 +162,8 @@ class AgentPopulation:
             budget=np.array([a.budget for a in agents], np.float64),
             placed=np.array([a.placed for a in agents], np.int64),
             epoch=np.array([a.epoch for a in agents], np.int64),
+            fill_rate=np.array([a.fill_rate for a in agents], np.float64),
+            policy=np.array([a.policy for a in agents], np.int64),
             names=[a.name for a in agents],
         )
 
@@ -173,6 +193,8 @@ class AgentPopulation:
                 budget=float(self.budget[i]),
                 placed=int(self.placed[i]),
                 epoch=int(self.epoch[i]),
+                fill_rate=float(self.fill_rate[i]),
+                policy=int(self.policy[i]),
             )
             for i in range(len(self))
         ]
@@ -208,20 +230,11 @@ class AgentPopulation:
         return AgentPopulation(names=names, **kw)
 
 
-def believed_bundle_costs(req: np.ndarray, belief: np.ndarray) -> np.ndarray:
-    """(N, C) believed $ cost of each agent's bundle in each cluster.
-
-    ``believed[n, c] = Σ_t req[n, t] · belief[c·T + t]`` accumulated in t
-    order (float64) — the single belief-cost helper both the trader path
-    (expected revenue at the home cluster) and the buy path (bid cap per
-    reachable cluster) price through.
-    """
-    req = np.asarray(req, np.float64)
-    b = np.asarray(belief, np.float64).reshape(-1, req.shape[1])  # (C, T)
-    out = np.zeros((req.shape[0], b.shape[0]), np.float64)
-    for t in range(req.shape[1]):
-        out += req[:, t, None] * b[None, :, t]
-    return out
+# Belief-cost fold shared by the trader path (expected revenue at the home
+# cluster), the buy path (bid cap per reachable cluster), and the bidder
+# policies — now :func:`repro.core.types.bundle_cluster_costs`, re-exported
+# under its historical name.
+believed_bundle_costs = bundle_cluster_costs
 
 
 @dataclasses.dataclass
@@ -289,6 +302,8 @@ class Economy:
         settle_blocks: int = 8,
         packer: str = "vectorized",
         warm_start: bool = False,
+        warm_decay: float = 1.0,
+        policies: BidderPolicy | Sequence[BidderPolicy] | None = None,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -319,6 +334,32 @@ class Economy:
         # memory (prices can only fall back as far as the next epoch's
         # reserve).  Cold (default) keeps every pinned trajectory unchanged.
         self.warm_start = warm_start
+        # Staleness decay on the warm seed: pools with no buy fills in the
+        # prior epoch re-seed at reserve + warm_decay·(p_prev − reserve)
+        # instead of full max(p_prev, reserve), so a one-epoch demand spike
+        # cannot pin an idle pool's prices high for many epochs.  1.0 (the
+        # default) keeps full price memory — bit-identical to the pre-decay
+        # warm path.
+        if not 0.0 <= warm_decay <= 1.0:
+            raise ValueError(f"warm_decay must be in [0, 1], got {warm_decay}")
+        self.warm_decay = warm_decay
+        # Bidder policies (adaptive behavior): None disables the subsystem
+        # entirely; a single policy applies to every agent; a list is
+        # indexed by the population's per-agent ``policy`` ids, so scenarios
+        # can mix policy populations.  Policy actions are per-epoch overlays
+        # consumed by the packer — see repro.core.policies.
+        if policies is None:
+            self.policies: list[BidderPolicy] | None = None
+        elif isinstance(policies, BidderPolicy):
+            self.policies = [policies]
+        else:
+            self.policies = list(policies)
+        # sticky-reach storage: last epoch's reach sort keys per agent (NaN
+        # rows = no stored keys yet, e.g. arrivals); policy actions choose
+        # per agent between these and the fresh epoch draw
+        self._reach_keys: np.ndarray | None = None
+        self._last_reserve: np.ndarray | None = None  # prior epoch's curve
+        self._last_filled: np.ndarray | None = None  # (R,) buy-fill flags
         self.C, self.T = self.capacity.shape
         if self.pop.num_rtypes != self.T:
             raise ValueError(
@@ -347,6 +388,11 @@ class Economy:
         held = newcomers.placed >= 0
         np.add.at(self.usage, newcomers.placed[held], newcomers.req[held])
         self.usage = np.minimum(self.usage, self.capacity)
+        if self._reach_keys is not None:
+            # arrivals have no stored reach yet: NaN rows force a fresh draw
+            self._reach_keys = np.vstack(
+                [self._reach_keys, np.full((len(newcomers), self.C), np.nan)]
+            )
         return int(len(newcomers))
 
     def remove_agents(self, mask: np.ndarray) -> int:
@@ -358,6 +404,8 @@ class Economy:
         np.add.at(self.usage, gone.placed[held], -gone.req[held])
         self.usage = np.maximum(self.usage, 0.0)
         self.pop = self.pop.select(~mask)
+        if self._reach_keys is not None:
+            self._reach_keys = self._reach_keys[~mask]
         return int(held.sum())
 
     # -- pool bookkeeping ----------------------------------------------------
@@ -417,6 +465,88 @@ class Economy:
         perm_keys = self.rng.random((n, self.C))
         return u_arb, perm_keys
 
+    # -- bidder policies ------------------------------------------------------
+    def observation(self) -> Observation:
+        """The policy observation for the epoch about to be settled (copies —
+        policies may scribble on it without touching economy state)."""
+        return Observation(
+            epoch=len(self.price_history),
+            prices=(
+                self.price_history[-1].copy() if self.price_history else None
+            ),
+            reserve=(
+                None if self._last_reserve is None
+                else self._last_reserve.copy()
+            ),
+            psi=self.utilization().reshape(-1).copy(),
+            belief=self.belief.copy(),
+            fill_rate=self.pop.fill_rate.copy(),
+            num_clusters=self.C,
+            num_rtypes=self.T,
+        )
+
+    def _apply_policies(
+        self, perm_keys: np.ndarray, dry_run: bool
+    ) -> tuple[
+        np.ndarray, np.ndarray | None, np.ndarray | None, np.ndarray | None
+    ]:
+        """Fold every policy's action into this epoch's packer inputs.
+
+        Returns ``(perm_keys, pi_scale, arbitrage, margin)`` — the effective
+        reach sort keys (sticky keys restored, bias added) plus the optional
+        π scale, sell-intent, and margin override arrays, all full-N.
+        Binding epochs
+        also store this epoch's (pre-bias) reach keys for next epoch's
+        sticky-reach choices; dry runs store nothing, so ``preview_prices``
+        stays side-effect-free with policies attached.
+        """
+        if not self.policies:
+            return perm_keys, None, None, None
+        pop = self.pop
+        if len(pop) and int(pop.policy.max()) >= len(self.policies):
+            raise ValueError(
+                f"agent policy id {int(pop.policy.max())} out of range for "
+                f"{len(self.policies)} configured policies"
+            )
+        obs = self.observation()
+        # perm_keys is this epoch's fresh draw, owned by the caller and not
+        # reused — mutate it in place (policy subsets are disjoint, so no
+        # cross-policy aliasing) and keep one copy as the pre-bias store
+        base_keys = perm_keys.copy()  # post-sticky, pre-bias: next epoch's store
+        pi_scale: np.ndarray | None = None
+        arb: np.ndarray | None = None
+        margin: np.ndarray | None = None
+        for pid, pol in enumerate(self.policies):
+            idx = np.flatnonzero(pop.policy == pid)
+            if idx.size == 0:
+                continue
+            act = pol.act(obs, pop, idx)
+            if act is None:
+                continue
+            if act.redraw_reach is not None and self._reach_keys is not None:
+                keep = ~np.asarray(act.redraw_reach, bool)
+                keep &= ~np.isnan(self._reach_keys[idx]).any(axis=1)
+                rows = idx[keep]
+                perm_keys[rows] = self._reach_keys[rows]
+                base_keys[rows] = self._reach_keys[rows]
+            if act.reach_bias is not None:
+                perm_keys[idx] += act.reach_bias
+            if act.pi_scale is not None:
+                if pi_scale is None:
+                    pi_scale = np.ones(len(pop), np.float64)
+                pi_scale[idx] = act.pi_scale
+            if act.arbitrage is not None:
+                if arb is None:
+                    arb = pop.arbitrage.copy()
+                arb[idx] = act.arbitrage
+            if act.margin is not None:
+                if margin is None:
+                    margin = pop.margins()
+                margin[idx] = act.margin
+        if not dry_run:
+            self._reach_keys = base_keys
+        return perm_keys, pi_scale, arb, margin
+
     # -- bid-book construction -----------------------------------------------
     def _pack_bids_vectorized(
         self,
@@ -425,6 +555,9 @@ class Economy:
         base_cost_flat: np.ndarray,
         u_arb: np.ndarray,
         perm_keys: np.ndarray,
+        pi_scale: np.ndarray | None = None,
+        arbitrage: np.ndarray | None = None,
+        margin: np.ndarray | None = None,
     ) -> BidBook:
         """Assemble the epoch bid book as pure array ops — O(nnz), no
         per-agent Python — emitting the variable-K CSR encoding directly.
@@ -445,13 +578,14 @@ class Economy:
         pop = self.pop
         n, C, T, R = len(pop), self.C, self.T, self.R
         placed, home = pop.placed, pop.home
+        arb = pop.arbitrage if arbitrage is None else arbitrage
 
         # (a) who sells, who buys
         psi_home0 = psi_flat[np.clip(placed, 0, C - 1) * T]  # rtype-0 util at placed
         sells = (
             (placed >= 0)
-            & (pop.arbitrage > 0)
-            & (u_arb < pop.arbitrage)
+            & (arb > 0)
+            & (u_arb < arb)
             & (psi_home0 > 0.75)
         )
         wants = (placed < 0) | sells
@@ -548,13 +682,16 @@ class Economy:
             raw_value = pop.value[buyers, None] - pop.relocation_cost[
                 buyers, None
             ] * (np.arange(C)[None, :] != home_b[:, None])
+            margins_eff = pop.margins() if margin is None else margin
             pi_nc = np.minimum(
                 np.minimum(
                     raw_value,
-                    believed_b * (1.0 + pop.margins()[buyers])[:, None],
+                    believed_b * (1.0 + margins_eff[buyers])[:, None],
                 ),
                 pop.budget[buyers, None],
             )
+            if pi_scale is not None:
+                pi_nc = pi_nc * pi_scale[buyers, None]
             bcc = np.where(valid, bc, 0).astype(np.int32)
             bpos = (starts[buy_row][:, :, None] + t_ar[None, None, :])[valid]
             flat_idx[bpos] = (
@@ -589,6 +726,9 @@ class Economy:
         base_cost_flat: np.ndarray,
         u_arb: np.ndarray,
         perm_keys: np.ndarray,
+        pi_scale: np.ndarray | None = None,
+        arbitrage: np.ndarray | None = None,
+        margin: np.ndarray | None = None,
     ) -> BidBook:
         """Reference per-agent packer (the pre-vectorization code path).
 
@@ -600,8 +740,9 @@ class Economy:
         pop = self.pop
         T, C = self.T, self.C
         t_arange = np.arange(T)
+        arb = pop.arbitrage if arbitrage is None else arbitrage
         believed = believed_bundle_costs(pop.req, self.belief)  # shared helper
-        margins = pop.margins()
+        margins = pop.margins() if margin is None else margin
         sparse_rows: list[list[tuple[np.ndarray, np.ndarray]]] = []
         pi_rows: list[np.ndarray] = []
         kinds: list[tuple] = []  # (agent_idx, kind, cluster list)
@@ -625,8 +766,8 @@ class Economy:
             wants_placement = placed_i < 0
             sells = (
                 placed_i >= 0
-                and pop.arbitrage[i] > 0
-                and u_arb[i] < pop.arbitrage[i]
+                and arb[i] > 0
+                and u_arb[i] < arb[i]
                 and psi_flat[self.pool_idx(placed_i, 0)] > 0.75
             )
             if sells:
@@ -666,6 +807,8 @@ class Economy:
                     believed_c * (1.0 + float(margins[i])),
                     float(pop.budget[i]),
                 )
+                if pi_scale is not None:
+                    pi = pi * float(pi_scale[i])
                 bundles.append(
                     ((c * T + t_arange).astype(np.int32), req_i.astype(np.float32))
                 )
@@ -704,22 +847,39 @@ class Economy:
             bundle_cluster=bundle_cluster,
         )
 
-    def pack_bid_book(self) -> BidBook:
-        """Pack the coming epoch's bid book without settling (consumes RNG).
-
-        Mostly useful for inspection and the parity suite; ``run_epoch``
-        draws and packs internally.
-        """
-        psi_flat = self.utilization().reshape(-1)
-        tilde_p = reserve_prices(self.pools(), self.weighting)
-        base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
+    def _draw_and_pack(
+        self,
+        psi_flat: np.ndarray,
+        tilde_p: np.ndarray,
+        base_cost_flat: np.ndarray,
+        dry_run: bool,
+    ) -> BidBook:
+        """Draw epoch randomness, fold in policy actions, pack the book."""
         u_arb, perm_keys = self._draw_bid_randomness()
+        perm_keys, pi_scale, arb, margin = self._apply_policies(
+            perm_keys, dry_run
+        )
         pack = (
             self._pack_bids_vectorized
             if self.packer == "vectorized"
             else self._pack_bids_loop
         )
-        return pack(psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys)
+        return pack(
+            psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys,
+            pi_scale=pi_scale, arbitrage=arb, margin=margin,
+        )
+
+    def pack_bid_book(self) -> BidBook:
+        """Pack the coming epoch's bid book without settling (consumes RNG).
+
+        Mostly useful for inspection and the parity suite; ``run_epoch``
+        draws and packs internally.  Policy actions are applied but not
+        persisted (sticky-reach storage is untouched), like a dry run.
+        """
+        psi_flat = self.utilization().reshape(-1)
+        tilde_p = reserve_prices(self.pools(), self.weighting)
+        base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
+        return self._draw_and_pack(psi_flat, tilde_p, base_cost_flat, dry_run=True)
 
     # -- one auction epoch ---------------------------------------------------
     def run_epoch(self, dry_run: bool = False) -> EpochStats:
@@ -740,18 +900,37 @@ class Economy:
                 self.rng.bit_generator.state = rng_state
         return self._settle_epoch(dry_run=False)
 
+    def _warm_seed(self, tilde_p: np.ndarray) -> np.ndarray:
+        """Next clock's starting prices under warm starts.
+
+        The base seed is ``max(p_prev, reserve)`` — the last binding epoch's
+        clearing point floored at this epoch's reserve curve, so the
+        ascending clock re-discovers only what actually moved.  With
+        ``warm_decay < 1``, pools that saw *no buy fills* last epoch decay
+        their memory toward the reserve curve instead:
+        ``reserve + warm_decay·max(p_prev − reserve, 0)``.  A one-epoch
+        demand spike on a pool nobody then trades in thus bleeds out of the
+        seed geometrically (per idle epoch) rather than pinning the pool's
+        start price high indefinitely; the reserve stays a hard floor
+        either way.  ``warm_decay == 1`` reproduces the base seed exactly
+        (the pre-decay warm path, pinned by the warm goldens).
+        """
+        p_prev = self.price_history[-1]
+        seed = np.maximum(p_prev, tilde_p)
+        if self.warm_decay < 1.0 and self._last_filled is not None:
+            idle = ~self._last_filled
+            decayed = tilde_p + self.warm_decay * np.maximum(
+                p_prev - tilde_p, 0.0
+            )
+            seed = np.where(idle, decayed, seed)
+        return seed
+
     def _settle_epoch(self, dry_run: bool) -> EpochStats:
         psi_flat = self.utilization().reshape(-1).copy()
         tilde_p = reserve_prices(self.pools(), self.weighting)
         base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
 
-        u_arb, perm_keys = self._draw_bid_randomness()
-        pack = (
-            self._pack_bids_vectorized
-            if self.packer == "vectorized"
-            else self._pack_bids_loop
-        )
-        book = pack(psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys)
+        book = self._draw_and_pack(psi_flat, tilde_p, base_cost_flat, dry_run)
         if book.num_rows == 0:
             raise RuntimeError(
                 "empty bid book: no operator supply and no bidding agents"
@@ -771,9 +950,7 @@ class Economy:
             mesh = users_mesh()  # auto-shard over all local devices
         warm = self.warm_start and bool(self.price_history)
         if warm:
-            # last clearing point floored at this epoch's reserve curve: the
-            # ascending clock re-discovers only what actually moved
-            start = jnp.asarray(np.maximum(self.price_history[-1], tilde_p))
+            start = jnp.asarray(self._warm_seed(np.asarray(tilde_p)))
         else:
             start = jnp.asarray(tilde_p)
         if mesh is not None:
@@ -813,6 +990,7 @@ class Economy:
         self.belief = 0.25 * self.belief + 0.75 * prices
         self.pop.epoch += 1
         self.price_history.append(prices)  # also next epoch's warm-start seed
+        self._last_reserve = np.asarray(tilde_p)  # policy observation
 
         return EpochStats(
             epoch=len(self.price_history) - 1,
@@ -891,6 +1069,20 @@ class Economy:
         pop.placed[buy_agents] = bc
         pop.home[buy_agents] = bc
 
+        # policy feedback: per-agent buy-fill EMA (every agent that entered a
+        # buy row, won or lost) and per-pool buy-fill flags (the staleness
+        # signal the warm-seed decay keys off)
+        buy_rows_all = np.flatnonzero(kind == KIND_BUY)
+        ba = book.row_agent[buy_rows_all]
+        pop.fill_rate[ba] = (1.0 - FILL_EMA) * pop.fill_rate[ba] + (
+            FILL_EMA * won[buy_rows_all].astype(np.float64)
+        )
+        filled = np.zeros(self.R, bool)
+        if bc.size:
+            pools = bc[:, None] * self.T + np.arange(self.T)[None, :]
+            filled[pools[pop.req[buy_agents] > 0]] = True
+        self._last_filled = filled
+
         return {
             "gamma_median": float(np.median(gammas)) if gammas.size else float("nan"),
             "gamma_mean": float(np.mean(gammas)) if gammas.size else float("nan"),
@@ -924,6 +1116,11 @@ class Economy:
             if kind == KIND_OP:
                 continue
             n_agent_bids += 1
+            if kind == KIND_BUY:
+                a = int(book.row_agent[u])
+                pop.fill_rate[a] = (1.0 - FILL_EMA) * pop.fill_rate[a] + (
+                    FILL_EMA * float(won[u])
+                )
             if not won[u]:
                 continue
             n_agent_wins += 1
@@ -958,6 +1155,13 @@ class Economy:
         for a, c in buy_pairs:
             pop.placed[a] = c
             pop.home[a] = c
+
+        filled = np.zeros(self.R, bool)
+        for a, c in buy_pairs:
+            for t in range(self.T):
+                if pop.req[a, t] > 0:
+                    filled[c * self.T + t] = True
+        self._last_filled = filled
 
         g = np.asarray(gammas, np.float64)
         return {

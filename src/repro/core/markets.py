@@ -71,6 +71,7 @@ def fleet_population(
     value_mult: float = 1.0,
     home: int | None = None,
     placed_frac: float | None = None,  # None → the shared fleet default
+    policy: int | np.ndarray = 0,
 ) -> AgentPopulation:
     """Vectorized fleet agents — ``make_fleet_economy``'s distribution drawn
     as whole arrays, so 10⁶ agents materialize in milliseconds.
@@ -78,7 +79,9 @@ def fleet_population(
     Demand vectors look like LM training/serving jobs (chips, HBM ∝ chips,
     ICI ∝ chips); homes skew 70/30 toward the congested clusters unless a
     fixed ``home`` is given.  ``value_mult`` scales private values (flash
-    crowds bid hot).
+    crowds bid hot).  ``policy`` (scalar or (N,) array) assigns each agent
+    its index into the economy's bidder-policy list, so 10⁵-agent mixed
+    policy populations build without per-agent Python.
     """
     d = FLEET_DISTRIBUTION
     if placed_frac is None:
@@ -117,6 +120,7 @@ def fleet_population(
         budget=np.full(n, np.inf),
         placed=placed,
         epoch=np.zeros(n, np.int64),
+        policy=np.broadcast_to(np.asarray(policy, np.int64), (n,)).copy(),
     )
 
 
@@ -128,6 +132,7 @@ def fleet_economy(
     congested_frac: float = 0.4,
     headroom: float = 1.3,
     clock: ClockConfig = ClockConfig(),
+    policy: int | np.ndarray = 0,
     **economy_kwargs,
 ) -> Economy:
     """A fleet economy built entirely from arrays — the scale twin of
@@ -140,7 +145,8 @@ def fleet_economy(
     """
     rng = np.random.default_rng(seed)
     pop = fleet_population(
-        num_agents, num_clusters, seed=seed, congested_frac=congested_frac
+        num_agents, num_clusters, seed=seed, congested_frac=congested_frac,
+        policy=policy,
     )
     chips_c = (
         240.0 * num_agents / num_clusters * headroom

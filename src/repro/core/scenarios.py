@@ -27,14 +27,18 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 
-from .auction import ClockConfig
 from .economy import AgentPopulation, Economy, EpochStats, make_fleet_economy
-from .markets import fleet_population
-from .reserve import CURVE_FAMILIES, WeightingFn
+from .markets import FLEET_BASE_COST, FLEET_RTYPES, fleet_population
+from .policies import (
+    BudgetSmoothingPolicy,
+    PriceChasingPolicy,
+    StaticPolicy,
+)
+from .reserve import CURVE_FAMILIES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -379,10 +383,86 @@ def sticky_relocation(seed: int = 3, epochs: int = 6, **eco_kwargs):
     )
 
 
+def migration_relief(seed: int = 3, epochs: int = 7, **eco_kwargs):
+    """The paper's headline transition as *behavior*, not mechanism: a hot,
+    over-reserve pool drains across epochs because price-chasing bidders
+    re-bid toward under-utilized pools, while high-relocation-cost agents
+    pay the congestion premium to stay put.
+
+    Three policy populations share one market (the first mixed-policy
+    scenario): chasers and stickies both run :class:`PriceChasingPolicy` —
+    the relocation-cost friction term alone splits them into movers and
+    premium payers — and the background fleet in the cold clusters splits
+    between :class:`StaticPolicy` and :class:`BudgetSmoothingPolicy`.
+    Agent names carry the group (``chaser-*`` / ``sticky-*`` / ``bg-*``) so
+    tests and reports can track each population's fate.
+    """
+    rng = np.random.default_rng(seed)
+    C = 4
+    base_cost = np.asarray(FLEET_BASE_COST)
+    n_chase, n_sticky, n_bg = 120, 60, 60
+    n = n_chase + n_sticky + n_bg
+    group = np.repeat(np.arange(3), [n_chase, n_sticky, n_bg])
+
+    chips = rng.choice(np.asarray([16.0, 32.0, 64.0]), size=n)
+    req = np.stack([chips, chips * 12.0, chips * 100.0], axis=1)
+    cost = req @ base_cost
+    hot = group < 2  # chasers + stickies are homed (and placed) in cluster 0
+    home = np.where(hot, 0, rng.integers(1, C, n))
+    placed = np.where(
+        hot, home, np.where(rng.random(n) < 0.5, home, -1)
+    )
+    value = cost * np.select([group == 0, group == 1], [2.5, 5.0], 1.6)
+    reloc = cost * np.select([group == 0, group == 1], [0.03, 5.0], 0.5)
+    arbitrage = np.select([group == 0, group == 1], [0.02, 0.25], 0.0)
+    # chasers AND stickies run PriceChasing (id 1) — friction does the
+    # splitting; background alternates Static (0) / BudgetSmoothing (2)
+    policy = np.where(hot, 1, np.where(np.arange(n) % 2 == 0, 0, 2))
+    tags = ("chaser", "sticky", "bg")
+    pop = AgentPopulation(
+        req=req, value=value, home=home, relocation_cost=reloc,
+        mobility=np.full(n, 1.0), margin0=np.full(n, 1.0),
+        margin_decay=np.full(n, 0.30), arbitrage=arbitrage,
+        budget=np.full(n, np.inf), placed=placed,
+        epoch=np.zeros(n, np.int64), policy=policy,
+        names=[f"{tags[g]}-{i}" for i, g in enumerate(group)],
+    )
+
+    # cluster 0 sized so its pre-loaded utilization is exactly 0.93 — well
+    # over the reserve target (φ_exp(0.93) ≈ 3.4× base cost) and over the
+    # trader gate at 0.75; each cold cluster alone could absorb the fleet
+    capacity = np.zeros((C, 3))
+    capacity[0] = req[hot].sum(axis=0) / 0.93
+    for c in range(1, C):
+        capacity[c] = req.sum(axis=0) * rng.uniform(0.8, 1.2)
+    eco = Economy(
+        clusters=[f"cluster-{c}" for c in range(C)],
+        rtypes=list(FLEET_RTYPES),
+        capacity=capacity,
+        base_cost=base_cost,
+        agents=pop,
+        seed=seed + 1,
+        policies=[
+            StaticPolicy(),
+            PriceChasingPolicy(sell_prob=0.10),
+            BudgetSmoothingPolicy(),
+        ],
+        **eco_kwargs,
+    )
+    return eco, Scenario(
+        "migration_relief", epochs=epochs,
+        description=(
+            "price chasers drain a 93%-hot pool; sticky agents pay the "
+            "premium to stay"
+        ),
+    )
+
+
 SCENARIOS: dict[str, Callable] = {
     "congestion_relief": congestion_relief,
     "cluster_drain": cluster_drain,
     "price_shock": price_shock,
     "flash_crowd": flash_crowd,
     "sticky_relocation": sticky_relocation,
+    "migration_relief": migration_relief,
 }

@@ -564,6 +564,24 @@ def sparse_supply_scale(idx: np.ndarray, val: np.ndarray, num_res: int) -> np.nd
 _sparse_supply_scale = sparse_supply_scale  # internal alias kept for callers
 
 
+def bundle_cluster_costs(req: np.ndarray, prices_flat: np.ndarray) -> np.ndarray:
+    """(N, C) $ cost of each agent's bundle in each cluster at flat prices.
+
+    ``out[n, c] = Σ_t req[n, t] · prices_flat[c·T + t]`` accumulated in t
+    order (float64) — the single bundle-pricing fold every consumer (the
+    economy's trader and buy paths, and the bidder policies pricing last
+    epoch's settlement) shares, so identical inputs always produce
+    bit-identical costs.  ``prices_flat`` is any (C·T,) per-pool price
+    vector: the belief curve, a settled price vector, or a reserve curve.
+    """
+    req = np.asarray(req, np.float64)
+    p = np.asarray(prices_flat, np.float64).reshape(-1, req.shape[1])  # (C, T)
+    out = np.zeros((req.shape[0], p.shape[0]), np.float64)
+    for t in range(req.shape[1]):
+        out += req[:, t, None] * p[None, :, t]
+    return out
+
+
 def pack_bids_sparse(
     bundle_lists: Sequence[Sequence],
     pis: Sequence[float] | np.ndarray,
@@ -735,7 +753,11 @@ def densify(problem: SparseAuctionProblem) -> AuctionProblem:
     uu, bb = np.meshgrid(np.arange(u), np.arange(b), indexing="ij")
     np.add.at(
         bundles,
-        (uu[..., None].repeat(k, -1).reshape(-1), bb[..., None].repeat(k, -1).reshape(-1), idx.reshape(-1)),
+        (
+            uu[..., None].repeat(k, -1).reshape(-1),
+            bb[..., None].repeat(k, -1).reshape(-1),
+            idx.reshape(-1),
+        ),
         val.reshape(-1),
     )
     return AuctionProblem(

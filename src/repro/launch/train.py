@@ -33,7 +33,7 @@ from ..models.params import init_params, validated_pspec_tree
 from ..sharding import use_mesh
 from ..train.optimizer import AdamW
 from ..train.train_step import init_train_state, make_train_step
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 
 def build_mesh(spec: str | None):

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from ..sharding import shard
 from .config import ModelConfig
-from .layers import glu, glu_decls, matmul
+from .layers import glu, glu_decls
 from .params import ParamDecl
 
 

@@ -9,7 +9,6 @@ import dataclasses
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from .config import ModelConfig
 from . import transformer as tf

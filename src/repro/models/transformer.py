@@ -15,7 +15,6 @@ API (uniform across families; whisper has its own twin in whisper.py):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -36,7 +36,8 @@ SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 
 def dryrun_table(recs) -> str:
     rows = [
-        "| arch | shape | mesh | status | compile | HBM/chip (args+temps) | HLO collectives (full module) |",
+        "| arch | shape | mesh | status | compile | HBM/chip (args+temps) "
+        "| HLO collectives (full module) |",
         "|---|---|---|---|---|---|---|",
     ]
     for r in sorted(
@@ -44,7 +45,8 @@ def dryrun_table(recs) -> str:
     ):
         if r["status"] == "skip":
             rows.append(
-                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'].split(':')[0]}) | — | — | — |"
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| SKIP ({r['reason'].split(':')[0]}) | — | — | — |"
             )
             continue
         if r["status"] != "ok":
@@ -54,7 +56,7 @@ def dryrun_table(recs) -> str:
         arg = mem.get("argument_size_in_bytes") or 0
         tmp = mem.get("temp_size_in_bytes") or 0
         coll = r.get("collectives", {}).get("count_by_kind", {})
-        coll_s = " ".join(f"{k.split('-')[-1] if False else k}×{v}" for k, v in sorted(coll.items()))
+        coll_s = " ".join(f"{k}×{v}" for k, v in sorted(coll.items()))
         rows.append(
             f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']}s "
             f"| {fmt_b(arg + tmp)} | {coll_s} |"
@@ -64,7 +66,8 @@ def dryrun_table(recs) -> str:
 
 def roofline_table(recs) -> str:
     rows = [
-        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | MODEL/HLO flops | peak frac |",
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| MODEL/HLO flops | peak frac |",
         "|---|---|---|---|---|---|---|---|",
     ]
     for r in sorted(

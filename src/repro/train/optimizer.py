@@ -13,7 +13,6 @@ them: optimizer state memory drops ~|data| times with no manual collectives.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ directly.  Bubble fraction = (S−1)/(M+S−1) — pick M ≥ 4·S.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

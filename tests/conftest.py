@@ -1,5 +1,2 @@
-import pytest
-
-
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration tests")

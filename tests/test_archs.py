@@ -138,8 +138,6 @@ def test_long_500k_applicability():
 
 def test_deepseek_mtp_head():
     """DeepSeek MTP (depth 1): extra predict-ahead loss trains and is finite."""
-    import dataclasses as _dc
-
     base = get_smoke("deepseek-v3-671b")
     cfg = base.replace(mtp_depth=1)
     api = get_api(cfg)

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (
-    AuctionProblem,
     ClockConfig,
     ResourcePool,
     clock_auction,
@@ -15,7 +14,6 @@ from repro.core import (
     random_market,
     reserve_prices,
     sparse_proxy_demand_blocked,
-    surplus_and_trade,
     verify_system,
 )
 

@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (
+from repro.core import (  # noqa: E402
     ClockConfig,
     ResourcePool,
     clock_auction,

@@ -1,5 +1,4 @@
 """TBBL-style bid tree flattening (paper §II)."""
-import numpy as np
 import pytest
 
 from repro.core import All, BundleExplosion, OneOf, Res, flatten, pool_index

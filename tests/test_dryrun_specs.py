@@ -11,14 +11,11 @@ import os
 import subprocess
 import sys
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES
 from repro.launch.specs import input_specs
-from repro.models import get_api
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

@@ -65,6 +65,34 @@ def test_epochstats_match_golden(seed, warm):
             _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))
 
 
+def test_migration_relief_matches_golden():
+    """The policy-driven congestion-relief trajectory is pinned exactly —
+    prices, per-epoch utilization (the drain itself), premiums, migrations.
+    A change here means adaptive-bidder behavior moved, not just packing."""
+    from repro.core.scenarios import migration_relief, run_scenario
+
+    with open(os.path.join(GOLDEN_DIR, "scenario_migration_relief.json")) as f:
+        golden = json.load(f)
+    eco, sc = migration_relief()
+    assert sc.epochs == golden["epochs"]
+    res = run_scenario(eco, sc)
+    assert len(res.stats) == len(golden["stats"])
+    for s, rec in zip(res.stats, golden["stats"]):
+        ctx = ("migration_relief", rec["epoch"])
+        for k in ("psi", "prices", "reserve"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s, k), np.float64), np.asarray(rec[k]),
+                err_msg=f"{ctx} {k}",
+            )
+        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus",
+                  "value_of_trade"):
+            _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
+        for k in ("epoch", "migrations", "rounds"):
+            _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
+        for k in ("converged", "system_ok"):
+            _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))
+
+
 def test_warm_golden_differs_after_epoch0():
     """The warm fixtures must actually exercise the warm path: epoch 0
     matches cold (nothing to seed from), and at least one later epoch's

@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,0 +1,281 @@
+"""Bidder-policy subsystem: parity, behavior, and the migration_relief
+acceptance criteria.
+
+The parity protocol mirrors the packer suite: ``StaticPolicy`` (and a
+policy list containing only it) must be bit-identical to a policy-less
+economy — stats and full mutable state — across seeds 0/3/7 × 4 epochs.
+Behavioral tests pin the mechanics each policy overlay rides on (sticky
+reach storage, sell-intent override, π scaling, margin override) and the
+warm-seed staleness decay, and the scenario test asserts the paper's
+congestion→relief transition end-to-end: the hot pool's utilization
+strictly decreases across ≥3 consecutive epochs while ≥90% of the
+high-relocation-cost agents stay home.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.economy import make_fleet_economy
+from repro.core.policies import (
+    BidderPolicy,
+    BudgetSmoothingPolicy,
+    PolicyAction,
+    PriceChasingPolicy,
+    StaticPolicy,
+)
+from repro.core.scenarios import migration_relief, run_scenario
+
+SEEDS = (0, 3, 7)
+EPOCHS = 4
+
+
+def _stats_equal(sa, sb, ctx):
+    da, db = dataclasses.asdict(sa), dataclasses.asdict(sb)
+    for k, va in da.items():
+        vb = db[k]
+        if isinstance(va, np.ndarray):
+            assert va.shape == vb.shape and (va == vb).all(), (ctx, k)
+        elif isinstance(va, float) and np.isnan(va):
+            assert np.isnan(vb), (ctx, k)
+        else:
+            assert va == vb, (ctx, k, va, vb)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_static_policy_bit_identical_to_no_policy(seed):
+    """StaticPolicy is the parity oracle: EpochStats and mutable state match
+    a policy-less economy exactly, every epoch."""
+    eco_none = make_fleet_economy(seed=seed)
+    eco_static = make_fleet_economy(seed=seed, policies=StaticPolicy())
+    for epoch in range(EPOCHS):
+        _stats_equal(
+            eco_none.run_epoch(), eco_static.run_epoch(), (seed, epoch)
+        )
+    for f in ("usage", "belief"):
+        np.testing.assert_array_equal(
+            getattr(eco_none, f), getattr(eco_static, f), err_msg=f
+        )
+    for f in ("placed", "home", "epoch", "fill_rate"):
+        np.testing.assert_array_equal(
+            getattr(eco_none.pop, f), getattr(eco_static.pop, f), err_msg=f
+        )
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_policy_epochs_loop_vs_vectorized_parity(seed):
+    """Active policies flow through both packers identically: the loop
+    packer consumes the same overlay arrays, so mixed-policy EpochStats
+    stay bit-identical between packer implementations."""
+    mix = [StaticPolicy(), PriceChasingPolicy(), BudgetSmoothingPolicy()]
+
+    def build(packer):
+        eco = make_fleet_economy(seed=seed, policies=mix, packer=packer)
+        eco.pop.policy[:] = np.arange(len(eco.pop)) % 3
+        return eco
+
+    eco_v, eco_l = build("vectorized"), build("loop")
+    for epoch in range(EPOCHS):
+        _stats_equal(eco_v.run_epoch(), eco_l.run_epoch(), (seed, epoch))
+    np.testing.assert_array_equal(eco_v.pop.placed, eco_l.pop.placed)
+    np.testing.assert_array_equal(eco_v.pop.fill_rate, eco_l.pop.fill_rate)
+
+
+def test_policy_id_out_of_range_raises():
+    eco = make_fleet_economy(seed=0, policies=[StaticPolicy()])
+    eco.pop.policy[3] = 1
+    with pytest.raises(ValueError, match="policy id"):
+        eco.run_epoch()
+
+
+def test_preview_prices_side_effect_free_with_policies():
+    """Dry runs call act() but persist nothing: the binding epoch after a
+    preview settles to the identical prices, and sticky-reach storage is
+    untouched by the preview."""
+    eco = make_fleet_economy(seed=3, policies=PriceChasingPolicy())
+    eco.run_epoch()
+    stored = eco._reach_keys.copy()
+    preview = eco.preview_prices()
+    np.testing.assert_array_equal(eco._reach_keys, stored)
+    s = eco.run_epoch()
+    np.testing.assert_array_equal(np.asarray(preview), np.asarray(s.prices))
+
+
+class _KeepReach(BidderPolicy):
+    """Test policy: never re-draw reach keys."""
+
+    name = "keep_reach"
+
+    def act(self, obs, pop, idx):
+        return PolicyAction(redraw_reach=np.zeros(idx.size, bool))
+
+
+def test_sticky_reach_keys_persist_across_epochs():
+    eco = make_fleet_economy(seed=0, policies=_KeepReach())
+    eco.run_epoch()  # epoch 0: nothing stored yet -> fresh draw, then stored
+    stored = eco._reach_keys.copy()
+    eco.run_epoch()
+    np.testing.assert_array_equal(eco._reach_keys, stored)
+    # the default (no redraw_reach action) re-draws every epoch
+    eco2 = make_fleet_economy(seed=0, policies=StaticPolicy())
+    eco2.run_epoch()
+    stored2 = eco2._reach_keys.copy()
+    eco2.run_epoch()
+    assert not np.array_equal(eco2._reach_keys, stored2)
+
+
+def test_arrivals_get_fresh_reach_keys():
+    from repro.core.markets import fleet_population
+
+    eco = make_fleet_economy(seed=0, policies=_KeepReach())
+    eco.run_epoch()
+    n_old = len(eco.pop)
+    old_keys = eco._reach_keys.copy()
+    eco.add_agents(fleet_population(5, eco.C, seed=99, placed_frac=0.0))
+    assert np.isnan(eco._reach_keys[n_old:]).all()
+    eco.run_epoch()
+    # old agents kept their keys; arrivals were drawn fresh (no NaNs left)
+    np.testing.assert_array_equal(eco._reach_keys[:n_old], old_keys)
+    assert not np.isnan(eco._reach_keys).any()
+
+
+def test_departures_shrink_reach_keys():
+    eco = make_fleet_economy(seed=0, policies=_KeepReach())
+    eco.run_epoch()
+    keys = eco._reach_keys.copy()
+    mask = np.zeros(len(eco.pop), bool)
+    mask[1::2] = True
+    eco.remove_agents(mask)
+    np.testing.assert_array_equal(eco._reach_keys, keys[~mask])
+
+
+def test_fill_rate_tracks_buy_outcomes():
+    eco = make_fleet_economy(seed=3)
+    before = eco.pop.fill_rate.copy()
+    assert (before == 1.0).all()
+    for _ in range(3):
+        eco.run_epoch()
+    fr = eco.pop.fill_rate
+    assert ((fr >= 0.0) & (fr <= 1.0)).all()
+    # someone lost a buy across three epochs of a congested fleet
+    assert (fr < 1.0).any()
+
+
+# -- warm-start staleness decay ---------------------------------------------
+
+
+def test_warm_seed_decay_unit():
+    """Idle pools re-seed at reserve + decay·(p_prev − reserve); filled
+    pools keep full price memory; the reserve floor always holds."""
+    eco = make_fleet_economy(seed=0, warm_start=True, warm_decay=0.5)
+    eco.run_epoch()
+    tilde = np.full(eco.R, 1.0)
+    eco.price_history[-1] = np.full(eco.R, 3.0)
+    eco._last_filled = np.zeros(eco.R, bool)
+    eco._last_filled[0] = True
+    seed = eco._warm_seed(tilde)
+    assert seed[0] == 3.0  # filled pool: max(p_prev, reserve)
+    np.testing.assert_allclose(seed[1:], 2.0)  # idle: halfway to reserve
+    # p_prev below reserve never decays below the reserve floor
+    eco.price_history[-1] = np.full(eco.R, 0.5)
+    np.testing.assert_allclose(eco._warm_seed(tilde), 1.0)
+
+
+def test_warm_decay_one_matches_legacy_seed():
+    """warm_decay=1.0 (default) is bit-identical to the pre-decay formula
+    max(p_prev, reserve) regardless of fill flags."""
+    eco = make_fleet_economy(seed=3, warm_start=True)
+    eco.run_epoch()
+    tilde = np.asarray(eco.price_history[-1]) * 0.7 + 0.1
+    expect = np.maximum(eco.price_history[-1], tilde)
+    np.testing.assert_array_equal(eco._warm_seed(tilde), expect)
+    eco._last_filled = np.zeros(eco.R, bool)  # even all-idle: no decay at 1.0
+    np.testing.assert_array_equal(eco._warm_seed(tilde), expect)
+
+
+def test_warm_decay_unpins_idle_pools():
+    """A one-epoch demand spike cannot pin prices high under warm_decay<1:
+    once the pools go idle, the decayed economy's prices fall toward the
+    reserve curve while the pinned (decay=1) economy stays at the spike."""
+
+    def run(warm_decay):
+        eco = make_fleet_economy(seed=3, warm_start=True, warm_decay=warm_decay)
+        eco.run_epoch()  # the spike epoch: congested fleet bids hard
+        eco.pop.value[:] = 0.0  # demand vanishes -> every pool goes idle
+        return eco, [eco.run_epoch() for _ in range(3)]
+
+    eco_pin, stats_pin = run(1.0)
+    eco_dec, stats_dec = run(0.5)
+    # same spike epoch, so the same pools were over-reserve at the peak
+    hot = np.asarray(stats_pin[0].prices) > np.asarray(stats_pin[0].reserve) + 1e-6
+    assert hot.any()
+    p_pin = np.asarray(stats_pin[-1].prices, np.float64)
+    p_dec = np.asarray(stats_dec[-1].prices, np.float64)
+    # pinned economy still carries the spike; decayed economy has bled it off
+    assert (p_dec[hot] < p_pin[hot] - 1e-9).all()
+    # decay is geometric per idle epoch: strictly decreasing while above reserve
+    for a, b in zip(stats_dec[1:], stats_dec[2:]):
+        pa, pb = np.asarray(a.prices, np.float64), np.asarray(b.prices, np.float64)
+        res = np.asarray(b.reserve, np.float64)
+        above = pa > res + 1e-9
+        assert (pb[above & hot] < pa[above & hot]).all()
+    # and never below the reserve floor
+    assert (p_dec >= np.asarray(stats_dec[-1].reserve) - 1e-9).all()
+
+
+def test_warm_decay_validation():
+    with pytest.raises(ValueError, match="warm_decay"):
+        make_fleet_economy(seed=0, warm_decay=1.5)
+
+
+# -- migration_relief scenario (acceptance criteria) -------------------------
+
+
+@pytest.fixture(scope="module")
+def relief_result():
+    eco, sc = migration_relief()
+    names = list(eco.pop.names)
+    res = run_scenario(eco, sc)
+    return eco, names, res
+
+
+def test_migration_relief_hot_pool_drains(relief_result):
+    """Over-reserve pool utilization strictly decreases across >=3
+    consecutive epochs (the paper's congestion->relief transition)."""
+    _, _, res = relief_result
+    psi0 = np.asarray([float(s.psi[0]) for s in res.stats])
+    assert psi0[0] > 0.9  # starts well over the reserve target
+    # epoch 0's settled price confirms the pool opened over-reserve
+    s0 = res.stats[0]
+    assert float(s0.prices[0]) > float(s0.reserve[3])  # vs a cold pool's curve
+    dec = np.diff(psi0) < 0.0
+    run_len = best = 0
+    for d in dec:
+        run_len = run_len + 1 if d else 0
+        best = max(best, run_len)
+    assert best >= 3, psi0.tolist()
+    # the relief is material, not monotone noise
+    assert psi0[-1] < psi0[0] - 0.1
+
+
+def test_migration_relief_sticky_agents_stay_and_pay(relief_result):
+    """>=90% of high-relocation-cost agents keep their home pool, and the
+    price they keep paying there carries a multi-x premium over the
+    clusters the chasers moved to."""
+    eco, names, res = relief_result
+    sticky = np.array([n.startswith("sticky") for n in names])
+    chaser = np.array([n.startswith("chaser") for n in names])
+    stay = (eco.pop.placed[sticky] == 0).mean()
+    assert stay >= 0.90, stay
+    # chasers actually migrated (the drain has a behavioral cause)
+    assert (eco.pop.placed[chaser] != 0).mean() > 0.3
+    # premium: the hot pool still prices above every cold cluster's pool
+    last = np.asarray(res.stats[-1].prices, np.float64).reshape(eco.C, eco.T)
+    assert (last[0] > 2.0 * last[1:].min(axis=0)).all()
+
+
+def test_migration_relief_mixes_three_policies(relief_result):
+    eco, _, res = relief_result
+    assert len(eco.policies) == 3
+    assert set(np.unique(eco.pop.policy)) == {0, 1, 2}
+    assert res.converged and res.feasible

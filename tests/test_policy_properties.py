@@ -1,0 +1,152 @@
+"""Hypothesis property tests for the bidder-policy invariants.
+
+The issue's three pinned properties, over randomized populations and
+market signals:
+
+* ``StaticPolicy`` is a no-op — bit-identical EpochStats to a policy-less
+  economy for any seed (the parity oracle, beyond the fixed-seed suite);
+* ``PriceChasingPolicy`` never moves reach weight toward a cluster priced
+  *above* belief: its ``reach_bias`` is ≤ 0 everywhere and strictly
+  negative only where the agent's bundle is cheaper at last prices than
+  at its belief;
+* budget conservation — no policy mutates the population's budgets, and
+  ``BudgetSmoothingPolicy`` only ever scales π *down* (scale ∈ [floor, 1]).
+
+Optional dependency — skipped when hypothesis is absent (see
+requirements-dev.txt).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.economy import AgentPopulation, make_fleet_economy  # noqa: E402
+from repro.core.policies import (  # noqa: E402
+    BudgetSmoothingPolicy,
+    Observation,
+    PriceChasingPolicy,
+    StaticPolicy,
+)
+from repro.core.types import bundle_cluster_costs  # noqa: E402
+
+
+def _random_market_state(seed, n_agents, n_clusters, n_rtypes):
+    """A random population + observation pair (no economy needed)."""
+    rng = np.random.default_rng(seed)
+    req = rng.uniform(0.5, 64.0, (n_agents, n_rtypes))
+    pop = AgentPopulation(
+        req=req,
+        value=rng.uniform(1.0, 500.0, n_agents),
+        home=rng.integers(-1, n_clusters, n_agents),
+        relocation_cost=rng.uniform(0.0, 200.0, n_agents),
+        mobility=rng.uniform(0.1, 1.0, n_agents),
+        margin0=rng.uniform(0.1, 2.0, n_agents),
+        margin_decay=np.full(n_agents, 0.3),
+        arbitrage=rng.uniform(0.0, 0.5, n_agents),
+        budget=rng.uniform(10.0, 1e4, n_agents),
+        placed=rng.integers(-1, n_clusters, n_agents),
+        epoch=rng.integers(0, 5, n_agents),
+    )
+    R = n_clusters * n_rtypes
+    obs = Observation(
+        epoch=1,
+        prices=rng.uniform(0.05, 5.0, R),
+        reserve=rng.uniform(0.05, 2.0, R),
+        psi=rng.uniform(0.0, 1.0, R),
+        belief=rng.uniform(0.05, 5.0, R),
+        fill_rate=rng.uniform(0.0, 1.0, n_agents),
+        num_clusters=n_clusters,
+        num_rtypes=n_rtypes,
+    )
+    return pop, obs
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n_agents=st.integers(1, 24),
+    n_clusters=st.integers(2, 6),
+    strength=st.floats(0.1, 5.0, allow_nan=False),
+    friction=st.floats(0.0, 3.0, allow_nan=False),
+)
+def test_price_chasing_never_biases_toward_overpriced(
+    seed, n_agents, n_clusters, strength, friction
+):
+    """reach_bias ≤ 0 everywhere; < 0 only on clusters priced below the
+    agent's belief (weight never moves toward pools priced above belief)."""
+    pop, obs = _random_market_state(seed, n_agents, n_clusters, 3)
+    pol = PriceChasingPolicy(strength=strength, friction=friction)
+    idx = np.arange(n_agents)
+    act = pol.act(obs, pop, idx)
+    if act is None or act.reach_bias is None:
+        return
+    bias = act.reach_bias
+    assert bias.shape == (n_agents, n_clusters)
+    assert (bias <= 0.0).all()
+    cheap = bundle_cluster_costs(pop.req, obs.belief) - bundle_cluster_costs(
+        pop.req, obs.prices
+    )
+    # the policy prices via one fused matmul, the reference helper via a
+    # fixed t-ordered fold — identical up to accumulation order, so allow
+    # ulp-level slack on the boundary
+    tol = 1e-9 * np.maximum(np.abs(cheap), 1.0)
+    assert (cheap[bias < 0.0] > -tol[bias < 0.0]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), n_agents=st.integers(1, 24))
+def test_price_chasing_epoch0_is_noop(seed, n_agents):
+    pop, obs = _random_market_state(seed, n_agents, 4, 3)
+    obs = dataclasses.replace(obs, epoch=0, prices=None, reserve=None)
+    assert PriceChasingPolicy().act(obs, pop, np.arange(n_agents)) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n_agents=st.integers(1, 24),
+    floor=st.floats(0.05, 1.0, allow_nan=False),
+)
+def test_budget_smoothing_scale_bounded(seed, n_agents, floor):
+    """π scale lives in [floor, 1] — the policy only ever shades bids down,
+    so a π ≤ budget cap can never be pushed over budget."""
+    pop, obs = _random_market_state(seed, n_agents, 4, 3)
+    act = BudgetSmoothingPolicy(floor=floor).act(obs, pop, np.arange(n_agents))
+    assert act.pi_scale is not None
+    assert (act.pi_scale >= floor - 1e-12).all()
+    assert (act.pi_scale <= 1.0 + 1e-12).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**10))
+def test_static_policy_noop_any_seed(seed):
+    """Beyond the fixed-seed parity suite: any seed, StaticPolicy ==
+    policy-less, epoch by epoch."""
+    eco_a = make_fleet_economy(num_agents=16, seed=seed)
+    eco_b = make_fleet_economy(num_agents=16, seed=seed, policies=StaticPolicy())
+    for _ in range(2):
+        sa, sb = eco_a.run_epoch(), eco_b.run_epoch()
+        np.testing.assert_array_equal(
+            np.asarray(sa.prices), np.asarray(sb.prices)
+        )
+        assert sa.migrations == sb.migrations
+        assert sa.surplus == sb.surplus
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**10), policy_id=st.integers(0, 2))
+def test_budgets_conserved_under_all_policies(seed, policy_id):
+    """No shipped policy mutates pop.budget (bit-identical across epochs),
+    under finite budgets where violations would actually bind."""
+    mix = [StaticPolicy(), PriceChasingPolicy(), BudgetSmoothingPolicy()]
+    eco = make_fleet_economy(num_agents=16, seed=seed, policies=mix)
+    rng = np.random.default_rng(seed)
+    eco.pop.budget[:] = rng.uniform(10.0, 1e5, len(eco.pop))
+    eco.pop.policy[:] = policy_id
+    budgets = eco.pop.budget.copy()
+    for _ in range(2):
+        eco.run_epoch()
+    np.testing.assert_array_equal(eco.pop.budget, budgets)

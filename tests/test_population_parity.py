@@ -107,7 +107,8 @@ def test_agent_roundtrip():
     agents = eco.pop.to_agents()
     back = AgentPopulation.from_agents(agents)
     for f in ("req", "value", "home", "relocation_cost", "mobility", "margin0",
-              "margin_decay", "arbitrage", "budget", "placed", "epoch"):
+              "margin_decay", "arbitrage", "budget", "placed", "epoch",
+              "fill_rate", "policy"):
         np.testing.assert_array_equal(getattr(eco.pop, f), getattr(back, f), err_msg=f)
     assert [a.name for a in agents] == back.names
 

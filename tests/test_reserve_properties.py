@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import CURVE_FAMILIES
+from repro.core import CURVE_FAMILIES  # noqa: E402
 
 
 @settings(max_examples=50, deadline=None)

@@ -10,10 +10,10 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.economy import make_fleet_economy
-from repro.core.scenarios import (
+from repro.core.economy import make_fleet_economy  # noqa: E402
+from repro.core.scenarios import (  # noqa: E402
     Arrivals,
     BaseCostChange,
     CapacityShock,

@@ -1,13 +1,11 @@
 """Sharding helpers, provisioner mesh planning, data pipeline determinism."""
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.core.provisioner import DeviceGrant, grant_to_mesh, plan_mesh_shape
 from repro.data.pipeline import SyntheticLM
 from repro.models import ModelConfig
 from repro.models.params import (
-    DEFAULT_RULES,
     ParamDecl,
     count_params,
     pspec_tree,
@@ -44,8 +42,6 @@ class TestPspecs:
         assert spec[0] is None and spec[2] == "model"
 
     def test_validated_drops_indivisible(self):
-        import jax
-
         class FakeMesh:
             axis_names = ("data", "model")
             devices = np.zeros((4, 16))

@@ -15,12 +15,17 @@ Two fixture sets are pinned per seed:
   is bit-identical to the cold set (nothing to warm-start from), later
   epochs seed the clock with max(p_prev, reserve).  Pinned separately so
   the warm path cannot drift while the cold path stays green.
+
+One scenario fixture is pinned on top of the per-seed sets:
+
+* ``scenario_migration_relief.json`` — the policy-driven congestion-relief
+  trajectory (price chasers drain the hot pool, sticky agents stay).  It
+  additionally records per-epoch utilization (``psi``) because the drain
+  itself — not just prices — is the pinned claim.
 """
 import json
 import os
 import sys
-
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
@@ -58,6 +63,33 @@ def snapshot(seed: int, warm_start: bool = False) -> dict:
             "stats": stats}
 
 
+def snapshot_migration_relief() -> dict:
+    from repro.core.scenarios import migration_relief, run_scenario
+
+    eco, sc = migration_relief()
+    res = run_scenario(eco, sc)
+    stats = []
+    for s in res.stats:
+        stats.append(
+            {
+                "epoch": s.epoch,
+                "psi": [float(p) for p in s.psi],
+                "prices": [float(p) for p in s.prices],
+                "reserve": [float(p) for p in s.reserve],
+                "gamma_median": float(s.gamma_median),
+                "gamma_mean": float(s.gamma_mean),
+                "pct_settled": float(s.pct_settled),
+                "migrations": int(s.migrations),
+                "surplus": float(s.surplus),
+                "value_of_trade": float(s.value_of_trade),
+                "rounds": int(s.rounds),
+                "converged": bool(s.converged),
+                "system_ok": bool(s.system_ok),
+            }
+        )
+    return {"scenario": sc.name, "epochs": sc.epochs, "stats": stats}
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     for seed in SEEDS:
@@ -67,6 +99,10 @@ def main() -> None:
             with open(path, "w") as f:
                 json.dump(snapshot(seed, warm), f, indent=1, allow_nan=True)
             print(f"wrote {path}")
+    path = os.path.join(GOLDEN_DIR, "scenario_migration_relief.json")
+    with open(path, "w") as f:
+        json.dump(snapshot_migration_relief(), f, indent=1, allow_nan=True)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":
