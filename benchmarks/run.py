@@ -150,8 +150,11 @@ def auction_scaling():
         dt = time.perf_counter() - t0
         rows.append((u, r, dt, int(res.rounds), bool(res.converged)))
     for u, r, dt, rounds, conv in rows:
-        print(f"#   {u}x{r}: {dt*1e3:.1f} ms, {rounds} rounds ({rounds/dt:.0f}/s), "
-              f"converged={conv}", file=sys.stderr)
+        print(
+            f"#   {u}x{r}: {dt*1e3:.1f} ms, {rounds} rounds ({rounds/dt:.0f}/s), "
+            f"converged={conv}",
+            file=sys.stderr,
+        )
     base = rows[0][2]
     return base * 1e6, round(120.0 / base, 0)
 
@@ -396,6 +399,62 @@ def economy_epoch_warm():
     return walls[True] / epochs * 1e6, round(totals[False] / totals[True], 1)
 
 
+def economy_epoch_faulty():
+    """Fault-tolerant epoch overhead (ISSUE 6 tentpole): a 4-epoch horizon
+    with the full failure-injection stack active — a mid-horizon region
+    fault, bid dropout, flaky sellers, failing pools, clock retries, and
+    the proportional-rationing fallback — vs the identical fault-free
+    horizon.  The fault path adds clawback scans, reputation-weighted
+    reserves, and the reliability EMA on top of each epoch; the bound here
+    keeps that machinery from creeping into the epoch hot path.  Override
+    the fleet size with ECONOMY_EPOCH_FAULTY_AGENTS.
+    us_per_call: mean faulty epoch wall.  derived: faulty/plain epoch wall
+    ratio (must stay < 2x, asserted)."""
+    import time as _time
+
+    from repro.core import fleet_economy
+    from repro.core.faults import FaultModel, RegionFault
+
+    n = int(os.environ.get("ECONOMY_EPOCH_FAULTY_AGENTS", 20_000))
+    epochs = 4
+    fm = FaultModel(
+        seed=7,
+        region_faults=(RegionFault(cluster=1, start=1, end=3, scale=0.25),),
+        bid_dropout=0.05,
+        seller_fail=0.1,
+        pool_fail=0.05,
+    )
+    walls = {}
+    for faulty in (False, True):
+        kw = (
+            dict(faults=fm, clock_retries=2, ration_fallback=True)
+            if faulty
+            else {}
+        )
+        eco = fleet_economy(n, seed=0, **kw)
+        eco.run_epoch()  # warm jit on this economy's book shapes
+        eco = fleet_economy(n, seed=0, **kw)
+        t0 = _time.perf_counter()
+        stats = [eco.run_epoch() for _ in range(epochs)]
+        walls[faulty] = _time.perf_counter() - t0
+        degraded = sum(s.degraded for s in stats)
+        evictions = sum(s.evictions for s in stats)
+        print(
+            f"#   {n} agents, {'faulty' if faulty else 'plain'}: wall "
+            f"{walls[faulty]:.1f} s, rounds {[s.rounds for s in stats]}, "
+            f"degraded={degraded}, evictions={evictions}",
+            file=sys.stderr,
+        )
+        if faulty:
+            assert degraded > 0, "fault schedule never degraded an epoch"
+    ratio = walls[True] / walls[False]
+    print(f"#   fault-path overhead: {ratio:.2f}x", file=sys.stderr)
+    assert ratio < 2.0, (
+        f"faulty epoch wall {ratio:.2f}x exceeds the 2x budget"
+    )
+    return walls[True] / epochs * 1e6, round(ratio, 2)
+
+
 def bid_eval_round():
     """Settlement hot loop: one proxy-evaluation round at 100k bids × 1k
     pools (jnp path on CPU; the Pallas kernel is the TPU-fused twin).
@@ -565,6 +624,7 @@ BENCHES = {
     "economy_epoch": economy_epoch,
     "economy_epoch_policy": economy_epoch_policy,
     "economy_epoch_warm": economy_epoch_warm,
+    "economy_epoch_faulty": economy_epoch_faulty,
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
     "bid_eval_csr": bid_eval_csr,

@@ -80,8 +80,7 @@ def main():
     seq = args.seq or (256 if args.production else 64)
     api = get_api(cfg)
     n = count_params(api.decls(cfg))
-    print(f"[job] model {cfg.name}: {n/1e6:.1f}M params, {steps} steps, "
-          f"batch {batch} × seq {seq}")
+    print(f"[job] model {cfg.name}: {n/1e6:.1f}M params, {steps} steps, batch {batch} × seq {seq}")
 
     ckdir = tempfile.mkdtemp(prefix="elastic_train_")
     ck = Checkpointer(ckdir)
@@ -116,8 +115,10 @@ def main():
         restored, manifest = ck.restore_latest({"params": params, "state": state})
         params, state = restored["params"], restored["state"]
         start = manifest["step"] + 1
-        print(f"[elastic] resumed step {start} on new grant "
-              f"({grant2.chips} chips in {grant2.cluster})")
+        print(
+            f"[elastic] resumed step {start} on new grant "
+            f"({grant2.chips} chips in {grant2.cluster})"
+        )
         jstep = jax.jit(step_fn, donate_argnums=(0, 1))
         for step in range(start, steps):
             p = pipe(step)

@@ -56,8 +56,10 @@ pis.append(1500.0)
 prob = pack_bids(bundle_lists, pis, base_cost=np.array([p.base_cost for p in pools]))
 res = clock_auction(prob, jnp.asarray(tilde_p))
 
-print(f"\nclock converged in {int(res.rounds)} rounds; SYSTEM feasible: "
-      f"{all(verify_system(prob, res).values())}")
+print(
+    f"\nclock converged in {int(res.rounds)} rounds; SYSTEM feasible: "
+    f"{all(verify_system(prob, res).values())}"
+)
 print("settled unit prices:")
 for p, pr0, pr1 in zip(pools, tilde_p, np.asarray(res.prices)):
     print(f"  {p.name:20s} reserve ${pr0:.3f} -> settled ${pr1:.3f}")

@@ -41,8 +41,10 @@ def main():
     t0 = time.time()
     logits = jax.jit(prefill)(params, {"tokens": prompt})
     logits.block_until_ready()
-    print(f"[serve] prefill {args.batch}×{args.prompt_len}: {time.time()-t0:.2f}s "
-          f"logits {logits.shape}")
+    print(
+        f"[serve] prefill {args.batch}×{args.prompt_len}: {time.time()-t0:.2f}s "
+        f"logits {logits.shape}"
+    )
 
     # full generation loop (one compiled fori_loop)
     t0 = time.time()
@@ -50,8 +52,7 @@ def main():
     out.block_until_ready()
     dt = time.time() - t0
     toks = args.batch * args.new
-    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s on this host)")
+    print(f"[serve] generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s on this host)")
     print(f"[serve] sample continuation ids: {np.asarray(out[0, args.prompt_len:])}")
 
 

@@ -1,0 +1,131 @@
+"""Crash-recoverable market state (epoch-boundary checkpointing).
+
+:class:`MarketCheckpointer` persists the *full mutable state* of an
+:class:`~repro.core.economy.Economy` at epoch boundaries through the
+generic sharded :class:`~repro.checkpoint.checkpoint.Checkpointer`, so a
+multi-epoch horizon killed mid-run resumes bit-identically:
+
+* the struct-of-arrays population (every ``_POP_FIELDS`` array),
+* pool state — ``capacity`` (scenario events mutate it), ``usage``,
+  ``belief``, ``base_cost_rt``, and the reliability EMA behind
+  reputation-weighted reserves,
+* the settled price history (warm-start seed) plus the optional
+  epoch-to-epoch carry state (``_last_reserve``, ``_last_filled``,
+  ``_last_cap_eff``, sticky policy reach keys),
+* the bid RNG's exact PCG64 state (JSON metadata — its counters exceed
+  64-bit, which npz integers would silently wrap).
+
+Fault injection needs no persistence at all: :class:`~repro.core.faults.
+FaultModel` draws are counter-based on ``(seed, epoch, channel)``, so a
+resumed horizon replays the identical fault sequence for free.
+
+The restore contract is *reconstruct, then restore*: build the same
+economy (same constructor arguments) and call :meth:`restore_latest`,
+which overwrites every mutable field.  Agent display names are
+presentation-only and kept when the checkpointed population has the same
+size, dropped otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.economy import _POP_FIELDS, AgentPopulation, Economy
+from .checkpoint import Checkpointer
+
+# optional epoch-to-epoch carry arrays, persisted only when present; restore
+# detects them through the manifest key list
+_OPTIONAL = ("_last_reserve", "_last_filled", "_last_cap_eff", "_reach_keys")
+
+
+class MarketCheckpointer:
+    """Persist/restore full mutable Economy state at epoch boundaries."""
+
+    def __init__(self, directory: str):
+        self.ckpt = Checkpointer(directory)
+
+    # -- write ----------------------------------------------------------------
+    def _state_tree(self, eco: Economy) -> dict[str, np.ndarray]:
+        tree = {f"pop/{f}": getattr(eco.pop, f) for f in _POP_FIELDS}
+        tree.update(
+            capacity=eco.capacity,
+            usage=eco.usage,
+            belief=eco.belief,
+            base_cost_rt=eco.base_cost_rt,
+            pool_reliability=eco.pool_reliability,
+            price_history=(
+                np.stack(eco.price_history)
+                if eco.price_history
+                else np.zeros((0, eco.R), np.float32)
+            ),
+        )
+        for name in _OPTIONAL:
+            val = getattr(eco, name)
+            if val is not None:
+                tree[name] = val
+        return tree
+
+    def save(self, eco: Economy, block: bool = True) -> int:
+        """Checkpoint at the current epoch boundary; returns the step.
+
+        The step is ``len(price_history)`` — the number of settled epochs —
+        so saving after each binding ``run_epoch`` yields one checkpoint
+        per epoch and ``restore_latest`` resumes from the newest boundary.
+        """
+        step = len(eco.price_history)
+        meta = {"rng_state": eco.rng.bit_generator.state, "num_agents": len(eco.pop)}
+        self.ckpt.save(step, self._state_tree(eco), metadata=meta, block=block)
+        return step
+
+    # -- read -----------------------------------------------------------------
+    def restore(self, step: int, eco: Economy) -> int:
+        """Overwrite ``eco``'s mutable state from checkpoint ``step``."""
+        import json
+        import os
+
+        path = os.path.join(self.ckpt.dir, f"ckpt_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        # read the npz directly rather than through Checkpointer.restore:
+        # that path re-device_puts every leaf, and with x64 disabled JAX
+        # would silently truncate the economy's float64 state to float32
+        # (also: the checkpointed population may be a different size than
+        # ``eco``'s, so there is no in-memory target tree to mirror)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        tree = {
+            k: data[k].astype(np.dtype(manifest["dtypes"][k]), copy=False)
+            for k in manifest["keys"]
+        }
+
+        if tree["capacity"].shape != eco.capacity.shape:
+            raise ValueError(
+                f"checkpoint is for a {tree['capacity'].shape} economy, "
+                f"got {eco.capacity.shape} — reconstruct the same economy "
+                "before restoring"
+            )
+
+        fields = {f: tree[f"pop/{f}"] for f in _POP_FIELDS}
+        names = eco.pop.names
+        if names is not None and len(names) != len(fields["value"]):
+            names = None
+        eco.pop = AgentPopulation(names=names, **fields)
+
+        eco.capacity = tree["capacity"]
+        eco.usage = tree["usage"]
+        eco.belief = tree["belief"]
+        eco.base_cost_rt = tree["base_cost_rt"]
+        eco.pool_reliability = tree["pool_reliability"]
+        eco.price_history = [row for row in tree["price_history"]]
+        for name in _OPTIONAL:
+            setattr(eco, name, tree.get(name))
+
+        state = manifest["metadata"]["rng_state"]
+        eco.rng = np.random.default_rng()
+        eco.rng.bit_generator.state = state
+        return step
+
+    def restore_latest(self, eco: Economy) -> int | None:
+        """Restore the newest checkpoint into ``eco``; None if none exist."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, eco)

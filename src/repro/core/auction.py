@@ -477,6 +477,25 @@ class ClockConfig:
         return self.alpha_growth != 1.0 or self.delta_decay != 1.0
 
 
+def escalate_clock(config: ClockConfig, factor: int = 2) -> ClockConfig:
+    """Degraded-mode escalation for a round-starved clock.
+
+    Returns a config with ``factor``× the round budget and the adaptive
+    step schedule switched on (or kept, when the caller already runs
+    adaptive): per-resource step acceleration covers ground a crawling
+    clock cannot, and delta decay stops limit-cycling at the coarse tick.
+    Used by the economy's bounded-retry path (``Economy(clock_retries=k)``)
+    — the escalated clock *continues* from the truncated price trajectory,
+    which is sound because the clock is ascending-only.
+    """
+    return dataclasses.replace(
+        config,
+        max_rounds=config.max_rounds * factor,
+        alpha_growth=config.alpha_growth if config.alpha_growth > 1.0 else 1.6,
+        delta_decay=config.delta_decay if config.delta_decay < 1.0 else 0.6,
+    )
+
+
 def _apply_tie_jitter(pi: jax.Array, config: ClockConfig) -> jax.Array:
     """π perturbation for ``break_ties`` — indexed by *global* user position,
     so it must run on the full (unpadded, unsharded) π."""

@@ -43,13 +43,21 @@ from .auction import (
     ClockConfig,
     blocked_demand_fn,
     clock_auction,
+    escalate_clock,
     sharded_clock_auction,
     surplus_and_trade,
     users_mesh,
     verify_system,
 )
+from .faults import FaultDraw, FaultModel
 from .policies import BidderPolicy, Observation
-from .reserve import DEFAULT_WEIGHTING, WeightingFn, reserve_prices
+from .reserve import (
+    DEFAULT_WEIGHTING,
+    RELIABILITY_EMA,
+    WeightingFn,
+    reputation_weighted_reserve,
+    reserve_prices,
+)
 from .types import (
     ResourcePool,
     bundle_cluster_costs,
@@ -127,10 +135,17 @@ class AgentPopulation:
             self.fill_rate = np.ones(n, np.float64)
         if self.policy is None:
             self.policy = np.zeros(n, np.int64)
-        for f in ("value", "relocation_cost", "mobility", "margin0",
-                  "margin_decay", "arbitrage", "budget", "fill_rate"):
-            setattr(self, f, np.broadcast_to(
-                np.asarray(getattr(self, f), np.float64), (n,)).copy())
+        for f in (
+            "value",
+            "relocation_cost",
+            "mobility",
+            "margin0",
+            "margin_decay",
+            "arbitrage",
+            "budget",
+            "fill_rate",
+        ):
+            setattr(self, f, np.broadcast_to(np.asarray(getattr(self, f), np.float64), (n,)).copy())
         for f in ("home", "placed", "epoch", "policy"):
             setattr(self, f, np.broadcast_to(
                 np.asarray(getattr(self, f), np.int64), (n,)).copy())
@@ -220,9 +235,10 @@ class AgentPopulation:
             )
         names = None
         if self.names is not None or other.names is not None:
-            names = (list(self.names or [f"job-{i}" for i in range(len(self))])
-                     + list(other.names or
-                            [f"new-{i}" for i in range(len(other))]))
+            names = (
+                list(self.names or [f"job-{i}" for i in range(len(self))])
+                + list(other.names or [f"new-{i}" for i in range(len(other))])
+            )
         kw = {
             f: np.concatenate([getattr(self, f), getattr(other, f)])
             for f in _POP_FIELDS
@@ -235,6 +251,32 @@ class AgentPopulation:
 # policies — now :func:`repro.core.types.bundle_cluster_costs`, re-exported
 # under its historical name.
 believed_bundle_costs = bundle_cluster_costs
+
+
+def _claw_to_capacity(
+    placed: np.ndarray,
+    req: np.ndarray,
+    usage: np.ndarray,
+    cap_eff: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quota clawback: evict holders until usage fits the surviving capacity.
+
+    Pure — returns ``(evict_mask, new_usage)`` without touching inputs.
+    Eviction is deterministic LIFO by agent index per over-capacity
+    cluster; residual usage not backed by any agent (pre-loaded congestion)
+    is clamped away, matching ``CapacityShock``'s "jobs on failed machines
+    lose them" semantics.
+    """
+    usage = usage.copy()
+    evict = np.zeros(placed.shape[0], bool)
+    for c in np.flatnonzero((usage > cap_eff + 1e-9).any(axis=1)):
+        for a in np.flatnonzero(placed == c)[::-1]:
+            if not np.any(usage[c] > cap_eff[c] + 1e-9):
+                break
+            usage[c] = np.maximum(usage[c] - req[a], 0.0)
+            evict[a] = True
+        usage[c] = np.minimum(usage[c], cap_eff[c])
+    return evict, usage
 
 
 @dataclasses.dataclass
@@ -258,6 +300,20 @@ class EpochStats:
     # True when the clock was seeded with max(p_prev, reserve) instead of the
     # reserve curve (Economy(warm_start=True), second epoch onward)
     warm_started: bool = False
+    # -- degraded-mode telemetry (fault-tolerance layer) ---------------------
+    # All default to the fault-free values, so fault-free EpochStats are
+    # bit-identical to pre-fault-layer behavior.  ``degraded`` is the
+    # headline flag: True whenever this epoch's numbers describe anything
+    # other than a cleanly converged, fully delivered settlement.
+    degraded: bool = False
+    clock_escalations: int = 0  # bounded-retry escalations of a starved clock
+    rationed_rows: int = 0  # winning buys scaled by the proportional fallback
+    dropped_bids: int = 0  # agents whose bid stream dropped this epoch
+    seller_failures: int = 0  # winning sellers that failed to deliver
+    failed_pools: int = 0  # pools that failed right after settlement
+    evictions: int = 0  # agents clawed back (pre-auction loss + post-settle)
+    clawback_units: float = 0.0  # resource units reclaimed/lost to faults
+    compensation: float = 0.0  # $ refunded to clawed-back agents
 
 
 # row kinds in a packed bid book
@@ -304,6 +360,10 @@ class Economy:
         warm_start: bool = False,
         warm_decay: float = 1.0,
         policies: BidderPolicy | Sequence[BidderPolicy] | None = None,
+        faults: FaultModel | None = None,
+        clock_retries: int = 0,
+        ration_fallback: bool = False,
+        reliability_discount: float = 1.0,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -354,6 +414,22 @@ class Economy:
             self.policies = [policies]
         else:
             self.policies = list(policies)
+        # Fault-tolerance layer: a seed-deterministic FaultModel injects
+        # capacity loss/recovery, seller failures, and bid-stream dropout as
+        # pure per-epoch overlays (see repro.core.faults).  None — or a
+        # model with every channel off — keeps the settlement path
+        # bit-identical to the fault-free economy.  clock_retries bounds the
+        # escalate-and-rerun attempts on a round-starved clock;
+        # ration_fallback enables the proportional-rationing apply on a
+        # still-unconverged epoch; reliability_discount scales how hard the
+        # per-pool reliability EMA discounts effective capacity in the
+        # reputation-weighted reserve curve.
+        self.faults = faults
+        if clock_retries < 0:
+            raise ValueError(f"clock_retries must be >= 0, got {clock_retries}")
+        self.clock_retries = int(clock_retries)
+        self.ration_fallback = bool(ration_fallback)
+        self.reliability_discount = float(reliability_discount)
         # sticky-reach storage: last epoch's reach sort keys per agent (NaN
         # rows = no stored keys yet, e.g. arrivals); policy actions choose
         # per agent between these and the fresh epoch draw
@@ -374,6 +450,14 @@ class Economy:
         # every agent's price belief starts at the former fixed prices
         self.belief = np.tile(self.base_cost_rt, self.C)  # (R,)
         self.price_history: list[np.ndarray] = []
+        # per-pool delivered-vs-promised capacity EMA (reputation-weighted
+        # reserves); stays all-ones — and the reserve path untouched —
+        # unless a fault model is active
+        self.pool_reliability = np.ones(self.R, np.float64)
+        # effective (surviving) capacity the last binding epoch settled
+        # against — scenario invariant checks compare usage to this, not to
+        # nominal capacity, under region faults
+        self._last_cap_eff: np.ndarray | None = None
 
     # -- population bookkeeping ----------------------------------------------
     @property
@@ -413,11 +497,21 @@ class Economy:
         return c * self.T + t
 
     def pools(self) -> list[ResourcePool]:
-        psi = self.utilization()
+        return self._pools_from(self.capacity, self.usage)
+
+    def _pools_from(
+        self,
+        capacity: np.ndarray,
+        usage: np.ndarray,
+        reliability: np.ndarray | None = None,
+    ) -> list[ResourcePool]:
+        """Pool views over explicit (possibly fault-degraded) arrays."""
+        psi = np.clip(usage / np.maximum(capacity, 1e-9), 0.0, 1.0)
+        rel = np.ones(self.R) if reliability is None else reliability
         out = []
         for c, cname in enumerate(self.clusters):
             for t, tname in enumerate(self.rtypes):
-                free = max(self.capacity[c, t] - self.usage[c, t], 0.0)
+                free = max(capacity[c, t] - usage[c, t], 0.0)
                 out.append(
                     ResourcePool(
                         cluster=cname,
@@ -425,6 +519,7 @@ class Economy:
                         base_cost=float(self.base_cost_rt[t]),
                         utilization=float(psi[c, t]),
                         supply=float(free),
+                        reliability=float(rel[c * self.T + t]),
                     )
                 )
         return out
@@ -464,6 +559,139 @@ class Economy:
         u_arb = self.rng.random(n)
         perm_keys = self.rng.random((n, self.C))
         return u_arb, perm_keys
+
+    # -- fault overlays -------------------------------------------------------
+    def _epoch_faults(self) -> FaultDraw | None:
+        """This epoch's realized faults, or None when the model is off.
+
+        Draws are counter-based on (model seed, epoch index, channel), so
+        they consume no mutable state — dry runs and crash-resumed horizons
+        see the identical fault sequence for free.
+        """
+        if self.faults is None or self.faults.disabled:
+            return None
+        return self.faults.draw(
+            len(self.price_history), len(self.pop), self.C, self.T
+        )
+
+    def _holding_value(self, agent_idx: np.ndarray, placed: np.ndarray) -> float:
+        """$ value of the given agents' held bundles at the last settled
+        prices (base cost before any epoch settles) — the compensation paid
+        when those holdings are clawed back."""
+        if agent_idx.size == 0:
+            return 0.0
+        prices = (
+            self.price_history[-1].astype(np.float64)
+            if self.price_history
+            else np.tile(self.base_cost_rt, self.C)
+        ).reshape(self.C, self.T)
+        return float((self.pop.req[agent_idx] * prices[placed[agent_idx]]).sum())
+
+    def _epoch_view(
+        self,
+    ) -> tuple[
+        FaultDraw | None,
+        np.ndarray,
+        np.ndarray,
+        np.ndarray | None,
+        np.ndarray | None,
+        float,
+        float,
+    ]:
+        """Fault overlays for the epoch about to settle, as pure views.
+
+        Returns ``(draw, cap_eff, usage_eff, placed_override, evict_mask,
+        clawback_units, compensation)``.  Nothing is committed here —
+        binding epochs commit the pre-auction clawback in
+        :meth:`_settle_epoch`, dry runs consume the views and drop them —
+        so ``preview_prices`` stays side-effect-free (and settles the same
+        bid book the binding run will) with faults active.
+        """
+        draw = self._epoch_faults()
+        cap_eff, usage_eff = self.capacity, self.usage
+        placed_override = evict = None
+        claw_units, comp = 0.0, 0.0
+        if draw is not None and draw.capacity_scale is not None:
+            cap_eff = self.capacity * draw.capacity_scale
+            if np.any(self.usage > cap_eff + 1e-9):
+                evict, usage_eff = _claw_to_capacity(
+                    self.pop.placed, self.pop.req, self.usage, cap_eff
+                )
+                claw_units = float(
+                    np.maximum(self.usage - usage_eff, 0.0).sum()
+                )
+                comp = self._holding_value(np.flatnonzero(evict), self.pop.placed)
+                placed_override = self.pop.placed.copy()
+                placed_override[evict] = -1
+        return draw, cap_eff, usage_eff, placed_override, evict, claw_units, comp
+
+    def _post_settlement_faults(
+        self, draw: FaultDraw, cap_eff: np.ndarray, stats: dict
+    ) -> dict:
+        """Seller flakes and pool failures, realized right after settlement.
+
+        Delivered capacity per pool = ``cap_eff`` minus flaked winning
+        sellers' handed-back bundles, times ``pool_fail_scale`` on failed
+        pools.  Usage above delivered triggers quota clawback: this epoch's
+        winning buyers are evicted LIFO with a full refund of their payment
+        as compensation, then any residual phantom usage is clamped (jobs
+        already on the failed machines lose them).  Finally each pool's
+        reliability EMA absorbs the delivered-vs-nominal observation, which
+        is what feeds next epoch's reputation-weighted reserves.
+        """
+        out = {
+            "seller_failures": 0, "failed_pools": 0,
+            "evictions": 0, "clawback_units": 0.0, "compensation": 0.0,
+        }
+        pop = self.pop
+        delivered = cap_eff.astype(np.float64).copy()
+        if draw.seller_fail_u is not None and len(stats["sell_agents"]):
+            sa = stats["sell_agents"]
+            flake = draw.seller_fail_u[sa] < self.faults.seller_fail
+            if flake.any():
+                # the capacity a flaked seller handed back turns out dead
+                out["seller_failures"] = int(flake.sum())
+                np.subtract.at(
+                    delivered, stats["sell_clusters"][flake], pop.req[sa[flake]]
+                )
+                delivered = np.maximum(delivered, 0.0)
+        if draw.pool_fail is not None and draw.pool_fail.any():
+            fail = draw.pool_fail.reshape(self.C, self.T)
+            out["failed_pools"] = int(draw.pool_fail.sum())
+            delivered = np.where(
+                fail, delivered * self.faults.pool_fail_scale, delivered
+            )
+        if np.any(self.usage > delivered + 1e-9):
+            ba, bcs = stats["buy_agents"], stats["buy_clusters"]
+            scale, pays = stats["buy_scale"], stats["buy_payments"]
+            usage = self.usage.copy()
+            evict = np.zeros(len(ba), bool)
+            for c in np.flatnonzero((usage > delivered + 1e-9).any(axis=1)):
+                for j in np.flatnonzero(bcs == c)[::-1]:  # LIFO
+                    if not np.any(usage[c] > delivered[c] + 1e-9):
+                        break
+                    usage[c] = np.maximum(
+                        usage[c] - scale[j] * pop.req[ba[j]], 0.0
+                    )
+                    evict[j] = True
+            usage = np.minimum(usage, delivered)
+            out["clawback_units"] = float(
+                np.maximum(self.usage - usage, 0.0).sum()
+            )
+            self.usage = usage
+            if evict.any():
+                out["evictions"] = int(evict.sum())
+                out["compensation"] = float(pays[evict].sum())
+                pop.placed[ba[evict]] = -1
+        # reliability EMA over delivered-vs-nominal (healthy epochs recover
+        # the score geometrically, mirroring the per-agent fill_rate EMA)
+        obs = np.clip(
+            delivered / np.maximum(self.capacity, 1e-9), 0.0, 1.0
+        ).reshape(-1)
+        self.pool_reliability = (
+            1.0 - RELIABILITY_EMA
+        ) * self.pool_reliability + RELIABILITY_EMA * obs
+        return out
 
     # -- bidder policies ------------------------------------------------------
     def observation(self) -> Observation:
@@ -558,6 +786,9 @@ class Economy:
         pi_scale: np.ndarray | None = None,
         arbitrage: np.ndarray | None = None,
         margin: np.ndarray | None = None,
+        dropout: np.ndarray | None = None,
+        placed_override: np.ndarray | None = None,
+        free: np.ndarray | None = None,
     ) -> BidBook:
         """Assemble the epoch bid book as pure array ops — O(nnz), no
         per-agent Python — emitting the variable-K CSR encoding directly.
@@ -577,7 +808,8 @@ class Economy:
         """
         pop = self.pop
         n, C, T, R = len(pop), self.C, self.T, self.R
-        placed, home = pop.placed, pop.home
+        placed = pop.placed if placed_override is None else placed_override
+        home = pop.home
         arb = pop.arbitrage if arbitrage is None else arbitrage
 
         # (a) who sells, who buys
@@ -588,7 +820,14 @@ class Economy:
             & (u_arb < arb)
             & (psi_home0 > 0.75)
         )
+        if dropout is not None:
+            # bid-stream dropout: the agent submits nothing this epoch — it
+            # only masks rows out of the book; the epoch's pre-drawn
+            # randomness was consumed identically, so packer parity holds
+            sells &= ~dropout
         wants = (placed < 0) | sells
+        if dropout is not None:
+            wants &= ~dropout
 
         buyers = np.flatnonzero(wants)
         sellers = np.flatnonzero(sells)
@@ -615,7 +854,8 @@ class Economy:
         has_home = np.flatnonzero(home_b >= 0)
         key[has_home, home_b[has_home]] = -1.0  # home always first, always in
         order = np.argsort(key, axis=1, kind="stable")  # clusters in bundle order
-        free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)  # (R,)
+        if free is None:
+            free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)  # (R,)
         op_pools = np.flatnonzero(free > 1e-9)
         n_op = op_pools.size
 
@@ -729,6 +969,9 @@ class Economy:
         pi_scale: np.ndarray | None = None,
         arbitrage: np.ndarray | None = None,
         margin: np.ndarray | None = None,
+        dropout: np.ndarray | None = None,
+        placed_override: np.ndarray | None = None,
+        free: np.ndarray | None = None,
     ) -> BidBook:
         """Reference per-agent packer (the pre-vectorization code path).
 
@@ -747,7 +990,9 @@ class Economy:
         pi_rows: list[np.ndarray] = []
         kinds: list[tuple] = []  # (agent_idx, kind, cluster list)
 
-        free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)
+        placed_arr = pop.placed if placed_override is None else placed_override
+        if free is None:
+            free = np.maximum(self.capacity - self.usage, 0.0).reshape(-1)
         for r in range(self.R):
             if free[r] <= 1e-9:
                 continue
@@ -761,7 +1006,9 @@ class Economy:
 
         max_b = 1
         for i in range(len(pop)):
-            placed_i, home_i = int(pop.placed[i]), int(pop.home[i])
+            if dropout is not None and dropout[i]:
+                continue  # bid-stream dropout: nothing submitted this epoch
+            placed_i, home_i = int(placed_arr[i]), int(pop.home[i])
             req_i = pop.req[i]
             wants_placement = placed_i < 0
             sells = (
@@ -853,6 +1100,9 @@ class Economy:
         tilde_p: np.ndarray,
         base_cost_flat: np.ndarray,
         dry_run: bool,
+        dropout: np.ndarray | None = None,
+        placed_override: np.ndarray | None = None,
+        free: np.ndarray | None = None,
     ) -> BidBook:
         """Draw epoch randomness, fold in policy actions, pack the book."""
         u_arb, perm_keys = self._draw_bid_randomness()
@@ -867,6 +1117,7 @@ class Economy:
         return pack(
             psi_flat, tilde_p, base_cost_flat, u_arb, perm_keys,
             pi_scale=pi_scale, arbitrage=arb, margin=margin,
+            dropout=dropout, placed_override=placed_override, free=free,
         )
 
     def pack_bid_book(self) -> BidBook:
@@ -874,12 +1125,33 @@ class Economy:
 
         Mostly useful for inspection and the parity suite; ``run_epoch``
         draws and packs internally.  Policy actions are applied but not
-        persisted (sticky-reach storage is untouched), like a dry run.
+        persisted (sticky-reach storage is untouched), like a dry run —
+        and fault overlays (dropout, capacity loss) are applied as pure
+        views, so the book matches what the next binding epoch would pack.
         """
-        psi_flat = self.utilization().reshape(-1)
-        tilde_p = reserve_prices(self.pools(), self.weighting)
+        draw, cap_eff, usage_eff, placed_ov, _, _, _ = self._epoch_view()
+        psi_flat = (
+            np.clip(usage_eff / np.maximum(cap_eff, 1e-9), 0.0, 1.0)
+            .reshape(-1)
+            .copy()
+        )
+        if draw is None:
+            tilde_p = reserve_prices(self.pools(), self.weighting)
+            free = None
+        else:
+            tilde_p = reputation_weighted_reserve(
+                self._pools_from(cap_eff, usage_eff),
+                self.weighting,
+                reliability=self.pool_reliability,
+                discount=self.reliability_discount,
+            )
+            free = np.maximum(cap_eff - usage_eff, 0.0).reshape(-1)
         base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
-        return self._draw_and_pack(psi_flat, tilde_p, base_cost_flat, dry_run=True)
+        return self._draw_and_pack(
+            psi_flat, tilde_p, base_cost_flat, dry_run=True,
+            dropout=None if draw is None else draw.dropout,
+            placed_override=placed_ov, free=free,
+        )
 
     # -- one auction epoch ---------------------------------------------------
     def run_epoch(self, dry_run: bool = False) -> EpochStats:
@@ -926,16 +1198,48 @@ class Economy:
         return seed
 
     def _settle_epoch(self, dry_run: bool) -> EpochStats:
-        psi_flat = self.utilization().reshape(-1).copy()
-        tilde_p = reserve_prices(self.pools(), self.weighting)
+        draw, cap_eff, usage_eff, placed_ov, pre_evict, pre_claw, pre_comp = (
+            self._epoch_view()
+        )
+        if not dry_run and pre_evict is not None:
+            # commit the pre-auction quota clawback: a region fault below
+            # current usage evicts holders (LIFO) with compensation at the
+            # last settled prices; they re-enter this epoch's book as buyers
+            self.pop.placed[pre_evict] = -1
+            self.usage = usage_eff
+        psi_flat = (
+            np.clip(usage_eff / np.maximum(cap_eff, 1e-9), 0.0, 1.0)
+            .reshape(-1)
+            .copy()
+        )
+        if draw is None:
+            tilde_p = reserve_prices(self.pools(), self.weighting)
+            free_flat = None
+        else:
+            # reputation-weighted reserves: the reliability EMA discounts
+            # each pool's effective capacity, pricing unreliable supply up
+            tilde_p = reputation_weighted_reserve(
+                self._pools_from(cap_eff, usage_eff),
+                self.weighting,
+                reliability=self.pool_reliability,
+                discount=self.reliability_discount,
+            )
+            free_flat = np.maximum(cap_eff - usage_eff, 0.0).reshape(-1)
         base_cost_flat = np.tile(self.base_cost_rt, self.C).astype(np.float32)
 
-        book = self._draw_and_pack(psi_flat, tilde_p, base_cost_flat, dry_run)
+        book = self._draw_and_pack(
+            psi_flat, tilde_p, base_cost_flat, dry_run,
+            dropout=None if draw is None else draw.dropout,
+            placed_override=placed_ov, free=free_flat,
+        )
         if book.num_rows == 0:
             raise RuntimeError(
                 "empty bid book: no operator supply and no bidding agents"
             )
         problem = book.problem
+        dropped = (
+            0 if draw is None or draw.dropout is None else int(draw.dropout.sum())
+        )
 
         # Settlement uses the blocked demand variant: z is a fixed left-fold
         # over contiguous user blocks, which makes EpochStats bit-identical
@@ -953,19 +1257,33 @@ class Economy:
             start = jnp.asarray(self._warm_seed(np.asarray(tilde_p)))
         else:
             start = jnp.asarray(tilde_p)
-        if mesh is not None:
-            result = sharded_clock_auction(
-                problem, start, self.clock, mesh=mesh, num_blocks=self.settle_blocks
-            )
-        else:
-            result = clock_auction(
-                problem, start, self.clock,
+
+        def _run_clock(cfg, start_prices):
+            if mesh is not None:
+                return sharded_clock_auction(
+                    problem, start_prices, cfg,
+                    mesh=mesh, num_blocks=self.settle_blocks,
+                )
+            return clock_auction(
+                problem, start_prices, cfg,
                 demand_fn=blocked_demand_fn(self.settle_blocks),
             )
+
+        result = _run_clock(self.clock, start)
+        # bounded-retry escalation: a round-starved clock is re-run with a
+        # doubled budget and the adaptive schedule on, continuing from the
+        # truncated trajectory (sound: the clock is ascending-only)
+        escalations = 0
+        cfg = self.clock
+        while not bool(result.converged) and escalations < self.clock_retries:
+            escalations += 1
+            cfg = escalate_clock(cfg)
+            result = _run_clock(cfg, jnp.asarray(np.asarray(result.prices)))
         sys_ok = all(verify_system(problem, result).values())
         surplus, trade = surplus_and_trade(problem, result)
 
         prices = np.asarray(result.prices)
+        converged = bool(result.converged)
         if dry_run:
             return EpochStats(
                 epoch=len(self.price_history), prices=prices,
@@ -975,8 +1293,17 @@ class Economy:
                 pct_settled=float("nan"),
                 buy_util_percentiles=np.empty(0), sell_util_percentiles=np.empty(0),
                 migrations=0, surplus=float(surplus), value_of_trade=float(trade),
-                rounds=int(result.rounds), converged=bool(result.converged),
+                rounds=int(result.rounds), converged=converged,
                 system_ok=sys_ok, warm_started=warm,
+                degraded=bool(
+                    not converged
+                    or escalations
+                    or pre_evict is not None
+                    or (draw is not None and draw.capacity_scale is not None)
+                ),
+                clock_escalations=escalations, dropped_bids=dropped,
+                evictions=0 if pre_evict is None else int(pre_evict.sum()),
+                clawback_units=pre_claw, compensation=pre_comp,
             )
 
         apply = (
@@ -984,7 +1311,19 @@ class Economy:
             if self.packer == "vectorized"
             else self._apply_settlement_loop
         )
-        stats = apply(book, result)
+        # proportional-rationing fallback: a still-unconverged epoch's
+        # winning buys are scaled to fit the surviving capacity instead of
+        # being silently clipped pool-wise
+        ration = self.ration_fallback and not converged
+        stats = apply(book, result, cap=cap_eff, ration=ration)
+
+        post = {
+            "seller_failures": 0, "failed_pools": 0,
+            "evictions": 0, "clawback_units": 0.0, "compensation": 0.0,
+        }
+        if draw is not None:
+            post = self._post_settlement_faults(draw, cap_eff, stats)
+        self._last_cap_eff = cap_eff
 
         # -- learning: beliefs drift toward settled prices --------------------
         self.belief = 0.25 * self.belief + 0.75 * prices
@@ -992,6 +1331,19 @@ class Economy:
         self.price_history.append(prices)  # also next epoch's warm-start seed
         self._last_reserve = np.asarray(tilde_p)  # policy observation
 
+        evictions = (
+            0 if pre_evict is None else int(pre_evict.sum())
+        ) + post["evictions"]
+        degraded = bool(
+            not converged
+            or escalations
+            or stats["rationed_rows"]
+            or evictions
+            or post["seller_failures"]
+            or post["failed_pools"]
+            or pre_evict is not None
+            or (draw is not None and draw.capacity_scale is not None)
+        )
         return EpochStats(
             epoch=len(self.price_history) - 1,
             prices=prices,
@@ -1007,21 +1359,83 @@ class Economy:
             surplus=float(surplus),
             value_of_trade=float(trade),
             rounds=int(result.rounds),
-            converged=bool(result.converged),
+            converged=converged,
             system_ok=sys_ok,
             warm_started=warm,
+            degraded=degraded,
+            clock_escalations=escalations,
+            rationed_rows=stats["rationed_rows"],
+            dropped_bids=dropped,
+            seller_failures=post["seller_failures"],
+            failed_pools=post["failed_pools"],
+            evictions=evictions,
+            clawback_units=pre_claw + post["clawback_units"],
+            compensation=pre_comp + post["compensation"],
         )
 
-    def _apply_settlement(self, book: BidBook, result) -> dict:
-        """Apply won allocations to population + usage, fully vectorized.
+    def _commit_usage(
+        self,
+        sell_agents: np.ndarray,
+        sc: np.ndarray,
+        buy_agents: np.ndarray,
+        bc: np.ndarray,
+        cap: np.ndarray,
+        ration: bool,
+    ) -> tuple[np.ndarray, int]:
+        """Commit the settled usage delta; returns (buy_scale, rationed_rows).
 
-        Usage semantics: all settled deltas (trader give-backs, buyer
-        additions, movers' old-home releases) are accumulated into one
-        per-pool delta and the result clipped to [0, capacity] — an
-        order-independent formulation, so the outcome does not depend on
-        agent index order.
+        All settled deltas (trader give-backs, buyer additions, movers'
+        old-home releases) accumulate into one per-pool delta and the result
+        is clipped to [0, cap] — order-independent, so the outcome does not
+        depend on agent index order.  With ``ration`` on, winning buys into
+        a still-over-demanded pool are scaled by the pool's room/claim
+        fraction (bundle-consistent: one scale per agent, the min over its
+        resource types) instead of silently clipped — proportional
+        rationing, the degraded-mode fallback for non-converged epochs.
         """
         pop = self.pop
+        delta = np.zeros_like(self.usage)
+        np.add.at(delta, sc, -pop.req[sell_agents])
+        placed_eff = pop.placed.copy()
+        placed_eff[sell_agents] = -1
+        old = placed_eff[buy_agents]
+        move = (old >= 0) & (old != bc)
+        scale = np.ones(len(buy_agents), np.float64)
+        rationed = 0
+        if ration and len(buy_agents):
+            released = delta.copy()
+            np.add.at(released, old[move], -pop.req[buy_agents][move])
+            room = np.maximum(cap - np.maximum(self.usage + released, 0.0), 0.0)
+            claim = np.zeros_like(self.usage)
+            np.add.at(claim, bc, pop.req[buy_agents])
+            frac = np.where(
+                claim > 1e-12,
+                np.minimum(room / np.maximum(claim, 1e-12), 1.0),
+                1.0,
+            )
+            per = np.where(pop.req[buy_agents] > 0, frac[bc], 1.0)
+            scale = per.min(axis=1)
+            rationed = int((scale < 1.0 - 1e-12).sum())
+        np.add.at(delta, bc, scale[:, None] * pop.req[buy_agents])
+        np.add.at(delta, old[move], -pop.req[buy_agents][move])
+        self.usage = np.clip(self.usage + delta, 0.0, cap)
+        return scale, rationed
+
+    def _apply_settlement(
+        self,
+        book: BidBook,
+        result,
+        cap: np.ndarray | None = None,
+        ration: bool = False,
+    ) -> dict:
+        """Apply won allocations to population + usage, fully vectorized.
+
+        Usage commit semantics live in :meth:`_commit_usage` (shared with
+        the loop reference so the two stay bit-parity under rationing).
+        """
+        pop = self.pop
+        if cap is None:
+            cap = self.capacity
         won = np.asarray(result.won)
         chosen = np.asarray(result.chosen_bundle)
         payments = np.asarray(result.payments)
@@ -1053,17 +1467,9 @@ class Economy:
             ((pop.home[buy_agents] >= 0) & (pop.home[buy_agents] != bc)).sum()
         )
 
-        # one usage delta per pool: sells release, buys claim, movers release
-        # their old home (skipped if the same agent's sell already released it)
-        delta = np.zeros_like(self.usage)
-        np.add.at(delta, sc, -pop.req[sell_agents])
-        placed_eff = pop.placed.copy()
-        placed_eff[sell_agents] = -1
-        np.add.at(delta, bc, pop.req[buy_agents])
-        old = placed_eff[buy_agents]
-        move = (old >= 0) & (old != bc)
-        np.add.at(delta, old[move], -pop.req[buy_agents][move])
-        self.usage = np.clip(self.usage + delta, 0.0, self.capacity)
+        buy_scale, rationed = self._commit_usage(
+            sell_agents, sc, buy_agents, bc, cap, ration
+        )
 
         pop.placed[sell_agents] = -1
         pop.placed[buy_agents] = bc
@@ -1090,9 +1496,22 @@ class Economy:
             "buy_util_pct": util_pct[bc] if bc.size else np.empty(0),
             "sell_util_pct": util_pct[sc] if sc.size else np.empty(0),
             "migrations": migrations,
+            "rationed_rows": rationed,
+            "sell_agents": sell_agents,
+            "sell_clusters": sc,
+            "buy_agents": buy_agents,
+            "buy_clusters": bc,
+            "buy_scale": buy_scale,
+            "buy_payments": pay64[buy_rows],
         }
 
-    def _apply_settlement_loop(self, book: BidBook, result) -> dict:
+    def _apply_settlement_loop(
+        self,
+        book: BidBook,
+        result,
+        cap: np.ndarray | None = None,
+        ration: bool = False,
+    ) -> dict:
         """Per-agent reference of :meth:`_apply_settlement` (the legacy epoch
         path, and the benchmark baseline's apply half).
 
@@ -1102,6 +1521,8 @@ class Economy:
         bit-identical EpochStats.
         """
         pop = self.pop
+        if cap is None:
+            cap = self.capacity
         won = np.asarray(result.won)
         chosen = np.asarray(result.chosen_bundle)
         payments = np.asarray(result.payments)
@@ -1111,6 +1532,7 @@ class Economy:
         n_agent_bids = n_agent_wins = 0
         sell_pairs: list[tuple[int, int]] = []  # (agent, cluster)
         buy_pairs: list[tuple[int, int]] = []
+        buy_pays: list[float] = []
         for u in range(book.num_rows):
             kind = book.row_kind[u]
             if kind == KIND_OP:
@@ -1133,22 +1555,19 @@ class Economy:
                 sell_pairs.append((a, int(book.sell_cluster[u])))
             else:
                 buy_pairs.append((a, int(book.bundle_cluster[u, int(chosen[u])])))
+                buy_pays.append(pay)
 
         migrations = 0
-        delta = np.zeros_like(self.usage)
-        placed_eff = pop.placed.copy()
-        for a, c in sell_pairs:
-            delta[c] += -pop.req[a]
-            placed_eff[a] = -1
         for a, c in buy_pairs:
-            delta[c] += pop.req[a]
             if pop.home[a] >= 0 and pop.home[a] != c:
                 migrations += 1
-        for a, c in buy_pairs:
-            old = placed_eff[a]
-            if old >= 0 and old != c:
-                delta[old] += -pop.req[a]
-        self.usage = np.clip(self.usage + delta, 0.0, self.capacity)
+        sell_agents = np.asarray([a for a, _ in sell_pairs], np.int64)
+        sc = np.asarray([c for _, c in sell_pairs], np.int64)
+        buy_agents = np.asarray([a for a, _ in buy_pairs], np.int64)
+        bc = np.asarray([c for _, c in buy_pairs], np.int64)
+        buy_scale, rationed = self._commit_usage(
+            sell_agents, sc, buy_agents, bc, cap, ration
+        )
 
         for a, _ in sell_pairs:
             pop.placed[a] = -1
@@ -1171,6 +1590,13 @@ class Economy:
             "buy_util_pct": np.asarray([util_pct[c] for _, c in buy_pairs]),
             "sell_util_pct": np.asarray([util_pct[c] for _, c in sell_pairs]),
             "migrations": migrations,
+            "rationed_rows": rationed,
+            "sell_agents": sell_agents,
+            "sell_clusters": sc,
+            "buy_agents": buy_agents,
+            "buy_clusters": bc,
+            "buy_scale": buy_scale,
+            "buy_payments": np.asarray(buy_pays, np.float64),
         }
 
 

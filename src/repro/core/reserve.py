@@ -111,3 +111,51 @@ def reserve_prices(
     psi = np.asarray([p.utilization for p in pools], dtype=np.float32)
     cost = np.asarray([p.base_cost for p in pools], dtype=np.float32)
     return np.asarray(weighting(psi)) * cost
+
+
+# per-epoch EMA weight of the newest delivered-capacity observation in a
+# pool's reliability score (mirrors the per-agent fill_rate FILL_EMA)
+RELIABILITY_EMA = 0.5
+
+
+def reliability_discounted_psi(
+    psi: np.ndarray, reliability: np.ndarray, discount: float = 1.0
+) -> np.ndarray:
+    """Effective utilization after discounting capacity by reliability.
+
+    A pool that historically delivers only ``reliability`` of its nominal
+    capacity effectively has ``1 − discount·(1 − reliability)`` of it, so
+    its utilization — and through φ its reserve price — rises.  With
+    ``reliability = 1`` everywhere (or ``discount = 0``) this is exactly
+    the identity, so the fault-free reserve curve is bit-unchanged.
+    """
+    psi = np.asarray(psi, dtype=np.float32)
+    rel = np.clip(np.asarray(reliability, dtype=np.float32), 0.0, 1.0)
+    eff = np.maximum(1.0 - np.float32(discount) * (1.0 - rel), np.float32(1e-6))
+    return np.clip(psi / eff, 0.0, 1.0)
+
+
+def reputation_weighted_reserve(
+    pools: Sequence[ResourcePool],
+    weighting: WeightingFn | None = None,
+    reliability: np.ndarray | None = None,
+    discount: float = 1.0,
+) -> np.ndarray:
+    """Reputation-weighted reserves:  p̃_r = φ_r(ψ_eff(r)) · c(r).
+
+    Golem-clay-style unreliable supply: each pool carries a reliability
+    EMA of its delivered-vs-promised capacity (see
+    ``Economy.pool_reliability``), and the reserve curve prices the
+    *reliable* capacity — unreliable pools see a higher effective
+    utilization ψ_eff and therefore a higher reserve, shifting demand (and
+    the operator's floor revenue) toward supply that actually delivers.
+    ``reliability=None`` reads each pool's own ``reliability`` field; all
+    ones reproduces :func:`reserve_prices` exactly.
+    """
+    weighting = weighting or DEFAULT_WEIGHTING
+    psi = np.asarray([p.utilization for p in pools], dtype=np.float32)
+    cost = np.asarray([p.base_cost for p in pools], dtype=np.float32)
+    if reliability is None:
+        reliability = np.asarray([p.reliability for p in pools], dtype=np.float32)
+    psi_eff = reliability_discounted_psi(psi, reliability, discount)
+    return np.asarray(weighting(psi_eff)) * cost

@@ -32,6 +32,7 @@ from typing import Callable
 import numpy as np
 
 from .economy import AgentPopulation, Economy, EpochStats, make_fleet_economy
+from .faults import FaultModel, RegionFault
 from .markets import FLEET_BASE_COST, FLEET_RTYPES, fleet_population
 from .policies import (
     BudgetSmoothingPolicy,
@@ -243,8 +244,14 @@ class ScenarioResult:
         return self.util_spread[-1] < self.util_spread[0]
 
 
-def _check_physical_invariants(eco: Economy, context: str) -> None:
-    if np.any(eco.usage < -1e-9) or np.any(eco.usage > eco.capacity + 1e-9):
+def _check_physical_invariants(
+    eco: Economy, context: str, cap: np.ndarray | None = None
+) -> None:
+    """Usage within [0, cap] (cap defaults to nominal capacity; settlement
+    checks pass the epoch's *surviving* capacity so a faulted region may
+    never report phantom usage), population non-empty."""
+    cap = eco.capacity if cap is None else cap
+    if np.any(eco.usage < -1e-9) or np.any(eco.usage > cap + 1e-9):
         raise RuntimeError(f"usage out of [0, capacity] after {context}")
     if len(eco.pop) < 1:
         raise RuntimeError(f"economy emptied after {context}")
@@ -289,9 +296,12 @@ def run_scenario(
                     )
         s = eco.run_epoch()
         stats.append(s)
-        if not s.converged:
+        if not s.converged and not eco.ration_fallback:
             # loud, not just a stats bit: every downstream number this epoch
-            # (prices, premiums, migrations) describes a round-starved clock
+            # (prices, premiums, migrations) describes a round-starved clock.
+            # With the proportional-rationing fallback on, non-convergence is
+            # a *handled* degraded mode instead — recorded in the epoch's
+            # ``degraded``/``rationed_rows`` stats, not warned about.
             warnings.warn(
                 f"scenario {scenario.name!r} epoch {e}: clock hit "
                 f"max_rounds={eco.clock.max_rounds} without clearing "
@@ -300,7 +310,9 @@ def run_scenario(
                 stacklevel=2,
             )
         if check_invariants:
-            _check_physical_invariants(eco, f"epoch {e} settlement")
+            _check_physical_invariants(
+                eco, f"epoch {e} settlement", cap=eco._last_cap_eff
+            )
         spread.append(_spread(eco))
         if verbose:
             print(
@@ -458,6 +470,75 @@ def migration_relief(seed: int = 3, epochs: int = 7, **eco_kwargs):
     )
 
 
+def region_loss(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Fault injection: cluster-0 goes dark at epoch 1 and never comes back.
+
+    Unlike :func:`cluster_drain` (an operator decommission that rewrites
+    nominal capacity), this is a *fault*: nominal capacity is untouched,
+    the :class:`~repro.core.faults.FaultModel` scales the effective
+    capacity each epoch sees, holders are clawed back with compensation,
+    and every epoch from the loss onward reports ``degraded=True``."""
+    eco = make_fleet_economy(
+        seed=seed,
+        faults=FaultModel(
+            region_faults=(RegionFault(cluster=0, start=1, scale=0.0),),
+        ),
+        clock_retries=2,
+        ration_fallback=True,
+        **eco_kwargs,
+    )
+    return eco, Scenario(
+        "region_loss", epochs=epochs,
+        description="cluster-0 region loss at epoch 1, no recovery",
+    )
+
+
+def region_recovery(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Fault injection: cluster-0 degrades to 25% capacity for two epochs,
+    then recovers exactly — nominal capacity was never touched, so the
+    post-recovery market is the pre-fault market plus re-placement churn."""
+    eco = make_fleet_economy(
+        seed=seed,
+        faults=FaultModel(
+            region_faults=(
+                RegionFault(cluster=0, start=1, end=3, scale=0.25),
+            ),
+        ),
+        clock_retries=2,
+        ration_fallback=True,
+        **eco_kwargs,
+    )
+    return eco, Scenario(
+        "region_recovery", epochs=epochs,
+        description="cluster-0 at 25% capacity for epochs 1-2, then back",
+    )
+
+
+def unreliable_supply(seed: int = 3, epochs: int = 6, **eco_kwargs):
+    """Fault injection: Tycoon-style flaky participants — bidders drop out,
+    winning sellers flake on delivery, pools fail right after settlement.
+    The reliability EMA decays on failing pools and the reputation-weighted
+    reserve prices their supply up, shifting demand toward pools that
+    actually deliver."""
+    eco = make_fleet_economy(
+        seed=seed,
+        faults=FaultModel(
+            seed=seed + 7,
+            bid_dropout=0.10,
+            seller_fail=0.25,
+            pool_fail=0.15,
+            pool_fail_scale=0.5,
+        ),
+        clock_retries=2,
+        ration_fallback=True,
+        **eco_kwargs,
+    )
+    return eco, Scenario(
+        "unreliable_supply", epochs=epochs,
+        description="10% bid dropout, 25% seller flake, 15% pool failure",
+    )
+
+
 SCENARIOS: dict[str, Callable] = {
     "congestion_relief": congestion_relief,
     "cluster_drain": cluster_drain,
@@ -465,4 +546,7 @@ SCENARIOS: dict[str, Callable] = {
     "flash_crowd": flash_crowd,
     "sticky_relocation": sticky_relocation,
     "migration_relief": migration_relief,
+    "region_loss": region_loss,
+    "region_recovery": region_recovery,
+    "unreliable_supply": unreliable_supply,
 }

@@ -51,6 +51,9 @@ class ResourcePool:
     base_cost: float  # c(r): $ per unit per epoch
     utilization: float  # psi(r) in [0, 1], pre-auction
     supply: float = 0.0  # operator-sellable units this epoch
+    # delivered-vs-promised capacity EMA (1.0 = always delivers) — feeds the
+    # reputation-weighted reserve curve, see repro.core.reserve
+    reliability: float = 1.0
 
     @property
     def name(self) -> str:

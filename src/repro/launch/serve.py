@@ -54,8 +54,11 @@ def main(argv=None):
             t0 = time.time()
             logits = jax.jit(prefill)(params, {"tokens": prompt})
             logits.block_until_ready()
-            print(f"[serve] prefill {args.batch}x{args.prompt_len}: "
-                  f"{time.time()-t0:.2f}s logits {logits.shape}", flush=True)
+            print(
+                f"[serve] prefill {args.batch}x{args.prompt_len}: "
+                f"{time.time()-t0:.2f}s logits {logits.shape}",
+                flush=True,
+            )
 
         t0 = time.time()
         out = generate(params, cfg, prompt, max_new=args.new, temperature=args.temperature)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import shutil
 import subprocess
 import sys
 import tempfile
@@ -28,12 +29,35 @@ def run_supervised(
     deadline_s: float = 300.0,
     poll_s: float = 2.0,
     python: str = sys.executable,
+    module: str = "repro.launch.train",
 ) -> int:
-    hb = os.path.join(tempfile.mkdtemp(prefix="repro_hb_"), "heartbeat")
+    # the heartbeat lives in a private temp dir removed on every exit path
+    # (it used to leak one mkdtemp per supervised run); ``module`` is the
+    # trainer entry point — tests substitute a stub that hangs on demand
+    hb_dir = tempfile.mkdtemp(prefix="repro_hb_")
+    try:
+        return _supervise(
+            trainer_args, ckpt_dir, max_restarts, deadline_s, poll_s,
+            python, module, os.path.join(hb_dir, "heartbeat"),
+        )
+    finally:
+        shutil.rmtree(hb_dir, ignore_errors=True)
+
+
+def _supervise(
+    trainer_args: list[str],
+    ckpt_dir: str,
+    max_restarts: int,
+    deadline_s: float,
+    poll_s: float,
+    python: str,
+    module: str,
+    hb: str,
+) -> int:
     restarts = 0
     while True:
         cmd = [
-            python, "-m", "repro.launch.train",
+            python, "-m", module,
             "--ckpt-dir", ckpt_dir, "--heartbeat", hb, *trainer_args,
         ]
         print(f"[supervisor] launching (attempt {restarts + 1}): {' '.join(cmd)}", flush=True)

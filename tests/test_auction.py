@@ -112,8 +112,9 @@ class TestAdaptiveClock:
     def test_adaptive_prices_still_monotone_from_start(self):
         prob = random_market(57, 11, seed=3, supply=(2.0, 6.0))
         p0 = jnp.full((11,), 0.1)
-        cfg = ClockConfig(max_rounds=20000, alpha=0.6, delta=0.25,
-                          alpha_growth=2.0, delta_decay=0.5)
+        cfg = ClockConfig(
+            max_rounds=20000, alpha=0.6, delta=0.25, alpha_growth=2.0, delta_decay=0.5
+        )
         res = clock_auction(prob, p0, cfg)
         assert bool(jnp.all(res.prices >= p0 - 1e-6))
 
@@ -146,8 +147,7 @@ class TestWarmStart:
         cold clearing point: the bisection must not hand back prices below
         the warm start (it searches [p_prev, p*] with p_prev ≥ p0)."""
         prob, p0 = self._market()
-        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25,
-                          refine_rounds=refine_rounds)
+        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25, refine_rounds=refine_rounds)
         cold = clock_auction(prob, p0, cfg)
         warm_p0 = cold.prices * 1.1  # above the clearing point everywhere
         res = clock_auction(prob, warm_p0, cfg)
@@ -161,8 +161,14 @@ class TestWarmStart:
         the coarse accelerated steps is polished back toward — never below —
         the warm start."""
         prob, p0 = self._market()
-        cfg = ClockConfig(max_rounds=5000, alpha=0.6, delta=0.25,
-                          alpha_growth=1.6, delta_decay=0.6, refine_rounds=30)
+        cfg = ClockConfig(
+            max_rounds=5000,
+            alpha=0.6,
+            delta=0.25,
+            alpha_growth=1.6,
+            delta_decay=0.6,
+            refine_rounds=30,
+        )
         cold = clock_auction(prob, p0, cfg)
         warm_p0 = jnp.maximum(cold.prices, p0)
         res = clock_auction(prob, warm_p0, cfg)

@@ -33,8 +33,13 @@ def test_property_pure_buyers_terminate_feasible(n_buyers, n_res, seed):
     and the settled point satisfies every SYSTEM constraint."""
     rng = np.random.default_rng(seed)
     pools = [
-        ResourcePool(f"c{r}", "cpu", float(rng.uniform(0.5, 2)), float(rng.uniform(0, 1)),
-                     supply=float(rng.uniform(1, 20)))
+        ResourcePool(
+            f"c{r}",
+            "cpu",
+            float(rng.uniform(0.5, 2)),
+            float(rng.uniform(0, 1)),
+            supply=float(rng.uniform(1, 20)),
+        )
         for r in range(n_res)
     ]
     pr = reserve_prices(pools)

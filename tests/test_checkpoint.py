@@ -112,10 +112,24 @@ def test_supervisor_restarts_after_injected_fault(tmp_path):
     os.environ["FAULT_STEP"] = "6"
     try:
         rc = run_supervised(
-            ["--arch", "qwen3-1.7b", "--smoke", "--steps", "12", "--batch", "2",
-             "--seq", "32", "--ckpt-every", "2",
-             "--metrics", str(tmp_path / "m.jsonl")],
-            ckpt_dir=str(tmp_path / "ck"), max_restarts=2, deadline_s=600,
+            [
+                "--arch",
+                "qwen3-1.7b",
+                "--smoke",
+                "--steps",
+                "12",
+                "--batch",
+                "2",
+                "--seq",
+                "32",
+                "--ckpt-every",
+                "2",
+                "--metrics",
+                str(tmp_path / "m.jsonl"),
+            ],
+            ckpt_dir=str(tmp_path / "ck"),
+            max_restarts=2,
+            deadline_s=600,
         )
     finally:
         if env_backup is None:
@@ -125,3 +139,72 @@ def test_supervisor_restarts_after_injected_fault(tmp_path):
     assert rc == 0
     steps = [json.loads(l)["step"] for l in open(tmp_path / "m.jsonl")]
     assert 6 in steps and 11 in steps  # crashed step was re-run after restart
+
+
+_HANG_TRAINER = '''
+"""Stub trainer: beats once, hangs on attempt 1, exits clean on attempt 2."""
+import argparse, os, sys, time
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--ckpt-dir")
+ap.add_argument("--heartbeat")
+args, _ = ap.parse_known_args()
+os.makedirs(args.ckpt_dir, exist_ok=True)
+with open(args.heartbeat, "w") as f:
+    f.write("beat")
+marker = os.path.join(args.ckpt_dir, "attempted")
+if os.path.exists(marker):
+    sys.exit(0)  # the restarted attempt finishes cleanly
+with open(marker, "w") as f:
+    f.write("1")
+while True:
+    time.sleep(60)  # hang: the heartbeat above is the last one ever written
+'''
+
+
+def _temp_hb_dirs():
+    import glob
+    import tempfile
+
+    return set(glob.glob(os.path.join(tempfile.gettempdir(), "repro_hb_*")))
+
+
+def test_supervisor_restarts_on_hang_and_cleans_heartbeat(tmp_path, monkeypatch):
+    """The missing half of the supervision story: a *hung* trainer (stale
+    heartbeat, process alive) is killed and restarted — and the heartbeat
+    temp directory is removed afterwards (it used to leak one mkdtemp per
+    supervised run)."""
+    from repro.launch.supervisor import run_supervised
+
+    (tmp_path / "hang_trainer.py").write_text(_HANG_TRAINER)
+    monkeypatch.setenv(
+        "PYTHONPATH",
+        str(tmp_path) + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    before = _temp_hb_dirs()
+    rc = run_supervised(
+        [], ckpt_dir=str(tmp_path / "ck"), max_restarts=2,
+        deadline_s=2.0, poll_s=0.2, module="hang_trainer",
+    )
+    assert rc == 0  # hang detected -> killed -> restart finished cleanly
+    assert (tmp_path / "ck" / "attempted").exists()
+    assert _temp_hb_dirs() <= before  # no leaked heartbeat directories
+
+
+def test_supervisor_gives_up_after_max_restarts_and_cleans_up(tmp_path, monkeypatch):
+    (tmp_path / "always_hang.py").write_text(
+        _HANG_TRAINER.replace("sys.exit(0)", "pass")
+    )
+    monkeypatch.setenv(
+        "PYTHONPATH",
+        str(tmp_path) + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    from repro.launch.supervisor import run_supervised
+
+    before = _temp_hb_dirs()
+    rc = run_supervised(
+        [], ckpt_dir=str(tmp_path / "ck"), max_restarts=1,
+        deadline_s=1.0, poll_s=0.2, module="always_hang",
+    )
+    assert rc == 1
+    assert _temp_hb_dirs() <= before

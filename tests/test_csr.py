@@ -47,8 +47,17 @@ from repro.kernels.sparse_bid_eval_csr import (
     sparse_bid_eval_csr as pallas_sparse_bid_eval_csr,
 )
 
-RESULT_FIELDS = ("prices", "alloc_idx", "alloc_val", "chosen_bundle", "won",
-                 "payments", "excess_demand", "rounds", "converged")
+RESULT_FIELDS = (
+    "prices",
+    "alloc_idx",
+    "alloc_val",
+    "chosen_bundle",
+    "won",
+    "payments",
+    "excess_demand",
+    "rounds",
+    "converged",
+)
 
 
 def _random_problem(U, B, R, nnz=3, seed=0, uniform_k=False):

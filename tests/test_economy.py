@@ -111,3 +111,89 @@ def test_preview_matches_binding_prices():
     stats = eco.run_epoch()
     np.testing.assert_array_equal(preview, stats.prices)
     assert bool(stats.converged)
+
+
+def _full_stack_economy():
+    """Every optional subsystem at once: adaptive bidder policies, warm
+    starts with seed decay, and an active fault model (region fault +
+    dropout + flaky sellers + failing pools)."""
+    from repro.core.faults import FaultModel, RegionFault
+    from repro.core.policies import (
+        BudgetSmoothingPolicy,
+        PriceChasingPolicy,
+        StaticPolicy,
+    )
+
+    eco = make_fleet_economy(
+        seed=17,
+        warm_start=True,
+        warm_decay=0.5,
+        policies=[StaticPolicy(), PriceChasingPolicy(), BudgetSmoothingPolicy()],
+        faults=FaultModel(
+            seed=6,
+            region_faults=(RegionFault(cluster=1, start=1, end=3, scale=0.3),),
+            bid_dropout=0.1,
+            seller_fail=0.2,
+            pool_fail=0.1,
+        ),
+        clock_retries=1,
+        ration_fallback=True,
+    )
+    eco.pop.policy[:] = np.arange(len(eco.pop)) % 3
+    return eco
+
+
+def test_dry_run_full_stack_mutates_nothing():
+    """dry_run under policies + warm_decay + faults together: zero mutation
+    of economy state, population arrays, and the (stateless) fault model."""
+    from repro.core.economy import _POP_FIELDS
+
+    eco = _full_stack_economy()
+    for _ in range(2):  # past epoch 0 so warm seed / policies / fault all act
+        eco.run_epoch()
+    pop0 = {f: getattr(eco.pop, f).copy() for f in _POP_FIELDS}
+    eco0 = {
+        "usage": eco.usage.copy(),
+        "belief": eco.belief.copy(),
+        "capacity": eco.capacity.copy(),
+        "base_cost_rt": eco.base_cost_rt.copy(),
+        "pool_reliability": eco.pool_reliability.copy(),
+        "_last_reserve": eco._last_reserve.copy(),
+        "_last_filled": eco._last_filled.copy(),
+    }
+    reach0 = None if eco._reach_keys is None else eco._reach_keys.copy()
+    hist0 = [p.copy() for p in eco.price_history]
+    rng0 = eco.rng.bit_generator.state
+    faults0 = eco.faults
+
+    stats = eco.run_epoch(dry_run=True)
+    assert stats.degraded  # the region fault is active in the previewed epoch
+
+    for f in _POP_FIELDS:
+        np.testing.assert_array_equal(getattr(eco.pop, f), pop0[f], err_msg=f)
+    for k, v in eco0.items():
+        np.testing.assert_array_equal(getattr(eco, k), v, err_msg=k)
+    if reach0 is None:
+        assert eco._reach_keys is None
+    else:
+        np.testing.assert_array_equal(eco._reach_keys, reach0)
+    assert len(eco.price_history) == len(hist0)
+    for a, b in zip(eco.price_history, hist0):
+        np.testing.assert_array_equal(a, b)
+    assert eco.rng.bit_generator.state == rng0
+    assert eco.faults is faults0  # frozen dataclass, never replaced
+
+
+def test_dry_run_full_stack_preview_matches_binding():
+    """Under the full stack, the previewed epoch and the binding epoch that
+    follows settle bit-identical prices and reserves."""
+    eco = _full_stack_economy()
+    for _ in range(2):
+        eco.run_epoch()
+    preview = eco.run_epoch(dry_run=True)
+    binding = eco.run_epoch()
+    np.testing.assert_array_equal(preview.prices, binding.prices)
+    np.testing.assert_array_equal(preview.reserve, binding.reserve)
+    np.testing.assert_array_equal(preview.psi, binding.psi)
+    assert preview.dropped_bids == binding.dropped_bids
+    assert preview.warm_started and binding.warm_started

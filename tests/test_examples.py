@@ -53,6 +53,7 @@ def test_market_sim_scenario_smoke():
 def test_market_sim_lists_scenarios():
     out = _run_example("market_sim.py", "--list-scenarios")
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    for name in ("congestion_relief", "cluster_drain", "price_shock",
-                 "flash_crowd", "sticky_relocation"):
+    for name in (
+        "congestion_relief", "cluster_drain", "price_shock", "flash_crowd", "sticky_relocation"
+    ):
         assert name in out.stdout

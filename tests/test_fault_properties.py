@@ -1,0 +1,113 @@
+"""Hypothesis chaos properties: random fault schedules, physical invariants.
+
+Whatever fault schedule hypothesis throws at the economy — overlapping
+region faults, dropout, flaky sellers, failing pools — the settled market
+must keep its physical invariants: usage within [0, surviving capacity],
+reliability EMAs inside [0, 1], non-negative clawback/compensation
+telemetry, and no agent left placed in a dead region.  Optional
+dependency — skipped when hypothesis is absent (see requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.economy import make_fleet_economy  # noqa: E402
+from repro.core.faults import FaultModel, RegionFault  # noqa: E402
+
+N_CLUSTERS = 4
+N_AGENTS = 24
+EPOCHS = 3
+
+_region_faults = st.lists(
+    st.builds(
+        RegionFault,
+        cluster=st.integers(0, N_CLUSTERS - 1),
+        start=st.integers(0, EPOCHS - 1),
+        end=st.one_of(st.none(), st.integers(1, EPOCHS + 1)),
+        scale=st.sampled_from([0.0, 0.25, 0.5, 0.9]),
+        rtype=st.one_of(st.none(), st.integers(0, 2)),
+    ),
+    max_size=3,
+)
+
+_fault_models = st.builds(
+    FaultModel,
+    seed=st.integers(0, 2**16),
+    region_faults=_region_faults.map(tuple),
+    bid_dropout=st.sampled_from([0.0, 0.1, 0.5]),
+    seller_fail=st.sampled_from([0.0, 0.2, 0.8]),
+    pool_fail=st.sampled_from([0.0, 0.1, 0.4]),
+    pool_fail_scale=st.sampled_from([0.0, 0.5]),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(fm=_fault_models, seed=st.integers(0, 3))
+def test_chaos_keeps_physical_invariants(fm, seed):
+    eco = make_fleet_economy(
+        num_clusters=N_CLUSTERS, num_agents=N_AGENTS, seed=seed,
+        faults=fm, clock_retries=1, ration_fallback=True,
+    )
+    for e in range(EPOCHS):
+        s = eco.run_epoch()
+        cap_eff = eco._last_cap_eff
+        assert cap_eff is not None
+        assert np.all(eco.usage >= -1e-9)
+        assert np.all(eco.usage <= cap_eff + 1e-9), f"epoch {e}"
+        assert np.all(eco.usage <= eco.capacity + 1e-9), f"epoch {e}"
+        assert np.all(eco.pool_reliability >= 0.0)
+        assert np.all(eco.pool_reliability <= 1.0 + 1e-12)
+        assert s.clawback_units >= 0.0 and s.compensation >= 0.0
+        assert s.evictions >= 0 and s.dropped_bids >= 0
+        # a dead region (scale 0 this epoch) may hold no placed agent
+        dead = np.flatnonzero((cap_eff <= 1e-12).all(axis=1))
+        for c in dead:
+            assert not np.any(eco.pop.placed == c), f"agent in dead region {c}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(fm=_fault_models, seed=st.integers(0, 3))
+def test_chaos_dry_run_is_side_effect_free(fm, seed):
+    """preview_prices under arbitrary fault schedules mutates nothing —
+    fault draws are counter-based, so the dry run needs no fault state
+    rollback at all."""
+    eco = make_fleet_economy(
+        num_clusters=N_CLUSTERS, num_agents=N_AGENTS, seed=seed,
+        faults=fm, clock_retries=1, ration_fallback=True,
+    )
+    eco.run_epoch()
+    snap = (
+        eco.usage.copy(), eco.belief.copy(), eco.pop.placed.copy(),
+        eco.pop.fill_rate.copy(), eco.pool_reliability.copy(),
+        len(eco.price_history), eco.rng.bit_generator.state,
+    )
+    preview = eco.run_epoch(dry_run=True)
+    np.testing.assert_array_equal(eco.usage, snap[0])
+    np.testing.assert_array_equal(eco.belief, snap[1])
+    np.testing.assert_array_equal(eco.pop.placed, snap[2])
+    np.testing.assert_array_equal(eco.pop.fill_rate, snap[3])
+    np.testing.assert_array_equal(eco.pool_reliability, snap[4])
+    assert len(eco.price_history) == snap[5]
+    assert eco.rng.bit_generator.state == snap[6]
+    binding = eco.run_epoch()
+    np.testing.assert_array_equal(preview.prices, binding.prices)
+    np.testing.assert_array_equal(preview.reserve, binding.reserve)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    epoch=st.integers(0, 10),
+    n=st.just(N_AGENTS),
+)
+def test_chaos_draws_are_replayable(seed, epoch, n):
+    """Counter-based draws: the same (model, epoch) always realizes the
+    same faults — the property crash-resume parity rests on."""
+    fm = FaultModel(seed=seed, bid_dropout=0.3, seller_fail=0.3, pool_fail=0.2)
+    a = fm.draw(epoch, n, N_CLUSTERS, 3)
+    b = fm.draw(epoch, n, N_CLUSTERS, 3)
+    np.testing.assert_array_equal(a.dropout, b.dropout)
+    np.testing.assert_array_equal(a.seller_fail_u, b.seller_fail_u)
+    np.testing.assert_array_equal(a.pool_fail, b.pool_fail)

@@ -1,0 +1,506 @@
+"""Fault injection, graceful degradation, and crash recovery.
+
+Covers the failure-handling tentpole end to end:
+
+* :class:`~repro.core.faults.FaultModel` — counter-based determinism,
+  disabled-model bit-identity, per-channel independence;
+* graceful degradation in settlement — pre-auction quota clawback with
+  compensation, bounded-retry clock escalation, proportional rationing,
+  post-settlement seller/pool failures;
+* reputation-weighted reserves — the reliability EMA and its effect on
+  reserve prices;
+* :class:`~repro.checkpoint.market.MarketCheckpointer` — killed-and-resumed
+  horizons reproduce the uninterrupted trajectory bit-exactly (including a
+  real subprocess kill).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.auction import ClockConfig, escalate_clock
+from repro.core.economy import Economy, _claw_to_capacity, make_fleet_economy
+from repro.core.faults import FaultDraw, FaultModel, RegionFault
+from repro.core.reserve import (
+    reliability_discounted_psi,
+    reputation_weighted_reserve,
+    reserve_prices,
+)
+from repro.checkpoint.market import MarketCheckpointer
+
+EPOCHS = 3
+
+
+def _stats_equal(a, b):
+    for f in dataclasses.fields(a):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray):
+            np.testing.assert_array_equal(x, y, err_msg=f.name)
+        else:
+            assert x == y or (x != x and y != y), (f.name, x, y)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_defaults_are_disabled():
+    assert FaultModel().disabled
+    assert not FaultModel(bid_dropout=0.1).disabled
+    assert not FaultModel(
+        region_faults=(RegionFault(cluster=0, start=0),)
+    ).disabled
+
+
+def test_fault_model_validates_probabilities():
+    with pytest.raises(ValueError):
+        FaultModel(bid_dropout=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(seller_fail=-0.1)
+    with pytest.raises(ValueError):
+        FaultModel(pool_fail_scale=2.0)
+
+
+def test_draws_are_counter_based_deterministic():
+    fm = FaultModel(seed=9, bid_dropout=0.3, seller_fail=0.2, pool_fail=0.1)
+    a = fm.draw(5, 40, 4, 3)
+    b = fm.draw(5, 40, 4, 3)
+    np.testing.assert_array_equal(a.dropout, b.dropout)
+    np.testing.assert_array_equal(a.seller_fail_u, b.seller_fail_u)
+    np.testing.assert_array_equal(a.pool_fail, b.pool_fail)
+    # different epochs draw different realizations
+    c = fm.draw(6, 40, 4, 3)
+    assert not np.array_equal(a.dropout, c.dropout)
+
+
+def test_channels_are_independent():
+    """Enabling one channel must not perturb another channel's stream."""
+    just_drop = FaultModel(seed=9, bid_dropout=0.3)
+    both = FaultModel(seed=9, bid_dropout=0.3, pool_fail=0.2)
+    np.testing.assert_array_equal(
+        just_drop.draw(2, 40, 4, 3).dropout, both.draw(2, 40, 4, 3).dropout
+    )
+
+
+def test_region_fault_window_and_overlap():
+    rf = RegionFault(cluster=1, start=2, end=4, scale=0.5)
+    assert not rf.active(1) and rf.active(2) and rf.active(3) and not rf.active(4)
+    fm = FaultModel(
+        region_faults=(
+            RegionFault(cluster=1, start=0, scale=0.5),
+            RegionFault(cluster=1, start=0, scale=0.2, rtype=0),
+        )
+    )
+    scale = fm.capacity_scale(0, 3, 2)
+    assert scale[1, 0] == 0.2  # overlapping faults min-combine
+    assert scale[1, 1] == 0.5
+    assert np.all(scale[0] == 1.0) and np.all(scale[2] == 1.0)
+    assert FaultModel().capacity_scale(0, 3, 2) is None
+
+
+def test_fault_draw_any_fault():
+    assert not FaultDraw(0, None, None, None, None).any_fault
+    assert FaultDraw(0, None, np.zeros(3, bool), None, None).any_fault
+
+
+# ---------------------------------------------------------------------------
+# disabled model == no model, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_fault_model_is_bit_identical():
+    """Economy(faults=FaultModel()) must be indistinguishable from
+    Economy(faults=None) — the tentpole's central bit-identity claim."""
+    plain = make_fleet_economy(seed=3)
+    gated = make_fleet_economy(seed=3, faults=FaultModel())
+    for _ in range(EPOCHS):
+        _stats_equal(plain.run_epoch(), gated.run_epoch())
+    np.testing.assert_array_equal(plain.usage, gated.usage)
+    np.testing.assert_array_equal(plain.pop.placed, gated.pop.placed)
+    assert plain.rng.bit_generator.state == gated.rng.bit_generator.state
+
+
+def test_new_economy_knobs_default_off():
+    eco = make_fleet_economy(seed=0)
+    assert eco.faults is None
+    assert eco.clock_retries == 0
+    assert eco.ration_fallback is False
+    np.testing.assert_array_equal(eco.pool_reliability, np.ones(eco.R))
+
+
+# ---------------------------------------------------------------------------
+# bid-stream dropout
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_shrinks_book_and_keeps_packer_parity():
+    """Dropout masks rows out of the book without desynchronizing the RNG:
+    the vectorized and loop packers stay bit-parity under dropout."""
+    fm = FaultModel(seed=4, bid_dropout=0.4)
+    vec = make_fleet_economy(seed=3, faults=fm)
+    loop = make_fleet_economy(seed=3, faults=fm, packer="loop")
+    for _ in range(EPOCHS):
+        sv, sl = vec.run_epoch(), loop.run_epoch()
+        assert sv.dropped_bids == sl.dropped_bids > 0
+        _stats_equal(sv, sl)
+    np.testing.assert_array_equal(vec.usage, loop.usage)
+    np.testing.assert_array_equal(vec.pop.placed, loop.pop.placed)
+
+
+def test_total_dropout_settles_operator_rows_only():
+    """bid_dropout=1.0: no agent enters the book; the operator rows alone
+    settle (nothing trades) and usage is untouched."""
+    fm = FaultModel(seed=4, bid_dropout=1.0)
+    eco = make_fleet_economy(seed=3, faults=fm)
+    usage = eco.usage.copy()
+    s = eco.run_epoch()
+    assert s.dropped_bids == len(eco.pop)
+    assert s.pct_settled == 0.0 and s.migrations == 0
+    np.testing.assert_array_equal(eco.usage, usage)
+
+
+# ---------------------------------------------------------------------------
+# region loss / recovery and quota clawback
+# ---------------------------------------------------------------------------
+
+
+def test_claw_to_capacity_evicts_lifo():
+    placed = np.array([0, 0, 1, 0])
+    req = np.array([[4.0], [4.0], [2.0], [4.0]])
+    usage = np.array([[12.0], [2.0]])
+    cap = np.array([[5.0], [9.0]])
+    evict, new_usage = _claw_to_capacity(placed, req, usage, cap)
+    # agents 3 then 1 evicted (LIFO) brings usage to 4 <= 5; agent 0 stays
+    np.testing.assert_array_equal(evict, [False, True, False, True])
+    np.testing.assert_array_equal(new_usage, [[4.0], [2.0]])
+
+
+def test_claw_to_capacity_clamps_phantom_usage():
+    """Pre-loaded congestion (usage not owned by any placed agent) is
+    clamped to the surviving capacity — jobs on failed machines lose them."""
+    placed = np.array([-1])
+    req = np.array([[1.0]])
+    usage = np.array([[10.0]])
+    cap = np.array([[3.0]])
+    evict, new_usage = _claw_to_capacity(placed, req, usage, cap)
+    assert not evict.any()
+    np.testing.assert_array_equal(new_usage, [[3.0]])
+
+
+def test_region_loss_respects_surviving_capacity():
+    fm = FaultModel(region_faults=(RegionFault(cluster=0, start=1, scale=0.0),))
+    eco = make_fleet_economy(seed=3, faults=fm, clock_retries=2,
+                             ration_fallback=True)
+    s0 = eco.run_epoch()
+    assert not s0.degraded
+    for e in range(1, 4):
+        s = eco.run_epoch()
+        assert s.degraded
+        assert np.all(eco.usage[0] <= 1e-9), f"epoch {e}: usage on dead region"
+    assert np.all(eco.pop.placed != 0)  # nobody holds the dead cluster
+
+
+def test_region_loss_claws_back_with_compensation():
+    fm = FaultModel(region_faults=(RegionFault(cluster=0, start=1, scale=0.0),))
+    eco = make_fleet_economy(seed=3, faults=fm, clock_retries=2,
+                             ration_fallback=True)
+    eco.run_epoch()
+    held = int((eco.pop.placed == 0).sum())
+    assert held > 0  # the fault actually displaces someone
+    usage_before = eco.usage.copy()
+    s = eco.run_epoch()
+    assert s.evictions >= held
+    assert s.compensation > 0.0
+    assert s.clawback_units >= usage_before[0].sum() - 1e-6
+
+
+def test_region_recovery_restores_nominal_capacity():
+    """After the fault window the nominal capacity was never touched, so
+    the market re-places demand into the recovered region."""
+    fm = FaultModel(
+        region_faults=(RegionFault(cluster=0, start=1, end=3, scale=0.25),)
+    )
+    eco = make_fleet_economy(seed=3, faults=fm, clock_retries=2,
+                             ration_fallback=True)
+    cap0 = eco.capacity.copy()
+    degraded = []
+    for _ in range(5):
+        degraded.append(eco.run_epoch().degraded)
+    np.testing.assert_array_equal(eco.capacity, cap0)  # nominal untouched
+    assert degraded[1] and degraded[2]
+    assert not degraded[0] and not degraded[3] and not degraded[4]
+    assert eco.usage[0].sum() > 0  # demand returned to the recovered region
+
+
+def test_conservation_under_clawback():
+    """Usage lost to a region fault equals the clawed-back units: nothing
+    is silently created or destroyed by the eviction pass."""
+    fm = FaultModel(region_faults=(RegionFault(cluster=2, start=1, scale=0.3),))
+    eco = make_fleet_economy(seed=7, faults=fm)
+    eco.run_epoch()
+    before = eco.usage.copy()
+    cap_eff = eco.capacity.copy()
+    cap_eff[2] *= 0.3
+    overage = float(np.maximum(before - cap_eff, 0.0)[2].sum())
+    assert overage > 0  # the fault actually bites
+    s = eco.run_epoch()
+    # LIFO eviction removes whole bundles, so the clawed-back total is at
+    # least the overage, and afterwards the faulted cluster fits within
+    # its surviving capacity — nothing phantom survives the clawback
+    assert s.clawback_units >= overage - 1e-6
+    assert np.all(eco.usage[2] <= cap_eff[2] + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# seller flakes, pool failures, reliability EMA
+# ---------------------------------------------------------------------------
+
+
+def test_seller_and_pool_failures_update_reliability():
+    fm = FaultModel(seed=5, seller_fail=0.5, pool_fail=0.3, pool_fail_scale=0.4)
+    eco = make_fleet_economy(seed=3, faults=fm)
+    seen = 0
+    for _ in range(4):
+        s = eco.run_epoch()
+        seen += s.seller_failures + s.failed_pools
+        assert np.all(eco.usage <= eco.capacity + 1e-9)
+    assert seen > 0
+    assert eco.pool_reliability.min() < 1.0  # failures dented the EMA
+    assert np.all(eco.pool_reliability > 0.0)
+
+
+def test_pool_failure_evicts_with_refund():
+    fm = FaultModel(seed=11, pool_fail=1.0, pool_fail_scale=0.0)
+    eco = make_fleet_economy(seed=3, faults=fm)
+    s = eco.run_epoch()
+    assert s.failed_pools == eco.R
+    assert s.degraded
+    assert np.all(eco.usage <= 1e-9)  # everything failed, nothing delivered
+    np.testing.assert_array_equal(
+        eco.pool_reliability, np.full(eco.R, 0.5)
+    )  # EMA halfway to zero after one total failure
+
+
+def test_reliability_recovers_on_healthy_epochs():
+    fm = FaultModel(
+        region_faults=(RegionFault(cluster=0, start=0, end=1, scale=0.0),)
+    )
+    eco = make_fleet_economy(seed=3, faults=fm)
+    eco.run_epoch()
+    dented = eco.pool_reliability.copy()
+    assert dented[: eco.T].max() < 1.0
+    for _ in range(2):
+        eco.run_epoch()
+    assert np.all(eco.pool_reliability > dented - 1e-12)
+    assert eco.pool_reliability[0] > dented[0]  # geometric recovery
+
+
+# ---------------------------------------------------------------------------
+# reputation-weighted reserves
+# ---------------------------------------------------------------------------
+
+
+def test_reliability_discounted_psi_identity_and_monotonicity():
+    psi = np.array([0.2, 0.6, 0.9], np.float32)
+    np.testing.assert_array_equal(
+        reliability_discounted_psi(psi, np.ones(3)), psi
+    )
+    lo = reliability_discounted_psi(psi, np.full(3, 0.8))
+    hi = reliability_discounted_psi(psi, np.full(3, 0.4))
+    assert np.all(lo >= psi) and np.all(hi >= lo)
+    assert np.all(hi <= 1.0)
+
+
+def test_reputation_weighted_reserve_matches_plain_when_reliable():
+    eco = make_fleet_economy(seed=3)
+    pools = eco.pools()
+    np.testing.assert_array_equal(
+        reputation_weighted_reserve(pools, eco.weighting),
+        reserve_prices(pools, eco.weighting),
+    )
+
+
+def test_unreliable_pools_price_higher():
+    eco = make_fleet_economy(seed=3)
+    pools = eco.pools()
+    rel = np.ones(eco.R)
+    rel[:3] = 0.5
+    plain = reserve_prices(pools, eco.weighting)
+    rep = reputation_weighted_reserve(pools, eco.weighting, reliability=rel)
+    assert np.all(rep[:3] >= plain[:3])
+    np.testing.assert_array_equal(rep[3:], plain[3:])
+
+
+def test_reliability_shifts_reserves_in_economy():
+    """End to end: after pool failures dent the reliability EMA, reserve
+    prices sit above what a fully-reliable economy would quote."""
+    fm = FaultModel(seed=11, pool_fail=1.0, pool_fail_scale=0.5)
+    eco = make_fleet_economy(seed=3, faults=fm)
+    eco.run_epoch()  # every pool delivers half; reliability EMA dented
+    assert eco.pool_reliability.max() < 1.0
+    ref = reserve_prices(eco.pools(), eco.weighting)  # reliability-blind
+    s = eco.run_epoch()
+    assert np.all(s.reserve >= ref - 1e-6)
+    assert s.reserve.max() > ref.max()
+
+
+# ---------------------------------------------------------------------------
+# clock escalation and proportional rationing
+# ---------------------------------------------------------------------------
+
+
+def test_escalate_clock_doubles_budget_and_forces_adaptive():
+    cfg = ClockConfig(max_rounds=100)
+    esc = escalate_clock(cfg)
+    assert esc.max_rounds == 200
+    assert esc.alpha_growth > 1.0 and esc.delta_decay < 1.0
+    # an already-adaptive schedule is kept, not overwritten
+    cfg2 = ClockConfig(max_rounds=100, alpha_growth=2.0, delta_decay=0.5)
+    esc2 = escalate_clock(cfg2)
+    assert esc2.alpha_growth == 2.0 and esc2.delta_decay == 0.5
+
+
+def test_clock_escalation_recovers_convergence():
+    eco = make_fleet_economy(
+        seed=3, clock=ClockConfig(max_rounds=5), clock_retries=8
+    )
+    s = eco.run_epoch()
+    assert s.converged
+    assert 0 < s.clock_escalations <= 8
+    assert s.degraded
+
+
+def test_clock_retries_zero_keeps_single_attempt():
+    eco = make_fleet_economy(seed=3, clock=ClockConfig(max_rounds=1))
+    s = eco.run_epoch()
+    assert not s.converged and s.clock_escalations == 0
+
+
+def test_rationing_bounds_usage_on_starved_epochs():
+    """With the clock starved and no retries, proportional rationing keeps
+    usage within capacity and reports the scaled rows."""
+    eco = make_fleet_economy(
+        seed=3, clock=ClockConfig(max_rounds=1), ration_fallback=True
+    )
+    for _ in range(2):
+        s = eco.run_epoch()
+        assert not s.converged and s.degraded
+        assert np.all(eco.usage <= eco.capacity + 1e-9)
+        assert np.all(eco.usage >= -1e-9)
+
+
+def test_clock_retries_validation():
+    with pytest.raises(ValueError):
+        make_fleet_economy(seed=0, clock_retries=-1)
+
+
+# ---------------------------------------------------------------------------
+# crash-recoverable epoch state
+# ---------------------------------------------------------------------------
+
+_FAULTS = FaultModel(
+    seed=2,
+    bid_dropout=0.15,
+    seller_fail=0.2,
+    pool_fail=0.1,
+    region_faults=(RegionFault(cluster=2, start=2, end=4, scale=0.25),),
+)
+
+
+def _mk():
+    return make_fleet_economy(
+        seed=0, faults=_FAULTS, clock_retries=1, ration_fallback=True
+    )
+
+
+def test_checkpoint_resume_is_bit_identical(tmp_path):
+    """Kill-and-resume parity, in process: save at every epoch boundary,
+    rebuild the economy, restore, and finish — every EpochStats field and
+    every piece of mutable state matches the uninterrupted horizon."""
+    ref = _mk()
+    ref_stats = [ref.run_epoch() for _ in range(5)]
+
+    ck = MarketCheckpointer(str(tmp_path))
+    a = _mk()
+    for _ in range(2):
+        a.run_epoch()
+        ck.save(a)
+    del a  # "crash"
+
+    b = _mk()
+    assert MarketCheckpointer(str(tmp_path)).restore_latest(b) == 2
+    res_stats = [b.run_epoch() for _ in range(3)]
+    for s_ref, s_res in zip(ref_stats[2:], res_stats):
+        _stats_equal(s_ref, s_res)
+    np.testing.assert_array_equal(ref.usage, b.usage)
+    np.testing.assert_array_equal(ref.pop.placed, b.pop.placed)
+    np.testing.assert_array_equal(ref.pool_reliability, b.pool_reliability)
+    np.testing.assert_array_equal(ref.belief, b.belief)
+    assert ref.rng.bit_generator.state == b.rng.bit_generator.state
+
+
+def test_checkpoint_restore_rejects_wrong_economy(tmp_path):
+    ck = MarketCheckpointer(str(tmp_path))
+    eco = _mk()
+    eco.run_epoch()
+    ck.save(eco)
+    other = make_fleet_economy(num_clusters=3, seed=0)
+    with pytest.raises(ValueError, match="reconstruct the same economy"):
+        MarketCheckpointer(str(tmp_path)).restore_latest(other)
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    eco = _mk()
+    assert MarketCheckpointer(str(tmp_path)).restore_latest(eco) is None
+
+
+_CRASH_SCRIPT = """
+import sys, os
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.economy import make_fleet_economy
+from repro.core.faults import FaultModel, RegionFault
+from repro.checkpoint.market import MarketCheckpointer
+
+fm = FaultModel(seed=2, bid_dropout=0.15, seller_fail=0.2, pool_fail=0.1,
+                region_faults=(RegionFault(cluster=2, start=2, end=4,
+                                           scale=0.25),))
+eco = make_fleet_economy(seed=0, faults=fm, clock_retries=1,
+                         ration_fallback=True)
+ck = MarketCheckpointer(sys.argv[1])
+for e in range(5):
+    eco.run_epoch()
+    ck.save(eco)
+    if e == 2:
+        print("CRASHING", flush=True)
+        os._exit(1)  # hard kill: no atexit, no cleanup, mid-horizon
+"""
+
+
+def test_subprocess_kill_and_resume_matches_uninterrupted(tmp_path):
+    """The real thing: a subprocess hard-kills itself (os._exit) after
+    epoch 2's checkpoint; the parent restores and finishes the horizon,
+    matching an uninterrupted run bit for bit."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _CRASH_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(), timeout=300,
+    )
+    assert out.returncode == 1 and "CRASHING" in out.stdout, (
+        out.stdout + out.stderr
+    )
+
+    ref = _mk()
+    ref_stats = [ref.run_epoch() for _ in range(5)]
+
+    eco = _mk()
+    assert MarketCheckpointer(str(tmp_path)).restore_latest(eco) == 3
+    for s_ref in ref_stats[3:]:
+        _stats_equal(s_ref, eco.run_epoch())
+    np.testing.assert_array_equal(ref.usage, eco.usage)
+    np.testing.assert_array_equal(ref.pop.placed, eco.pop.placed)
+    assert ref.rng.bit_generator.state == eco.rng.bit_generator.state

@@ -56,8 +56,7 @@ def test_epochstats_match_golden(seed, warm):
             s.reserve.astype(np.float64), np.asarray(rec["reserve"]),
             err_msg=f"{ctx} reserve",
         )
-        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus",
-                  "value_of_trade"):
+        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus", "value_of_trade"):
             _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
         for k in ("epoch", "migrations", "rounds"):
             _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
@@ -84,13 +83,64 @@ def test_migration_relief_matches_golden():
                 np.asarray(getattr(s, k), np.float64), np.asarray(rec[k]),
                 err_msg=f"{ctx} {k}",
             )
-        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus",
-                  "value_of_trade"):
+        for k in ("gamma_median", "gamma_mean", "pct_settled", "surplus", "value_of_trade"):
             _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
         for k in ("epoch", "migrations", "rounds"):
             _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
         for k in ("converged", "system_ok"):
             _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))
+
+
+@pytest.mark.parametrize(
+    "name", ["region_loss", "region_recovery", "unreliable_supply"]
+)
+def test_fault_scenario_matches_golden(name):
+    """The fault-injection trajectories are pinned exactly — prices, psi,
+    AND the degraded-mode telemetry (evictions, clawback, compensation,
+    seller/pool failures, escalations) plus the final reliability EMAs.
+    A change here means the failure-recovery machinery moved."""
+    from repro.core.scenarios import SCENARIOS, run_scenario
+
+    with open(os.path.join(GOLDEN_DIR, f"scenario_{name}.json")) as f:
+        golden = json.load(f)
+    eco, sc = SCENARIOS[name]()
+    assert sc.epochs == golden["epochs"]
+    res = run_scenario(eco, sc)
+    assert len(res.stats) == len(golden["stats"])
+    for s, rec in zip(res.stats, golden["stats"]):
+        ctx = (name, rec["epoch"])
+        for k in ("psi", "prices", "reserve"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s, k), np.float64), np.asarray(rec[k]),
+                err_msg=f"{ctx} {k}",
+            )
+        for k in (
+            "gamma_median",
+            "pct_settled",
+            "surplus",
+            "value_of_trade",
+            "clawback_units",
+            "compensation",
+        ):
+            _check_scalar(float(getattr(s, k)), rec[k], (*ctx, k))
+        for k in (
+            "epoch",
+            "migrations",
+            "rounds",
+            "clock_escalations",
+            "rationed_rows",
+            "dropped_bids",
+            "seller_failures",
+            "failed_pools",
+            "evictions",
+        ):
+            _check_scalar(int(getattr(s, k)), rec[k], (*ctx, k))
+        for k in ("converged", "system_ok", "degraded"):
+            _check_scalar(bool(getattr(s, k)), rec[k], (*ctx, k))
+    np.testing.assert_array_equal(
+        eco.pool_reliability, np.asarray(golden["pool_reliability"]),
+        err_msg=f"{name} pool_reliability",
+    )
 
 
 def test_warm_golden_differs_after_epoch0():

@@ -27,8 +27,7 @@ SEEDS = (0, 3, 7)
 EPOCHS = 4
 
 PADDED_FIELDS = ("idx", "val", "bundle_mask", "pi", "base_cost", "supply_scale")
-CSR_FIELDS = ("idx", "val", "rows", "offsets", "bundle_mask", "pi", "base_cost",
-              "supply_scale")
+CSR_FIELDS = ("idx", "val", "rows", "offsets", "bundle_mask", "pi", "base_cost", "supply_scale")
 BOOK_FIELDS = ("pi_mat", "row_kind", "row_agent", "sell_cluster", "bundle_cluster")
 
 
@@ -106,9 +105,21 @@ def test_agent_roundtrip():
     eco = make_fleet_economy(seed=1)
     agents = eco.pop.to_agents()
     back = AgentPopulation.from_agents(agents)
-    for f in ("req", "value", "home", "relocation_cost", "mobility", "margin0",
-              "margin_decay", "arbitrage", "budget", "placed", "epoch",
-              "fill_rate", "policy"):
+    for f in (
+        "req",
+        "value",
+        "home",
+        "relocation_cost",
+        "mobility",
+        "margin0",
+        "margin_decay",
+        "arbitrage",
+        "budget",
+        "placed",
+        "epoch",
+        "fill_rate",
+        "policy",
+    ):
         np.testing.assert_array_equal(getattr(eco.pop, f), getattr(back, f), err_msg=f)
     assert [a.name for a in agents] == back.names
 

@@ -54,8 +54,7 @@ def test_compat_shard_map_rejects_conflicting_flags():
     from repro.sharding import shard_map
 
     with pytest.raises(ValueError):
-        shard_map(lambda a: a, in_specs=P(), out_specs=P(),
-                  check_vma=True, check_rep=False)
+        shard_map(lambda a: a, in_specs=P(), out_specs=P(), check_vma=True, check_rep=False)
 
 
 def test_compat_shard_map_rejects_unknown_kwargs():
@@ -64,8 +63,7 @@ def test_compat_shard_map_rejects_unknown_kwargs():
     from repro.sharding import shard_map
 
     with pytest.raises(TypeError):
-        shard_map(lambda a: a, in_specs=P(), out_specs=P(),
-                  definitely_not_a_real_kwarg=1)
+        shard_map(lambda a: a, in_specs=P(), out_specs=P(), definitely_not_a_real_kwarg=1)
 
 
 # ---------------------------------------------------------------------------
@@ -114,8 +112,17 @@ def test_sharded_one_device_matches_unsharded():
     ref = clock_auction(sp, p0, cfg, demand_fn=sparse_proxy_demand_blocked)
     res = sharded_clock_auction(sp, p0, cfg, mesh=users_mesh(1))
     assert int(ref.rounds) > 10  # the market actually ticked
-    for f in ("prices", "alloc_idx", "alloc_val", "chosen_bundle", "won",
-              "payments", "excess_demand", "rounds", "converged"):
+    for f in (
+        "prices",
+        "alloc_idx",
+        "alloc_val",
+        "chosen_bundle",
+        "won",
+        "payments",
+        "excess_demand",
+        "rounds",
+        "converged",
+    ):
         np.testing.assert_array_equal(
             np.asarray(getattr(ref, f)), np.asarray(getattr(res, f)), err_msg=f
         )

@@ -22,6 +22,13 @@ One scenario fixture is pinned on top of the per-seed sets:
   trajectory (price chasers drain the hot pool, sticky agents stay).  It
   additionally records per-epoch utilization (``psi``) because the drain
   itself — not just prices — is the pinned claim.
+
+Three fault-scenario fixtures pin the degraded-mode machinery
+(``scenario_region_loss.json`` / ``scenario_region_recovery.json`` /
+``scenario_unreliable_supply.json``): on top of prices/psi they record the
+full degraded-mode telemetry — evictions, clawback units, compensation,
+seller/pool failures, dropped bids, clock escalations — because the
+*recovery behavior*, not just the prices, is the pinned claim.
 """
 import json
 import os
@@ -90,6 +97,49 @@ def snapshot_migration_relief() -> dict:
     return {"scenario": sc.name, "epochs": sc.epochs, "stats": stats}
 
 
+FAULT_SCENARIOS = ("region_loss", "region_recovery", "unreliable_supply")
+
+
+def snapshot_fault_scenario(name: str) -> dict:
+    from repro.core.scenarios import SCENARIOS, run_scenario
+
+    eco, sc = SCENARIOS[name]()
+    res = run_scenario(eco, sc)
+    stats = []
+    for s in res.stats:
+        stats.append(
+            {
+                "epoch": s.epoch,
+                "psi": [float(p) for p in s.psi],
+                "prices": [float(p) for p in s.prices],
+                "reserve": [float(p) for p in s.reserve],
+                "gamma_median": float(s.gamma_median),
+                "pct_settled": float(s.pct_settled),
+                "migrations": int(s.migrations),
+                "surplus": float(s.surplus),
+                "value_of_trade": float(s.value_of_trade),
+                "rounds": int(s.rounds),
+                "converged": bool(s.converged),
+                "system_ok": bool(s.system_ok),
+                "degraded": bool(s.degraded),
+                "clock_escalations": int(s.clock_escalations),
+                "rationed_rows": int(s.rationed_rows),
+                "dropped_bids": int(s.dropped_bids),
+                "seller_failures": int(s.seller_failures),
+                "failed_pools": int(s.failed_pools),
+                "evictions": int(s.evictions),
+                "clawback_units": float(s.clawback_units),
+                "compensation": float(s.compensation),
+            }
+        )
+    return {
+        "scenario": sc.name,
+        "epochs": sc.epochs,
+        "stats": stats,
+        "pool_reliability": [float(r) for r in eco.pool_reliability],
+    }
+
+
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     for seed in SEEDS:
@@ -103,6 +153,11 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(snapshot_migration_relief(), f, indent=1, allow_nan=True)
     print(f"wrote {path}")
+    for name in FAULT_SCENARIOS:
+        path = os.path.join(GOLDEN_DIR, f"scenario_{name}.json")
+        with open(path, "w") as f:
+            json.dump(snapshot_fault_scenario(name), f, indent=1, allow_nan=True)
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":
