@@ -455,6 +455,121 @@ def economy_epoch_faulty():
     return walls[True] / epochs * 1e6, round(ratio, 2)
 
 
+def economy_epoch_fused():
+    """One fused epoch program (ISSUE 7 tentpole): the whole epoch — pack,
+    clock, settle, verify, surplus, apply — as a single donated-buffer
+    jitted program over device-resident market state (Economy(fused=True)),
+    vs the staged path (host pack → jitted settle → host apply) on the
+    identical fleet, plus the pipelined horizon (pipeline=True: epoch t+1's
+    device program overlaps epoch t's host stats assembly).  Per-phase
+    breakdown: staged reports its pack phase (the host bid-book assembly
+    fusion moves on device); fused reports prepare (host faults/reserve/
+    RNG) / dispatch (device program wall) / finalize (adopt + stats).
+    Prices must match the staged path every epoch (asserted): bitwise
+    inside the U_cap ≤ 128 parity gate, float-close beyond it; the full
+    EpochStats bit-parity suite is tests/test_fused_epoch.py.
+    Override the fleet size with ECONOMY_EPOCH_FUSED_AGENTS.
+    us_per_call: fused epoch wall.  derived: staged/fused epoch speedup
+    (the measured pipelining overlap is printed alongside)."""
+    import time as _time
+
+    import jax
+
+    from repro.core import fleet_economy
+    from repro.core.auction import ClockConfig
+
+    n = int(os.environ.get("ECONOMY_EPOCH_FUSED_AGENTS", 100_000))
+    epochs = 4
+    cfg = ClockConfig(
+        max_rounds=2000, alpha=0.6, delta=0.25, alpha_growth=1.6, delta_decay=0.6
+    )
+
+    def walls(eco):
+        """Epoch walls 1..epochs on a warm program (epoch 0 burns the jit)."""
+        eco.run_epoch()
+        out = []
+        for _ in range(epochs):
+            t0 = _time.perf_counter()
+            s = eco.run_epoch()
+            out.append((_time.perf_counter() - t0, s))
+            assert bool(s.converged)
+        return out
+
+    eco_s = fleet_economy(n, seed=0, clock=cfg)
+    staged = walls(eco_s)
+    # staged pack phase on the live state (RNG restored so the stream and
+    # the book the next epoch would draw are untouched)
+    st = eco_s.rng.bit_generator.state
+    t0 = _time.perf_counter()
+    eco_s.pack_bid_book()
+    t_pack = _time.perf_counter() - t0
+    eco_s.rng.bit_generator.state = st
+
+    eco_f = fleet_economy(n, seed=0, clock=cfg, fused=True)
+    fused = walls(eco_f)
+    # inside the documented bit-parity gate (U_cap = R + 2N ≤ 128) prices
+    # must match the staged path bitwise; beyond it XLA's shape-dependent
+    # reduce order makes the clock trajectory float-close only (the exact
+    # contract lives in repro.core.fused's docstring and the parity suite)
+    exact = eco_f.R + 2 * len(eco_f.pop) <= 128
+    for (_, s_s), (_, s_f) in zip(staged, fused):
+        p_s, p_f = np.asarray(s_s.prices), np.asarray(s_f.prices)
+        if exact:
+            assert (p_s == p_f).all(), "fused and staged epochs diverged"
+        else:
+            np.testing.assert_allclose(p_f, p_s, rtol=1e-3, atol=1e-6,
+                                       err_msg="fused and staged diverged")
+    # per-phase breakdown: one more binding epoch, phases timed by hand
+    # (the same prepare → dispatch → adopt+finalize run_epoch performs)
+    t0 = _time.perf_counter()
+    prep = eco_f._fused_prepare(False)
+    t_prep = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    out = eco_f._fused_dispatch(prep, False)
+    jax.block_until_ready(out)
+    t_disp = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    eco_f._fused_adopt(prep, out)
+    eco_f._fused_finalize(prep, out, False)
+    t_fin = _time.perf_counter() - t0
+
+    wall_s = min(w for w, _ in staged)
+    wall_f = min(w for w, _ in fused)
+    print(
+        f"#   {n} agents, staged: epoch {wall_s*1e3:.0f} ms best "
+        f"(pack phase {t_pack*1e3:.0f} ms), rounds "
+        f"{[int(s.rounds) for _, s in staged]}",
+        file=sys.stderr,
+    )
+    print(
+        f"#   {n} agents, fused:  epoch {wall_f*1e3:.0f} ms best "
+        f"(prepare {t_prep*1e3:.0f} ms, dispatch {t_disp*1e3:.0f} ms, "
+        f"finalize {t_fin*1e3:.0f} ms)",
+        file=sys.stderr,
+    )
+
+    # pipelined horizon vs the same fused epochs run back-to-back: the
+    # saving is the host finalize work hidden behind the next dispatch
+    eco_q = fleet_economy(n, seed=0, clock=cfg, fused=True)
+    eco_q.run_horizon(1)  # burn the jit
+    t0 = _time.perf_counter()
+    eco_q.run_horizon(epochs)
+    wall_seq = _time.perf_counter() - t0
+    eco_p = fleet_economy(n, seed=0, clock=cfg, fused=True, pipeline=True)
+    eco_p.run_horizon(1)
+    t0 = _time.perf_counter()
+    eco_p.run_horizon(epochs)
+    wall_pipe = _time.perf_counter() - t0
+    overlap = wall_seq - wall_pipe
+    print(
+        f"#   pipelined horizon ({epochs} epochs): {wall_pipe*1e3:.0f} ms vs "
+        f"{wall_seq*1e3:.0f} ms sequential — overlap {overlap*1e3:.0f} ms "
+        f"({overlap / wall_seq * 100:.0f}% of the sequential wall)",
+        file=sys.stderr,
+    )
+    return wall_f * 1e6, round(wall_s / wall_f, 2)
+
+
 def bid_eval_round():
     """Settlement hot loop: one proxy-evaluation round at 100k bids × 1k
     pools (jnp path on CPU; the Pallas kernel is the TPU-fused twin).
@@ -625,6 +740,7 @@ BENCHES = {
     "economy_epoch_policy": economy_epoch_policy,
     "economy_epoch_warm": economy_epoch_warm,
     "economy_epoch_faulty": economy_epoch_faulty,
+    "economy_epoch_fused": economy_epoch_fused,
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
     "bid_eval_csr": bid_eval_csr,

@@ -92,5 +92,68 @@ def flatten(
     return rec(node)
 
 
+def flatten_sparse(
+    node: BidNode, pool_index: dict[str, int], max_bundles: int = 64
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Lower a bid tree to XOR-of-bundles as sparse ``(idx, val)`` pairs.
+
+    Emits exactly the bundles :func:`flatten` would, but as ascending-index
+    ``(int32 idx, float32 val)`` pairs with no dense ``(R,)`` rows — the
+    shape :func:`repro.core.pack_bids_csr` consumes directly, so a tree
+    touching 3 of 10⁶ pools costs O(3) per bundle instead of O(R).
+    Per-pool quantities accumulate in child order with float32 arithmetic
+    (the same fold as the dense path's vector sums), and pools whose merged
+    quantity is exactly zero are dropped — mirroring the dense path, where
+    ``flatnonzero`` skips them at pack time.
+    """
+    num_res = len(pool_index)
+
+    def rec(n: BidNode) -> list[dict[int, np.float32]]:
+        if isinstance(n, Res):
+            if n.pool not in pool_index:
+                raise KeyError(f"unknown resource pool {n.pool!r}")
+            return [{pool_index[n.pool]: np.float32(n.qty)}]
+        if isinstance(n, All):
+            alts = [rec(c) for c in n.children]
+            count = 1
+            for a in alts:
+                count *= len(a)
+                if count > max_bundles:
+                    raise BundleExplosion(
+                        f"AND-of-XOR expansion exceeds max_bundles={max_bundles}"
+                    )
+            out: list[dict[int, np.float32]] = []
+            for combo in itertools.product(*alts):
+                merged: dict[int, np.float32] = {}
+                for d in combo:
+                    for p, v in d.items():
+                        merged[p] = np.float32(merged.get(p, np.float32(0.0)) + v)
+                out.append(merged)
+            return out
+        if isinstance(n, OneOf):
+            out = []
+            for c in n.children:
+                out.extend(rec(c))
+                if len(out) > max_bundles:
+                    raise BundleExplosion(
+                        f"XOR expansion exceeds max_bundles={max_bundles}"
+                    )
+            return out
+        raise TypeError(f"not a BidNode: {n!r}")
+
+    pairs: list[tuple[np.ndarray, np.ndarray]] = []
+    for merged in rec(node):
+        pools = sorted(p for p, v in merged.items() if v != 0)
+        if pools and (pools[0] < 0 or pools[-1] >= num_res):
+            raise KeyError(f"pool index out of range [0, {num_res})")
+        pairs.append(
+            (
+                np.asarray(pools, np.int32),
+                np.asarray([merged[p] for p in pools], np.float32),
+            )
+        )
+    return pairs
+
+
 def pool_index(pool_names: Sequence[str]) -> dict[str, int]:
     return {name: i for i, name in enumerate(pool_names)}

@@ -50,6 +50,7 @@ from .auction import (
     verify_system,
 )
 from .faults import FaultDraw, FaultModel
+from .fused import DeviceMarketState, build_fused_epoch
 from .policies import BidderPolicy, Observation
 from .reserve import (
     DEFAULT_WEIGHTING,
@@ -253,6 +254,25 @@ class AgentPopulation:
 believed_bundle_costs = bundle_cluster_costs
 
 
+def _claw_to_capacity_loop(
+    placed: np.ndarray,
+    req: np.ndarray,
+    usage: np.ndarray,
+    cap_eff: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-agent reference for :func:`_claw_to_capacity` (parity oracle)."""
+    usage = usage.copy()
+    evict = np.zeros(placed.shape[0], bool)
+    for c in np.flatnonzero((usage > cap_eff + 1e-9).any(axis=1)):
+        for a in np.flatnonzero(placed == c)[::-1]:
+            if not np.any(usage[c] > cap_eff[c] + 1e-9):
+                break
+            usage[c] = np.maximum(usage[c] - req[a], 0.0)
+            evict[a] = True
+        usage[c] = np.minimum(usage[c], cap_eff[c])
+    return evict, usage
+
+
 def _claw_to_capacity(
     placed: np.ndarray,
     req: np.ndarray,
@@ -266,16 +286,29 @@ def _claw_to_capacity(
     cluster; residual usage not backed by any agent (pre-loaded congestion)
     is clamped away, matching ``CapacityShock``'s "jobs on failed machines
     lose them" semantics.
+
+    The per-agent eviction loop is replaced by one ``subtract.accumulate``
+    chain per over-capacity cluster: the clamped sequence
+    ``u_k = max(u_{k-1} - r_k, 0)`` equals ``max(d_k, 0)`` where ``d_k`` is
+    the unclamped left-to-right subtraction chain (once ``d`` goes
+    non-positive it stays there, and the clamp pins ``u`` at 0), so the
+    eviction count is the first prefix that fits — bit-identical to the
+    sequential reference, which survives as
+    :func:`_claw_to_capacity_loop` for the parity suite.
     """
     usage = usage.copy()
     evict = np.zeros(placed.shape[0], bool)
     for c in np.flatnonzero((usage > cap_eff + 1e-9).any(axis=1)):
-        for a in np.flatnonzero(placed == c)[::-1]:
-            if not np.any(usage[c] > cap_eff[c] + 1e-9):
-                break
-            usage[c] = np.maximum(usage[c] - req[a], 0.0)
-            evict[a] = True
-        usage[c] = np.minimum(usage[c], cap_eff[c])
+        holders = np.flatnonzero(placed == c)[::-1]  # LIFO order
+        # d[k] = usage[c] minus the first k holders' bundles, subtracted in
+        # exactly the reference's left-to-right order (ufunc accumulate is
+        # sequential, so every partial difference matches bit for bit)
+        chain = np.concatenate([usage[c][None, :], req[holders]], axis=0)
+        d = np.subtract.accumulate(chain, axis=0)  # (len(holders)+1, T)
+        fits = ~(np.maximum(d, 0.0) > cap_eff[c] + 1e-9).any(axis=1)
+        k = int(np.argmax(fits)) if fits.any() else holders.size
+        evict[holders[:k]] = True
+        usage[c] = np.minimum(np.maximum(d[k], 0.0), cap_eff[c])
     return evict, usage
 
 
@@ -364,6 +397,9 @@ class Economy:
         clock_retries: int = 0,
         ration_fallback: bool = False,
         reliability_discount: float = 1.0,
+        fused: bool = False,
+        pipeline: bool = False,
+        fused_backend: str | None = None,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -458,6 +494,44 @@ class Economy:
         # against — scenario invariant checks compare usage to this, not to
         # nominal capacity, under region faults
         self._last_cap_eff: np.ndarray | None = None
+        # Fused epochs: run pack → clock → settle → verify → apply as ONE
+        # jitted program over device-resident market state with donated
+        # buffers (see repro.core.fused).  The staged path above survives
+        # untouched as the parity oracle.  pipeline=True additionally
+        # overlaps epoch t's host stats assembly with epoch t+1's device
+        # run inside run_horizon.
+        if pipeline and not fused:
+            raise ValueError("pipeline=True requires fused=True")
+        if pipeline and (self.policies is not None or self.faults is not None):
+            raise ValueError(
+                "pipeline=True requires policies=None and faults=None: both "
+                "mutate host state the next epoch's inputs depend on, which "
+                "would serialize the pipeline anyway"
+            )
+        if fused and settle_mesh is not None:
+            raise ValueError(
+                "fused=True runs unsharded (parity with the staged path "
+                "holds at any device count); drop settle_mesh"
+            )
+        if fused and packer != "vectorized":
+            raise ValueError(
+                "fused=True requires packer='vectorized' (the loop packer "
+                "is a host-side oracle; it has no in-trace twin)"
+            )
+        if fused and clock.break_ties:
+            raise ValueError(
+                "fused=True does not support clock.break_ties (the tie "
+                "jitter is indexed by global row position, which the fused "
+                "slot layout does not preserve)"
+            )
+        self.fused = bool(fused)
+        self.pipeline = bool(pipeline)
+        self.fused_backend = fused_backend
+        self._fused_fn = None
+        self._fused_n: int | None = None
+        self._device_state: DeviceMarketState | None = None
+        self._device_const: tuple | None = None
+        self._state_dirty = True
 
     # -- population bookkeeping ----------------------------------------------
     @property
@@ -477,6 +551,7 @@ class Economy:
             self._reach_keys = np.vstack(
                 [self._reach_keys, np.full((len(newcomers), self.C), np.nan)]
             )
+        self._state_dirty = True
         return int(len(newcomers))
 
     def remove_agents(self, mask: np.ndarray) -> int:
@@ -490,6 +565,7 @@ class Economy:
         self.pop = self.pop.select(~mask)
         if self._reach_keys is not None:
             self._reach_keys = self._reach_keys[~mask]
+        self._state_dirty = True
         return int(held.sum())
 
     # -- pool bookkeeping ----------------------------------------------------
@@ -1164,13 +1240,14 @@ class Economy:
         following binding ``run_epoch`` draws the identical bid book and
         settles to bit-identical prices.
         """
+        settle = self._settle_epoch_fused if self.fused else self._settle_epoch
         if dry_run:
             rng_state = self.rng.bit_generator.state
             try:
-                return self._settle_epoch(dry_run=True)
+                return settle(dry_run=True)
             finally:
                 self.rng.bit_generator.state = rng_state
-        return self._settle_epoch(dry_run=False)
+        return settle(dry_run=False)
 
     def _warm_seed(self, tilde_p: np.ndarray) -> np.ndarray:
         """Next clock's starting prices under warm starts.
@@ -1372,6 +1449,364 @@ class Economy:
             clawback_units=pre_claw + post["clawback_units"],
             compensation=pre_comp + post["compensation"],
         )
+
+    # -- fused epoch path (repro.core.fused) ---------------------------------
+    def invalidate_device_state(self) -> None:
+        """Force the fused path to re-upload host mirrors next epoch.
+
+        The fused path keeps market state device-resident; mutation sites it
+        knows about (arrivals/departures, fault clawbacks) re-sync
+        automatically.  Call this after mutating ``pop`` / ``usage`` /
+        ``belief`` directly from outside the Economy API."""
+        self._state_dirty = True
+
+    def _fused_program(self):
+        n = len(self.pop)
+        if self._fused_fn is None or self._fused_n != n:
+            self._fused_fn = build_fused_epoch(
+                num_agents=n, num_clusters=self.C, num_rtypes=self.T,
+                clock=self.clock, clock_retries=self.clock_retries,
+                ration_fallback=self.ration_fallback,
+                settle_blocks=self.settle_blocks,
+                backend=self.fused_backend,
+            )
+            self._fused_n = n
+            self._state_dirty = True
+            self._device_const = None
+        return self._fused_fn
+
+    def _fused_const(self) -> tuple:
+        if self._device_const is None or self._state_dirty:
+            pop = self.pop
+            with jax.experimental.enable_x64(True):
+                self._device_const = tuple(
+                    jnp.asarray(a)
+                    for a in (
+                        pop.req, pop.value, pop.relocation_cost,
+                        pop.mobility, pop.budget,
+                    )
+                )
+        return self._device_const
+
+    def _fused_state(self) -> DeviceMarketState:
+        if self._device_state is None or self._state_dirty:
+            self._fused_const()  # refresh immutables alongside
+            self._device_state = DeviceMarketState.from_host(
+                self.pop, self.usage, self.belief
+            )
+            self._state_dirty = False
+        return self._device_state
+
+    def _fused_prepare(self, dry_run: bool) -> dict:
+        """Host half of a fused epoch: faults view + pre-claw commit, reserve
+        curve, warm seed, epoch randomness, policy overlays — everything the
+        device program consumes, with bit-neutral defaults for every overlay
+        so fault/no-fault and policy/no-policy epochs share one trace."""
+        pop = self.pop
+        n, C, T = len(pop), self.C, self.T
+        draw, cap_eff, usage_eff, placed_ov, pre_evict, pre_claw, pre_comp = (
+            self._epoch_view()
+        )
+        if not dry_run and pre_evict is not None:
+            self.pop.placed[pre_evict] = -1
+            self.usage = usage_eff
+            self._state_dirty = True
+        psi_flat = (
+            np.clip(usage_eff / np.maximum(cap_eff, 1e-9), 0.0, 1.0)
+            .reshape(-1)
+            .copy()
+        )
+        if draw is None:
+            tilde_p = reserve_prices(self.pools(), self.weighting)
+            free_basis = self.capacity
+        else:
+            tilde_p = reputation_weighted_reserve(
+                self._pools_from(cap_eff, usage_eff),
+                self.weighting,
+                reliability=self.pool_reliability,
+                discount=self.reliability_discount,
+            )
+            free_basis = cap_eff
+        base_cost_flat = np.tile(self.base_cost_rt, C).astype(np.float32)
+        warm = self.warm_start and bool(self.price_history)
+        start = (
+            self._warm_seed(np.asarray(tilde_p)) if warm else np.asarray(tilde_p)
+        ).astype(np.float32)
+
+        u_arb, perm_keys = self._draw_bid_randomness()
+        perm_keys, pi_scale, arb, margin = self._apply_policies(
+            perm_keys, dry_run
+        )
+        if pi_scale is None:
+            pi_scale = np.ones(n, np.float64)
+        if arb is None:
+            arb = pop.arbitrage
+        if margin is None:
+            margin = pop.margins()
+        dropout = (
+            np.zeros(n, bool)
+            if draw is None or draw.dropout is None
+            else np.asarray(draw.dropout, bool)
+        )
+        dropped = (
+            0 if draw is None or draw.dropout is None else int(draw.dropout.sum())
+        )
+
+        # host twin of the in-trace presence masks: the staged empty-book
+        # guard, plus the bid counts pct_settled needs
+        placed_eff = (
+            placed_ov
+            if (dry_run and placed_ov is not None)
+            else pop.placed
+        )
+        free_host = np.maximum(free_basis - usage_eff, 0.0).reshape(-1)
+        psi_home0 = psi_flat[np.clip(placed_eff, 0, C - 1) * T]
+        sells = (
+            (placed_eff >= 0) & (arb > 0) & (u_arb < arb) & (psi_home0 > 0.75)
+        ) & ~dropout
+        wants = ((placed_eff < 0) | sells) & ~dropout
+        n_op = int((free_host > 1e-9).sum())
+        if n_op + int(sells.sum()) + int(wants.sum()) == 0:
+            raise RuntimeError(
+                "empty bid book: no operator supply and no bidding agents"
+            )
+
+        return {
+            "draw": draw, "cap_eff": cap_eff, "usage_eff": usage_eff,
+            "free_basis": free_basis, "psi_flat": psi_flat,
+            "tilde_p": np.asarray(tilde_p), "base_cost_flat": base_cost_flat,
+            "start": start, "warm": warm, "dropped": dropped,
+            "pre_evict": pre_evict, "pre_claw": pre_claw, "pre_comp": pre_comp,
+            "epoch_index": len(self.price_history),
+            "u_arb": u_arb, "perm_keys": perm_keys, "pi_scale": pi_scale,
+            "arb": arb, "margin": margin, "dropout": dropout,
+            "sells": sells, "wants": wants, "placed_eff": placed_eff,
+            "home_pre": pop.home,
+            "util_pct": None if dry_run else self._util_percentiles(),
+        }
+
+    def _fused_dispatch(self, prep: dict, dry_run: bool) -> dict:
+        """Upload epoch inputs and launch the fused program (async)."""
+        fn = self._fused_program()
+        with jax.experimental.enable_x64(True):
+            if dry_run:
+                # ephemeral state copies: donation consumes them, the
+                # persistent device state and host mirrors are untouched
+                self._fused_const()
+                state = (
+                    jnp.asarray(prep["placed_eff"]),
+                    jnp.asarray(self.pop.home),
+                    jnp.asarray(self.pop.fill_rate),
+                    jnp.asarray(prep["usage_eff"]),
+                    jnp.asarray(self.belief),
+                )
+            else:
+                st = self._fused_state()
+                state = (st.placed, st.home, st.fill_rate, st.usage, st.belief)
+            inputs = tuple(
+                jnp.asarray(prep[k])
+                for k in (
+                    "u_arb", "perm_keys", "pi_scale", "arb", "margin",
+                    "dropout", "cap_eff", "free_basis", "tilde_p", "start",
+                    "base_cost_flat",
+                )
+            )
+            out = fn(self._device_const, state, inputs)
+        if not dry_run:
+            self._device_state = DeviceMarketState(
+                placed=out["placed_new"], home=out["home_new"],
+                fill_rate=out["fill_new"], usage=out["usage_new"],
+                belief=out["belief_new"],
+            )
+        return out
+
+    def _fused_adopt(self, prep: dict, out: dict) -> None:
+        """Sync host mirrors from the epoch's outputs (blocks on the device).
+
+        Only what the NEXT epoch's host half reads: mirrors, price history,
+        warm-seed staleness flags.  Stats assembly stays in
+        :meth:`_fused_finalize`, which in pipeline mode runs while the next
+        epoch is already computing on device."""
+        prices = np.array(out["prices"])
+        self.pop.placed = np.array(out["placed_new"])
+        self.pop.home = np.array(out["home_new"])
+        self.pop.fill_rate = np.array(out["fill_new"])
+        self.usage = np.array(out["usage_new"])
+        self.belief = np.array(out["belief_new"])
+        self._last_cap_eff = prep["cap_eff"]
+        self.pop.epoch += 1
+        self.price_history.append(prices)
+        self._last_reserve = np.asarray(prep["tilde_p"])
+        won_buy = np.asarray(out["won_buy"])
+        buy_agents = np.flatnonzero(won_buy)
+        bc = np.asarray(out["buy_cluster"])[buy_agents]
+        filled = np.zeros(self.R, bool)
+        if bc.size:
+            pools = bc[:, None] * self.T + np.arange(self.T)[None, :]
+            filled[pools[self.pop.req[buy_agents] > 0]] = True
+        self._last_filled = filled
+        prep["prices"] = prices
+        prep["buy_agents"] = buy_agents
+        prep["bc"] = bc
+
+    def _fused_finalize(self, prep: dict, out: dict, dry_run: bool) -> EpochStats:
+        """Assemble EpochStats from the epoch's outputs + prep snapshots.
+
+        Reads only ``prep`` and ``out`` (never live mirrors), so in pipeline
+        mode it can run after the next epoch has already been dispatched and
+        adopted.  Gammas rebuild the staged compaction order — agent rows
+        ascending, sell row before buy row — so the order-dependent
+        ``np.mean`` pairwise fold matches the staged path bit for bit."""
+        prices = prep.get("prices")
+        if prices is None:
+            prices = np.array(out["prices"])
+        converged = bool(out["converged"])
+        sys_ok = bool(out["system_ok"])
+        rounds = int(out["rounds"])
+        escalations = int(out["escalations"])
+        surplus = float(np.asarray(out["surplus"]))
+        trade = float(np.asarray(out["value_of_trade"]))
+        draw, pre_evict = prep["draw"], prep["pre_evict"]
+        if dry_run:
+            return EpochStats(
+                epoch=prep["epoch_index"], prices=prices,
+                reserve=prep["tilde_p"], psi=prep["psi_flat"],
+                price_ratio=prices / prep["base_cost_flat"],
+                gamma_median=float("nan"), gamma_mean=float("nan"),
+                pct_settled=float("nan"),
+                buy_util_percentiles=np.empty(0),
+                sell_util_percentiles=np.empty(0),
+                migrations=0, surplus=surplus, value_of_trade=trade,
+                rounds=rounds, converged=converged,
+                system_ok=sys_ok, warm_started=prep["warm"],
+                degraded=bool(
+                    not converged
+                    or escalations
+                    or pre_evict is not None
+                    or (draw is not None and draw.capacity_scale is not None)
+                ),
+                clock_escalations=escalations, dropped_bids=prep["dropped"],
+                evictions=0 if pre_evict is None else int(pre_evict.sum()),
+                clawback_units=prep["pre_claw"], compensation=prep["pre_comp"],
+            )
+
+        won_sell = np.asarray(out["won_sell"])
+        won_buy = np.asarray(out["won_buy"])
+        pay_s = np.asarray(out["pay_sell"]).astype(np.float64)
+        pay_b = np.asarray(out["pay_buy"]).astype(np.float64)
+        pi_s = np.asarray(out["pi_sell"]).astype(np.float64)
+        pi_b = np.asarray(out["pi_buy"]).astype(np.float64)
+        pi_a = np.stack([pi_s, pi_b], axis=1).reshape(-1)
+        pay_a = np.stack([pay_s, pay_b], axis=1).reshape(-1)
+        won_a = np.stack([won_sell, won_buy], axis=1).reshape(-1)
+        g = won_a & (np.abs(pay_a) > 1e-9)
+        gammas = np.abs(pi_a[g] - pay_a[g]) / np.abs(pay_a[g])
+
+        sell_agents = np.flatnonzero(won_sell)
+        sc = prep["placed_eff"][sell_agents]
+        buy_agents = prep["buy_agents"]
+        bc = prep["bc"]
+        home_pre = prep["home_pre"]
+        migrations = int(
+            ((home_pre[buy_agents] >= 0) & (home_pre[buy_agents] != bc)).sum()
+        )
+        n_agent_bids = int(prep["sells"].sum() + prep["wants"].sum())
+        n_agent_wins = int(won_sell.sum() + won_buy.sum())
+        rationed = int(out["rationed_rows"])
+        util_pct = prep["util_pct"]
+
+        post = {
+            "seller_failures": 0, "failed_pools": 0,
+            "evictions": 0, "clawback_units": 0.0, "compensation": 0.0,
+        }
+        if draw is not None:
+            buy_scale = np.asarray(out["buy_scale"])
+            post = self._post_settlement_faults(
+                draw, prep["cap_eff"],
+                {
+                    "sell_agents": sell_agents, "sell_clusters": sc,
+                    "buy_agents": buy_agents, "buy_clusters": bc,
+                    "buy_scale": buy_scale[buy_agents],
+                    "buy_payments": pay_b[buy_agents],
+                },
+            )
+            self._state_dirty = True  # post-fault clawback mutated mirrors
+
+        evictions = (
+            0 if pre_evict is None else int(pre_evict.sum())
+        ) + post["evictions"]
+        degraded = bool(
+            not converged
+            or escalations
+            or rationed
+            or evictions
+            or post["seller_failures"]
+            or post["failed_pools"]
+            or pre_evict is not None
+            or (draw is not None and draw.capacity_scale is not None)
+        )
+        return EpochStats(
+            epoch=prep["epoch_index"],
+            prices=prices,
+            reserve=prep["tilde_p"],
+            psi=prep["psi_flat"],
+            price_ratio=prices / prep["base_cost_flat"],
+            gamma_median=float(np.median(gammas)) if gammas.size else float("nan"),
+            gamma_mean=float(np.mean(gammas)) if gammas.size else float("nan"),
+            pct_settled=100.0 * n_agent_wins / max(n_agent_bids, 1),
+            buy_util_percentiles=util_pct[bc] if bc.size else np.empty(0),
+            sell_util_percentiles=util_pct[sc] if sc.size else np.empty(0),
+            migrations=migrations,
+            surplus=surplus,
+            value_of_trade=trade,
+            rounds=rounds,
+            converged=converged,
+            system_ok=sys_ok,
+            warm_started=prep["warm"],
+            degraded=degraded,
+            clock_escalations=escalations,
+            rationed_rows=rationed,
+            dropped_bids=prep["dropped"],
+            seller_failures=post["seller_failures"],
+            failed_pools=post["failed_pools"],
+            evictions=evictions,
+            clawback_units=prep["pre_claw"] + post["clawback_units"],
+            compensation=prep["pre_comp"] + post["compensation"],
+        )
+
+    def _settle_epoch_fused(self, dry_run: bool) -> EpochStats:
+        prep = self._fused_prepare(dry_run)
+        out = self._fused_dispatch(prep, dry_run)
+        if not dry_run:
+            self._fused_adopt(prep, out)
+        return self._fused_finalize(prep, out, dry_run)
+
+    def run_horizon(self, num_epochs: int) -> list[EpochStats]:
+        """Run ``num_epochs`` binding epochs; with ``pipeline=True``, keep
+        one epoch in flight.
+
+        The pipelined loop dispatches epoch t+1 and only then assembles
+        epoch t's EpochStats, so the host-side numpy work (gammas, util
+        percentiles, fault bookkeeping) overlaps the device's clock/settle
+        of the next epoch.  Stats are bit-identical to sequential
+        ``run_epoch`` calls — same program, same inputs, only the host
+        bookkeeping is reordered."""
+        if not self.pipeline:
+            return [self.run_epoch() for _ in range(num_epochs)]
+        stats: list[EpochStats] = []
+        pending: tuple[dict, dict] | None = None
+        for _ in range(num_epochs):
+            prep = self._fused_prepare(dry_run=False)
+            out = self._fused_dispatch(prep, dry_run=False)
+            if pending is not None:
+                # previous epoch's stats assembly overlaps this epoch's
+                # device run — the only fetches that block are in adopt()
+                stats.append(self._fused_finalize(*pending, dry_run=False))
+            self._fused_adopt(prep, out)
+            pending = (prep, out)
+        if pending is not None:
+            stats.append(self._fused_finalize(*pending, dry_run=False))
+        return stats
 
     def _commit_usage(
         self,

@@ -513,11 +513,70 @@ def pack_bids_csr(
     bit-identical to the padded pack of the same lists — the supply_scale
     normalizer folds the identical |q| stream (padding zeros add exact 0.0),
     and :func:`csr_padded_views` reconstructs the identical padded arrays.
+
+    Assembles the flat CSR streams directly: a book of U·B bundles costs
+    O(nnz) host memory, never the ``(U, B, K_max)`` padded intermediate —
+    one dense K_max bundle next to a million single-pool bundles no longer
+    inflates every row.  Each bundle is trimmed to its last live
+    ``(idx, val) != (0, 0)`` entry (the same trailing-zero rule
+    :func:`csr_from_padded` applies), while ``k_bound`` stays the densest
+    bundle's *untrimmed* length so the padded reconstruction round-trips.
     """
-    padded = pack_bids_sparse(
-        bundle_lists, pis, base_cost=base_cost, supply_scale=supply_scale
+    num_users = len(bundle_lists)
+    num_res = int(np.asarray(base_cost).shape[0])
+    parts_i: list[np.ndarray] = []
+    parts_v: list[np.ndarray] = []
+    entries: list[tuple[int, int, int]] = []  # (user, bundle, count)
+    max_b = 1
+    k_bound = 1
+    for u, bl in enumerate(bundle_lists):
+        max_b = max(max_b, len(bl))
+        for b, q in enumerate(bl):
+            if isinstance(q, tuple):
+                ii, vv = q
+                ii = np.asarray(ii, np.int32)
+                if ii.size and (ii.min() < 0 or ii.max() >= num_res):
+                    raise ValueError(
+                        f"bundle pool indices must be in [0, {num_res}), got "
+                        f"[{ii.min()}, {ii.max()}] — host and device scatter "
+                        "paths disagree on out-of-range indices"
+                    )
+                order = np.argsort(ii, kind="stable")
+                ii = ii[order]
+                vv = np.asarray(vv, np.float32)[order]
+            else:
+                q = np.asarray(q)
+                ii = np.flatnonzero(q).astype(np.int32)
+                vv = q[ii].astype(np.float32)
+            k_bound = max(k_bound, len(ii))
+            live = np.flatnonzero((ii != 0) | (vv != 0))
+            n = int(live[-1]) + 1 if live.size else 0
+            parts_i.append(ii[:n])
+            parts_v.append(vv[:n])
+            entries.append((u, b, n))
+    counts = np.zeros((num_users, max_b), np.int64)
+    mask = np.zeros((num_users, max_b), bool)
+    for u, b, n in entries:
+        counts[u, b] = n
+        mask[u, b] = True
+    offsets = np.zeros(num_users * max_b + 1, np.int32)
+    offsets[1:] = np.cumsum(counts.reshape(-1))
+    flat_idx = (
+        np.concatenate(parts_i) if parts_i else np.zeros(0, np.int32)
+    ).astype(np.int32)
+    flat_val = (
+        np.concatenate(parts_v) if parts_v else np.zeros(0, np.float32)
+    ).astype(np.float32)
+    return csr_problem_from_arrays(
+        flat_idx,
+        flat_val,
+        offsets,
+        mask,
+        np.asarray(pis, np.float32),
+        base_cost,
+        supply_scale=supply_scale,
+        k_bound=k_bound,
     )
-    return csr_from_padded(padded)
 
 
 def pack_bids(

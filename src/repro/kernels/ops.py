@@ -211,6 +211,34 @@ def settlement_demand_fn(backend: Backend | None = None, exact: bool = True):
     return sparse_bid_demand_fn(backend)
 
 
+def fused_epoch_z_fn(backend: Backend | None, num_resources: int):
+    """In-loop excess-demand evaluator for the fused epoch program.
+
+    The fused epoch (:mod:`repro.core.fused`) spends almost all of its
+    clock rounds evaluating z.  ``None`` / ``"jnp"`` returns None: the fused
+    program keeps its own blocked fold, the parity-exact mirror of
+    ``sparse_proxy_demand_blocked`` that EpochStats bit-parity rests on.
+    ``"pallas"`` / ``"interpret"`` return the kernel adapter's O(nnz)
+    scatter z for the price loop only — selection, settlement, and the
+    convergence check stay on the exact jnp path, so the settled point is
+    still verified and applied exactly, but the price *trajectory* is only
+    float-close to the staged oracle (the scatter's reduction order is not
+    the blocked fold's).  Use it where throughput beats bit-parity — the
+    planet-scale benchmark books — never under the parity suite.
+    """
+    backend = backend or "jnp"
+    if backend == "jnp":
+        return None
+
+    def z_fn(idx, val, mask, pi, prices):
+        z, _ = sparse_bid_eval(
+            idx, val, mask, pi, prices, num_resources, backend=backend
+        )
+        return z
+
+    return z_fn
+
+
 def wkv6(r, k, v, w, u, state=None, chunk: int = 32, backend: Backend | None = None):
     """Chunked RWKV-6 recurrence.  See kernels.ref.wkv6 for semantics."""
     backend = backend or default_backend()

@@ -1,7 +1,20 @@
 """TBBL-style bid tree flattening (paper §II)."""
+import numpy as np
 import pytest
 
-from repro.core import All, BundleExplosion, OneOf, Res, flatten, pool_index
+from repro.core import (
+    All,
+    BundleExplosion,
+    OneOf,
+    Res,
+    csr_from_padded,
+    flatten,
+    flatten_sparse,
+    pack_bids_csr,
+    pack_bids_sparse,
+    padded_from_csr,
+    pool_index,
+)
 
 
 IDX = pool_index(["c1/cpu", "c1/ram", "c2/cpu", "c2/ram"])
@@ -56,3 +69,123 @@ def test_explosion_guard():
 def test_unknown_pool():
     with pytest.raises(KeyError):
         flatten(Res("nope", 1), IDX)
+
+
+# ---------------------------------------------------------------------------
+# sparse flattening + direct variable-K CSR packing
+# ---------------------------------------------------------------------------
+
+TREES = [
+    Res("c1/cpu", 5),
+    All(Res("c1/cpu", 5), Res("c1/ram", 2)),
+    OneOf(
+        All(Res("c1/cpu", 5), Res("c1/ram", 2)),
+        All(Res("c2/cpu", 5), Res("c2/ram", 2)),
+        Res("c2/ram", 7),
+    ),
+    All(
+        OneOf(Res("c1/cpu", 1), Res("c2/cpu", 1)),
+        OneOf(Res("c1/ram", 4), Res("c2/ram", 4)),
+    ),
+    Res("c1/cpu", -3),  # sell side
+    All(Res("c1/cpu", 5), Res("c1/cpu", -5)),  # cancels to the empty bundle
+]
+
+
+def test_flatten_sparse_matches_dense():
+    """Sparse pairs densify to exactly the dense flattening, tree by tree."""
+    for tree in TREES:
+        dense = flatten(tree, IDX)
+        sparse = flatten_sparse(tree, IDX)
+        assert len(dense) == len(sparse)
+        for q, (ii, vv) in zip(dense, sparse):
+            assert ii.dtype == np.int32 and vv.dtype == np.float32
+            assert (np.diff(ii) > 0).all()  # strictly ascending, no dups
+            assert (vv != 0).all()  # exact zeros dropped
+            back = np.zeros_like(q)
+            back[ii] = vv
+            np.testing.assert_array_equal(back, q)
+
+
+def test_flatten_sparse_guards():
+    inner = OneOf(*[Res("c1/cpu", i + 1) for i in range(9)])
+    with pytest.raises(BundleExplosion):
+        flatten_sparse(All(inner, inner, inner), IDX, max_bundles=64)
+    with pytest.raises(KeyError):
+        flatten_sparse(Res("nope", 1), IDX)
+
+
+def _books(trees):
+    lists = [flatten_sparse(t, IDX) for t in trees]
+    pis = [[10.0] * max(len(bl) for bl in lists)] * len(lists)
+    base = np.full(len(IDX), 0.5, np.float32)
+    return lists, pis, base
+
+
+def test_pack_bids_csr_direct_matches_padded_path():
+    """Direct CSR assembly == the padded pack converted, field for field.
+
+    This pins the variable-K fast path (no (U, B, K_max) intermediate) to
+    the padded oracle: flat streams, offsets, k_bound, supply_scale, mask,
+    and the padded reconstruction all bit-identical.
+    """
+    lists, pis, base = _books(TREES)
+    direct = pack_bids_csr(lists, pis, base_cost=base)
+    oracle = csr_from_padded(pack_bids_sparse(lists, pis, base_cost=base))
+    assert direct.k_bound == oracle.k_bound
+    assert direct.num_resources == oracle.num_resources
+    for f in ("idx", "val", "rows", "offsets", "bundle_mask", "pi",
+              "base_cost", "supply_scale"):
+        va, vb = np.asarray(getattr(direct, f)), np.asarray(getattr(oracle, f))
+        assert va.dtype == vb.dtype, f
+        np.testing.assert_array_equal(va, vb, err_msg=f)
+    pa, pb = padded_from_csr(direct), padded_from_csr(oracle)
+    for f in ("idx", "val", "bundle_mask", "pi"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pa, f)), np.asarray(getattr(pb, f)), err_msg=f
+        )
+
+
+def test_pack_bids_csr_dense_and_sparse_inputs_agree():
+    """Dense (R,) rows and (idx, val) pairs of the same trees pack alike."""
+    for tree in TREES:
+        dense_book = pack_bids_csr(
+            [flatten(tree, IDX)],
+            [[1.0] * len(flatten(tree, IDX))],
+            base_cost=np.ones(len(IDX), np.float32),
+        )
+        sparse_book = pack_bids_csr(
+            [flatten_sparse(tree, IDX)],
+            [[1.0] * len(flatten(tree, IDX))],
+            base_cost=np.ones(len(IDX), np.float32),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense_book.idx), np.asarray(sparse_book.idx)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense_book.val), np.asarray(sparse_book.val)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(dense_book.offsets), np.asarray(sparse_book.offsets)
+        )
+
+
+def test_pack_bids_csr_no_padding_blowup():
+    """One dense bundle next to many singletons costs O(nnz), not U·B·K_max."""
+    r = 64
+    pidx = pool_index([f"p{i}" for i in range(r)])
+    wide = All(*[Res(f"p{i}", 1.0) for i in range(r)])  # one K=64 bundle
+    skinny = [Res(f"p{i % r}", 2.0) for i in range(40)]  # forty K=1 bundles
+    lists = [flatten_sparse(wide, pidx)] + [flatten_sparse(s, pidx) for s in skinny]
+    pis = [[1.0]] * len(lists)
+    book = pack_bids_csr(lists, pis, base_cost=np.ones(r, np.float32))
+    assert book.k_bound == r
+    assert int(np.asarray(book.idx).shape[0]) == r + 40  # flat nnz, no K_max rows
+    oracle = csr_from_padded(
+        pack_bids_sparse(lists, pis, base_cost=np.ones(r, np.float32))
+    )
+    np.testing.assert_array_equal(np.asarray(book.idx), np.asarray(oracle.idx))
+    np.testing.assert_array_equal(np.asarray(book.val), np.asarray(oracle.val))
+    np.testing.assert_array_equal(
+        np.asarray(book.supply_scale), np.asarray(oracle.supply_scale)
+    )

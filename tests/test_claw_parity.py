@@ -1,0 +1,62 @@
+"""Parity: vectorized capacity clawback vs the per-agent eviction loop.
+
+`_claw_to_capacity` evicts LIFO placements from over-capacity clusters
+until the residual usage fits.  The vectorized version computes each
+cluster's eviction prefix with `np.subtract.accumulate` (sequential, so
+partial sums match the loop's running subtraction bitwise); the retired
+loop survives as `_claw_to_capacity_loop`, the parity oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core.economy import _claw_to_capacity, _claw_to_capacity_loop
+
+
+def _random_scenario(rng, n, c, t):
+    placed = rng.integers(-1, c, size=n)
+    req = rng.uniform(0.0, 4.0, size=(n, t))
+    req[rng.random((n, t)) < 0.2] = 0.0
+    cap = rng.uniform(1.0, 12.0, size=(c, t))
+    # usage is what the placements put there, occasionally scaled past cap
+    usage = np.zeros((c, t))
+    for i in np.flatnonzero(placed >= 0):
+        usage[placed[i]] += req[i]
+    cap_eff = cap * rng.uniform(0.3, 1.1, size=(c, 1))
+    return placed, req, usage, cap_eff
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_claw_matches_loop(seed):
+    rng = np.random.default_rng(seed)
+    n, c, t = int(rng.integers(1, 60)), int(rng.integers(1, 7)), int(rng.integers(1, 4))
+    placed, req, usage, cap_eff = _random_scenario(rng, n, c, t)
+    ev_v, us_v = _claw_to_capacity(placed, req, usage, cap_eff)
+    ev_l, us_l = _claw_to_capacity_loop(placed, req, usage, cap_eff)
+    np.testing.assert_array_equal(ev_v, ev_l)
+    np.testing.assert_array_equal(us_v, us_l)  # bitwise, not approx
+    # postcondition: nothing left over capacity (beyond the loop's tolerance)
+    assert (us_v <= cap_eff + 1e-9).all()
+
+
+def test_claw_no_overcap_is_noop():
+    rng = np.random.default_rng(99)
+    placed, req, usage, cap_eff = _random_scenario(rng, 20, 4, 3)
+    cap_eff = np.maximum(cap_eff, usage + 1.0)  # plenty of room
+    ev, us = _claw_to_capacity(placed, req, usage, cap_eff)
+    assert not ev.any()
+    np.testing.assert_array_equal(us, usage)
+
+
+def test_claw_evicts_everyone_when_cluster_dies():
+    """cap_eff == 0 → every holder evicted, residual usage clamped to 0."""
+    placed = np.array([0, 0, 0, -1])
+    req = np.ones((4, 2))
+    usage = np.zeros((2, 2))
+    usage[0] = 3.0
+    cap_eff = np.zeros((2, 2))
+    ev_v, us_v = _claw_to_capacity(placed, req, usage, cap_eff)
+    ev_l, us_l = _claw_to_capacity_loop(placed, req, usage, cap_eff)
+    np.testing.assert_array_equal(ev_v, ev_l)
+    np.testing.assert_array_equal(us_v, us_l)
+    assert ev_v[:3].all() and not ev_v[3]
+    assert (us_v == 0).all()

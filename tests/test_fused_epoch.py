@@ -1,0 +1,203 @@
+"""Fused-epoch parity: one jitted program == the staged epoch, bit for bit.
+
+The fused path (``Economy(fused=True)``, repro.core.fused) runs pack →
+clock → settle → verify → surplus → apply as ONE donated-buffer program
+over device-resident market state.  These tests pin it to the staged
+vectorized path — itself pinned to the per-agent loop oracle — across every
+subsystem that can perturb an epoch: policies, warm starts with staleness
+decay, the full fault stack (region faults, dropout, seller flakes, pool
+failures, escalation, rationing), dry runs, and the pipelined horizon.
+EpochStats must match field-for-field (arrays bitwise) and end state must
+match array-for-array; the fleet book is inside the documented bit-parity
+regime (U_cap = R + 2N ≤ 128).
+
+Also here: the recompile guard — the fused program must compile exactly
+once across epochs that do and do not realize faults (every overlay is
+always passed, with bit-neutral defaults), because a per-epoch re-jit would
+cost more than the fusion saves.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.auction import ClockConfig
+from repro.core.economy import make_fleet_economy
+from repro.core.faults import FaultModel, RegionFault
+from repro.core.fused import (
+    PARITY_MAX_ROWS,
+    build_fused_epoch,
+    fused_program_cache_size,
+)
+from repro.core.policies import (
+    BudgetSmoothingPolicy,
+    PriceChasingPolicy,
+    StaticPolicy,
+)
+
+SEEDS = (0, 3, 7)
+EPOCHS = 4
+
+
+def _stats_equal(sa, sb):
+    da, db = dataclasses.asdict(sa), dataclasses.asdict(sb)
+    assert da.keys() == db.keys()
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, np.ndarray):
+            assert va.shape == vb.shape, k
+            assert np.array_equal(va, vb), k  # bitwise, not approx
+        elif isinstance(va, float) and np.isnan(va):
+            assert isinstance(vb, float) and np.isnan(vb), k
+        else:
+            assert va == vb, (k, va, vb)
+
+
+def _end_state_equal(a, b):
+    np.testing.assert_array_equal(a.usage, b.usage)
+    np.testing.assert_array_equal(a.belief, b.belief)
+    np.testing.assert_array_equal(a.pop.placed, b.pop.placed)
+    np.testing.assert_array_equal(a.pop.home, b.pop.home)
+    np.testing.assert_array_equal(a.pop.fill_rate, b.pop.fill_rate)
+    np.testing.assert_array_equal(a.pop.epoch, b.pop.epoch)
+
+
+def _fault_model():
+    return FaultModel(
+        seed=6,
+        region_faults=(RegionFault(cluster=1, start=1, end=3, scale=0.3),),
+        bid_dropout=0.1,
+        seller_fail=0.2,
+        pool_fail=0.1,
+    )
+
+
+def _pair(seed, **kw):
+    a = make_fleet_economy(seed=seed, **kw)
+    b = make_fleet_economy(seed=seed, fused=True, **kw)
+    # the fleet book is inside the bit-parity regime the module documents
+    assert a.R + 2 * len(a.pop) <= PARITY_MAX_ROWS
+    return a, b
+
+
+def _run_and_compare(a, b, epochs=EPOCHS, dry_at=None):
+    for e in range(epochs):
+        if e == dry_at:
+            _stats_equal(a.run_epoch(dry_run=True), b.run_epoch(dry_run=True))
+        _stats_equal(a.run_epoch(), b.run_epoch())
+    _end_state_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_matches_staged_plain(seed):
+    _run_and_compare(*_pair(seed))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_matches_staged_warm_decay(seed):
+    _run_and_compare(*_pair(seed, warm_start=True, warm_decay=0.5))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_matches_staged_policies(seed):
+    kw = dict(
+        policies=[StaticPolicy(), PriceChasingPolicy(), BudgetSmoothingPolicy()]
+    )
+    a, b = _pair(seed, **kw)
+    for eco in (a, b):
+        eco.pop.policy[:] = np.arange(len(eco.pop)) % 3
+    _run_and_compare(a, b)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_matches_staged_faults(seed):
+    """Region fault + dropout + seller flakes + pool failures, with the
+    escalation ladder and proportional rationing armed — the degraded-mode
+    EpochStats fields (escalations, rationing, evictions, compensation)
+    must match too."""
+    _run_and_compare(
+        *_pair(seed, faults=_fault_model(), clock_retries=2, ration_fallback=True)
+    )
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_dry_run_interleaves(seed):
+    """A dry run mid-horizon is side-effect free on the fused path too:
+    the ephemeral device state is donated away, mirrors and RNG restored."""
+    _run_and_compare(*_pair(seed), dry_at=1)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pipeline_horizon_matches_sequential(seed):
+    a, b = _pair(seed, warm_start=True)
+    b_pipe = make_fleet_economy(seed=seed, fused=True, pipeline=True, warm_start=True)
+    sas = [a.run_epoch() for _ in range(EPOCHS)]
+    sbs = b_pipe.run_horizon(EPOCHS)
+    assert len(sbs) == EPOCHS
+    for sa, sb in zip(sas, sbs):
+        _stats_equal(sa, sb)
+    _end_state_equal(a, b_pipe)
+
+
+def test_run_horizon_unpipelined_is_sequential():
+    a = make_fleet_economy(seed=0)
+    b = make_fleet_economy(seed=0)
+    sas = [a.run_epoch() for _ in range(2)]
+    sbs = b.run_horizon(2)
+    for sa, sb in zip(sas, sbs):
+        _stats_equal(sa, sb)
+
+
+def test_fused_compiles_exactly_once_across_fault_and_clean_epochs():
+    """Recompile guard: 8 epochs spanning no-fault, region-fault window,
+    dropout/flake epochs, escalated and rationed settlements — ONE compiled
+    variant.  Overlay arrays are always passed (bit-neutral defaults), so
+    the trace never specializes on which subsystems fired."""
+    eco = make_fleet_economy(
+        seed=3, fused=True, faults=_fault_model(),
+        clock_retries=2, ration_fallback=True,
+    )
+    for _ in range(8):
+        eco.run_epoch()
+    assert fused_program_cache_size(eco._fused_fn) == 1
+
+
+def test_fused_constructor_validation():
+    with pytest.raises(ValueError, match="pipeline=True requires fused"):
+        make_fleet_economy(seed=0, pipeline=True)
+    with pytest.raises(ValueError, match="packer='vectorized'"):
+        make_fleet_economy(seed=0, fused=True, packer="loop")
+    with pytest.raises(ValueError, match="policies=None and faults=None"):
+        make_fleet_economy(
+            seed=0, fused=True, pipeline=True, faults=_fault_model()
+        )
+    with pytest.raises(ValueError, match="break_ties"):
+        build_fused_epoch(
+            num_agents=4, num_clusters=2, num_rtypes=3,
+            clock=ClockConfig(break_ties=True),
+        )
+
+
+def test_fused_population_churn_rebuilds():
+    """Arrivals/departures change N: the fused program rebuilds and the
+    device state re-syncs from host mirrors — stats keep matching staged."""
+    a = make_fleet_economy(seed=5)
+    b = make_fleet_economy(seed=5, fused=True)
+    _stats_equal(a.run_epoch(), b.run_epoch())
+    keep = np.ones(len(a.pop), bool)
+    keep[::7] = False
+    a.remove_agents(~keep)
+    b.remove_agents(~keep)
+    _stats_equal(a.run_epoch(), b.run_epoch())
+    _end_state_equal(a, b)
+
+
+def test_fused_interpret_backend_settles_close():
+    """The kernel-routed in-loop z (interpret backend on CPU) is float-close
+    to the exact path and still verifies: selection/settle stay exact, only
+    the price trajectory may differ by reduction order."""
+    a = make_fleet_economy(seed=0)
+    b = make_fleet_economy(seed=0, fused=True, fused_backend="interpret")
+    sa, sb = a.run_epoch(), b.run_epoch()
+    np.testing.assert_allclose(sb.prices, sa.prices, rtol=1e-5, atol=1e-5)
+    assert sb.system_ok
