@@ -15,12 +15,15 @@ ratio, verdict, and the recent record history with git SHAs — is appended
 to the job summary, so the settlement perf trajectory is readable from the
 Actions UI without downloading the artifact.
 
-Caveat: records carry no machine metadata, so a comparison across hosts
-(dev container vs CI runner) or across workload overrides
-(ECONOMY_EPOCH_AGENTS) measures the environment as much as the code — the
-1.5× default leaves headroom for same-class hardware, and the guard is a
-tripwire, not a verdict: on a failure, rerun on the baseline record's host
-before treating it as a code regression.
+Records are stamped with ``workload`` (the ECONOMY_EPOCH_*/MARKET_SERVE_*
+env overrides in effect) and ``host`` (BENCH_HOST_TAG / "github-ci" /
+hostname) by ``run.py --json``; the guard only compares records whose
+(name, workload, host) identity matches the latest record's, and loudly
+skips a benchmark whose latest record has no like-for-like baseline —
+a dev-container number can never fail CI against a runner number, and an
+override run can never fail against a default run.  The 1.5× default still
+leaves headroom for same-host jitter; the guard is a tripwire, not a
+verdict.
 """
 from __future__ import annotations
 
@@ -33,12 +36,34 @@ from .run import JSON_PATH, _load_records
 HISTORY = 5  # records per benchmark shown in the trend table
 
 
+def _identity(rec: dict) -> tuple:
+    """What must match for two records to be comparable: same workload env
+    overrides and same host.  _load_records normalizes both keys, so legacy
+    unstamped records form their own ({}, "unknown") cohort."""
+    return (tuple(sorted((rec.get("workload") or {}).items())),
+            rec.get("host", "unknown"))
+
+
 def _trend_rows(names: list[str], records: list) -> list[dict]:
-    """One summary row per guarded benchmark (newest record last)."""
+    """One summary row per guarded benchmark (newest record last).
+
+    History and the prev/last comparison are restricted to records whose
+    (workload, host) identity matches the *latest* record of that name;
+    ``row["foreign"]`` counts the records excluded by that filter."""
     rows = []
     for name in names:
-        same = [r for r in records if r.get("name") == name]
-        row = {"name": name, "history": same[-HISTORY:]}
+        named = [r for r in records if r.get("name") == name]
+        if not named:
+            rows.append({"name": name, "history": [], "foreign": 0})
+            continue
+        ident = _identity(named[-1])
+        same = [r for r in named if _identity(r) == ident]
+        row = {
+            "name": name,
+            "history": same[-HISTORY:],
+            "foreign": len(named) - len(same),
+            "host": named[-1].get("host", "unknown"),
+        }
         if len(same) >= 2:
             prev, last = same[-2], same[-1]
             row["prev"], row["last"] = prev, last
@@ -70,8 +95,11 @@ def _markdown_table(rows: list[dict], threshold: float) -> str:
                 f"{verdict} | {hist} |"
             )
         else:
+            note = "no baseline"
+            if row.get("foreign"):
+                note += f" ({row['foreign']} foreign skipped)"
             lines.append(
-                f"| {row['name']} | — | — | — | no baseline | {hist} |"
+                f"| {row['name']} | — | — | — | {note} | {hist} |"
             )
     return "\n".join(lines) + "\n"
 
@@ -92,9 +120,17 @@ def check(names: list[str], threshold: float, path: str = JSON_PATH) -> int:
     for row in rows:
         name = row["name"]
         if "ratio" not in row:
+            why = (
+                f"no like-for-like baseline on host "
+                f"'{row.get('host', 'unknown')}' "
+                f"({row['foreign']} record(s) from other hosts/workloads "
+                "excluded)"
+                if row.get("foreign")
+                else "no prior baseline"
+            )
             print(
-                f"# {name}: {len(row['history'])} record(s) — no prior "
-                "baseline, skipped"
+                f"# SKIPPED {name}: {len(row['history'])} comparable "
+                f"record(s) — {why}"
             )
             continue
         prev, last, ratio = row["prev"], row["last"], row["ratio"]

@@ -703,6 +703,124 @@ def bid_eval_csr():
     return us_csr, round(us_pad / us_csr, 1)
 
 
+def market_serve():
+    """Always-on market service under heavy churn (ISSUE 8 tentpole): a
+    100k-agent book served by repro.serve.market.MarketService, with
+    1%/5%/20% of agents re-pricing their resting bid per tick.  Measures
+    sustained bid ingestion (bids/s through submit), p99 tick latency per
+    churn level, and the epoch-prep speedup of the incremental O(Δ) book
+    (drain + device row-scatter) over a from-scratch full repack + upload.
+    us_per_call: p99 tick latency at 1% churn.  derived: prep speedup at 1%
+    churn (asserted ≥ 5×)."""
+    import jax
+    from repro.core.markets import fleet_economy
+    from repro.core.types import MarketBook
+    from repro.serve.market import BidDelta, MarketService
+
+    n = int(os.environ.get("MARKET_SERVE_AGENTS", 100_000))
+    ticks = int(os.environ.get("MARKET_SERVE_TICKS", 6))
+    eco = fleet_economy(n, 6, seed=0)
+    t0 = time.perf_counter()
+    svc = MarketService.from_economy(eco)
+    load_s = time.perf_counter() - t0
+    print(
+        f"# market_serve: {svc.book.num_rows} rows bulk-loaded in "
+        f"{load_s:.2f}s ({svc.book.rows_cap} slots)",
+        file=sys.stderr,
+    )
+    keys, idx_rows, val_rows, mask_rows, pi_rows = eco.export_bid_rows()
+    live = np.flatnonzero(mask_rows.any(axis=1))
+    rng = np.random.default_rng(0)
+
+    def deltas(frac, tick):
+        d = max(1, int(frac * n))
+        pick = rng.choice(live, size=min(d, live.size), replace=False)
+        scale = rng.uniform(0.9, 1.1, size=pick.size).astype(np.float32)
+        out = []
+        for j, i in enumerate(pick):
+            bundles = [
+                (idx_rows[i, b], val_rows[i, b])
+                for b in np.flatnonzero(mask_rows[i])
+            ]
+            out.append(
+                BidDelta(keys[i], bundles, pi_rows[i][mask_rows[i]] * scale[j])
+            )
+        return out
+
+    def _sync(problem):
+        jax.block_until_ready(
+            (problem.idx, problem.val, problem.bundle_mask, problem.pi)
+        )
+
+    svc.tick()  # compile + settle the cold book once
+
+    # -- sustained ingestion: bids/s through the validating submit path ------
+    batch = deltas(0.05, 0)
+    t0 = time.perf_counter()
+    for dl in batch:
+        svc.submit(dl)
+    ingest_s = time.perf_counter() - t0
+    bids_per_s = len(batch) / ingest_s
+    svc.tick()
+
+    # -- epoch-prep: incremental drain + O(Δ) device scatter vs full repack --
+    incr = []
+    for t in range(3):
+        for dl in deltas(0.01, t):
+            svc.submit(dl)
+        t0 = time.perf_counter()
+        svc._drain()
+        _sync(svc.book.device_problem())
+        incr.append(time.perf_counter() - t0)
+    us_incr = min(incr) * 1e6
+
+    op_keys = [k for k in svc.book._key_slot if str(k).startswith("op-")]
+    op_rows = [svc.book._accounts[k] for k in op_keys]
+    full = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fresh = MarketBook(
+            svc.book.base_cost, svc.book.num_bundles, svc.book.k_bound,
+            svc.book.rows_cap,
+        )
+        for k, (bundles, pi) in zip(op_keys, op_rows):
+            fresh.upsert(k, bundles, pi)
+        fresh.upsert_rows(keys, idx_rows, val_rows, mask_rows, pi_rows)
+        _sync(fresh.problem())
+        full.append(time.perf_counter() - t0)
+    us_full = min(full) * 1e6
+    speedup = us_full / max(us_incr, 1e-9)
+
+    # -- p99 tick latency per churn level ------------------------------------
+    p99_by_churn = {}
+    for frac in (0.01, 0.05, 0.20):
+        walls = []
+        for t in range(ticks):
+            for dl in deltas(frac, t):
+                svc.submit(dl)
+            t0 = time.perf_counter()
+            s = svc.tick()
+            walls.append(time.perf_counter() - t0)
+        p99_by_churn[frac] = float(np.percentile(walls, 99)) * 1e6
+        print(
+            f"# market_serve: churn {frac:.0%} — p99 tick "
+            f"{p99_by_churn[frac] / 1e3:.0f} ms, last rounds {s.rounds}, "
+            f"converged {s.converged}",
+            file=sys.stderr,
+        )
+    svc.book.parity_check()  # the benchmark book must match its oracle
+    print(
+        f"# market_serve: ingest {bids_per_s:,.0f} bids/s; epoch-prep "
+        f"incremental {us_incr / 1e3:.1f} ms vs full repack "
+        f"{us_full / 1e3:.1f} ms = {speedup:.1f}x at 1% churn",
+        file=sys.stderr,
+    )
+    assert speedup >= 5.0, (
+        f"incremental epoch-prep speedup {speedup:.1f}x < 5x over full repack"
+    )
+    return p99_by_churn[0.01], round(speedup, 1)
+
+
 def roofline_summary():
     """§Roofline — aggregate the dry-run matrix artifacts.
     derived: count of single-pod cells whose compile succeeded."""
@@ -744,6 +862,7 @@ BENCHES = {
     "bid_eval_round": bid_eval_round,
     "bid_eval_sparse": bid_eval_sparse,
     "bid_eval_csr": bid_eval_csr,
+    "market_serve": market_serve,
     "roofline_summary": roofline_summary,
 }
 
@@ -767,10 +886,10 @@ def _load_records(path: str) -> list:
     """Existing trajectory records, or [] when absent/corrupt (never raise —
     a broken file must not block recording fresh numbers).
 
-    Every record is stamped: pre-PR-2 records predate the git_sha field, so
-    they are normalized to ``"unknown"`` on load — downstream consumers (the
-    CI regression guard, perf-trajectory plots) can rely on the key existing
-    unconditionally.
+    Every record is stamped: pre-PR-2 records predate the git_sha field and
+    pre-PR-9 records predate workload/host, so missing keys are normalized on
+    load — downstream consumers (the CI regression guard, perf-trajectory
+    plots) can rely on the keys existing unconditionally.
     """
     try:
         with open(path) as f:
@@ -780,9 +899,40 @@ def _load_records(path: str) -> list:
         for rec in prev:
             if isinstance(rec, dict):
                 rec.setdefault("git_sha", "unknown")
+                rec.setdefault("workload", {})
+                rec.setdefault("host", "unknown")
         return prev
     except (OSError, ValueError):
         return []
+
+
+# env knobs that reshape a benchmark's workload — any of these being set means
+# the numbers are not comparable to a run without them, so they go in the
+# record's identity stamp
+_WORKLOAD_ENV_PREFIXES = ("ECONOMY_EPOCH_", "MARKET_SERVE_")
+
+
+def _workload() -> dict:
+    return {
+        k: v
+        for k, v in sorted(os.environ.items())
+        if k.startswith(_WORKLOAD_ENV_PREFIXES)
+    }
+
+
+def _host_tag() -> str:
+    """Where this run happened, for like-with-like trend comparison.
+
+    BENCH_HOST_TAG overrides; GitHub-hosted CI runners are one stable pool
+    ("github-ci"); otherwise the machine's hostname."""
+    tag = os.environ.get("BENCH_HOST_TAG")
+    if tag:
+        return tag
+    if os.environ.get("GITHUB_ACTIONS") == "true":
+        return "github-ci"
+    import platform
+
+    return platform.node() or "unknown"
 
 
 def main() -> None:
@@ -804,7 +954,7 @@ def main() -> None:
         print(f"{key},{us:.1f},{derived}")
         records.append({
             "name": key, "us_per_call": round(us, 1), "derived": derived,
-            "git_sha": sha,
+            "git_sha": sha, "workload": _workload(), "host": _host_tag(),
         })
     if write_json:
         # append, never clobber: the file is the cross-PR perf trajectory

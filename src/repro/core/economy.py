@@ -347,6 +347,20 @@ class EpochStats:
     evictions: int = 0  # agents clawed back (pre-auction loss + post-settle)
     clawback_units: float = 0.0  # resource units reclaimed/lost to faults
     compensation: float = 0.0  # $ refunded to clawed-back agents
+    # -- streaming-churn telemetry (population churn since last epoch) -------
+    # Conservation accounting for add_agents/remove_agents: arrivals whose
+    # placement was rejected for lack of free capacity (they enter the market
+    # unplaced instead of having their claimed units silently clamped away),
+    # and departure release absorbed by the usage >= 0 floor.  All zero on a
+    # churn-free epoch, so pre-existing stats are bit-identical.
+    arrivals_rejected: int = 0
+    arrival_units_rejected: float = 0.0
+    release_shortfall_units: float = 0.0
+    # -- ingestion backpressure (MarketService ticks; zero inside Economy) ---
+    bids_submitted: int = 0  # deltas accepted into the tick's batch
+    bids_withdrawn: int = 0  # withdrawals applied this tick
+    bids_rejected: int = 0  # deltas refused by validation
+    bids_deferred: int = 0  # deltas refused by the max_pending backpressure cap
 
 
 # row kinds in a packed bid book
@@ -400,6 +414,7 @@ class Economy:
         fused: bool = False,
         pipeline: bool = False,
         fused_backend: str | None = None,
+        fused_slack: bool = False,
     ):
         self.clusters = list(clusters)
         self.rtypes = list(rtypes)
@@ -524,14 +539,40 @@ class Economy:
                 "jitter is indexed by global row position, which the fused "
                 "slot layout does not preserve)"
             )
+        if fused_slack and not fused:
+            raise ValueError("fused_slack=True requires fused=True")
         self.fused = bool(fused)
         self.pipeline = bool(pipeline)
         self.fused_backend = fused_backend
+        # fused_slack pads the fused program's agent axis to a power-of-two
+        # capacity that only grows (by doubling), so bounded population churn
+        # reuses ONE compiled trace instead of recompiling at every new N.
+        # Dead slots are bit-neutral in allocations (dropout=True zeroes
+        # their presence), but the padded reduction shapes shift the pairwise
+        # summation folds, so slack epochs are float-close — not bit-exact —
+        # to the unpadded staged/fused paths.  Off (default) keeps the exact
+        # compile-per-shape behavior and bit-parity.
+        self.fused_slack = bool(fused_slack)
         self._fused_fn = None
+        # built agent capacity of the compiled program (== len(pop) without
+        # slack; the padded power-of-two capacity with fused_slack)
         self._fused_n: int | None = None
         self._device_state: DeviceMarketState | None = None
         self._device_const: tuple | None = None
         self._state_dirty = True
+        # -- streaming-churn telemetry, reported in the next EpochStats ------
+        self._churn_arrivals_rejected = 0
+        self._churn_arrival_units_rejected = 0.0
+        self._churn_release_shortfall = 0.0
+        # -- stable agent identities + dirty-bid tracking --------------------
+        # uids survive the index compaction of remove_agents; the dirty sets
+        # record which agents' sticky bids changed since the last
+        # drain_bid_deltas() so an always-on MarketService book can be kept
+        # in sync with O(Δ) row updates instead of a full re-export.
+        self._agent_uid = np.arange(len(self.pop), dtype=np.int64)
+        self._uid_next = int(len(self.pop))
+        self._dirty_uids: set[int] = set()
+        self._removed_uids: set[int] = set()
 
     # -- population bookkeeping ----------------------------------------------
     @property
@@ -541,32 +582,187 @@ class Economy:
         return self.pop.to_agents()
 
     def add_agents(self, newcomers: AgentPopulation) -> int:
-        """Append arriving agents; placed arrivals claim usage immediately."""
+        """Append arriving agents; placed arrivals claim usage immediately.
+
+        An arrival whose placement does not fit in its cluster's remaining
+        free capacity is rejected EXPLICITLY: it joins the market unplaced
+        (``placed = -1``) and is counted into the next EpochStats
+        (``arrivals_rejected`` / ``arrival_units_rejected``).  The old
+        behavior silently clamped usage to capacity, making the claimed
+        units vanish and breaking the placed-usage conservation invariant
+        the scenario engine enforces.  Returns the number of arrivals whose
+        placement was actually accepted (credited into ``usage``).
+        """
+        placed = np.asarray(newcomers.placed, np.int64).copy()
+        held = np.flatnonzero(placed >= 0)
+        accepted = 0
+        if held.size:
+            # fast path: clusters whose total influx fits admit their whole
+            # arrival cohort vectorized; over-subscribed clusters fall back
+            # to first-fit in arrival order so admission is deterministic
+            influx = np.zeros_like(self.usage)
+            np.add.at(influx, placed[held], newcomers.req[held])
+            fits = ~(self.usage + influx > self.capacity).any(axis=1)
+            easy = held[fits[placed[held]]]
+            np.add.at(self.usage, placed[easy], newcomers.req[easy])
+            accepted += int(easy.size)
+            for i in held[~fits[placed[held]]]:
+                c = placed[i]
+                if np.all(self.usage[c] + newcomers.req[i] <= self.capacity[c]):
+                    self.usage[c] += newcomers.req[i]
+                    accepted += 1
+                else:
+                    placed[i] = -1
+                    self._churn_arrivals_rejected += 1
+                    self._churn_arrival_units_rejected += float(
+                        newcomers.req[i].sum()
+                    )
+        if accepted != held.size:
+            newcomers = dataclasses.replace(newcomers, placed=placed)
         self.pop = self.pop.concat(newcomers)
-        held = newcomers.placed >= 0
-        np.add.at(self.usage, newcomers.placed[held], newcomers.req[held])
-        self.usage = np.minimum(self.usage, self.capacity)
         if self._reach_keys is not None:
             # arrivals have no stored reach yet: NaN rows force a fresh draw
             self._reach_keys = np.vstack(
                 [self._reach_keys, np.full((len(newcomers), self.C), np.nan)]
             )
+        new_uids = np.arange(
+            self._uid_next, self._uid_next + len(newcomers), dtype=np.int64
+        )
+        self._uid_next += len(newcomers)
+        self._agent_uid = np.concatenate([self._agent_uid, new_uids])
+        self._dirty_uids.update(new_uids.tolist())
         self._state_dirty = True
-        return int(len(newcomers))
+        return accepted
 
     def remove_agents(self, mask: np.ndarray) -> int:
         """Remove agents at a boolean mask; placed leavers free their usage.
-        Returns how many of the removed agents were placed."""
+        Returns how many of the removed agents were placed.
+
+        A release that would drive a pool's usage negative (phantom usage,
+        e.g. after an external capacity mutation) is absorbed by the
+        usage >= 0 floor as before, but the absorbed amount is now counted
+        into the next EpochStats (``release_shortfall_units``) instead of
+        vanishing silently."""
         mask = np.asarray(mask, bool)
         gone = self.pop.select(mask)
         held = gone.placed >= 0
         np.add.at(self.usage, gone.placed[held], -gone.req[held])
+        shortfall = float(-np.minimum(self.usage, 0.0).sum())
+        if shortfall > 0.0:
+            self._churn_release_shortfall += shortfall
         self.usage = np.maximum(self.usage, 0.0)
         self.pop = self.pop.select(~mask)
         if self._reach_keys is not None:
             self._reach_keys = self._reach_keys[~mask]
+        gone_uids = self._agent_uid[mask]
+        self._removed_uids.update(gone_uids.tolist())
+        self._dirty_uids.difference_update(gone_uids.tolist())
+        self._agent_uid = self._agent_uid[~mask]
         self._state_dirty = True
         return int(held.sum())
+
+    def _consume_churn_counters(self, dry_run: bool) -> tuple[int, float, float]:
+        """Churn telemetry accumulated since the last binding epoch.
+
+        Dry runs report without resetting (side-effect free), binding
+        epochs consume the counters."""
+        vals = (
+            self._churn_arrivals_rejected,
+            self._churn_arrival_units_rejected,
+            self._churn_release_shortfall,
+        )
+        if not dry_run:
+            self._churn_arrivals_rejected = 0
+            self._churn_arrival_units_rejected = 0.0
+            self._churn_release_shortfall = 0.0
+        return vals
+
+    # -- always-on service bridge (repro.serve.market) ------------------------
+    def export_bid_rows(
+        self, agents: np.ndarray | None = None
+    ) -> tuple[list[str], np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Sticky buy bids for a persistent :class:`MarketBook`, packed.
+
+        Returns ``(keys, idx_rows, val_rows, mask_rows, pi_rows)`` ready for
+        ``MarketBook.upsert_rows``: one row per agent, one XOR bundle per
+        reachable cluster (home first, then ascending cluster index,
+        truncated to the mobility budget), valued at the agent's requirement
+        and priced at ``min(value − relocation, belief·(1+margin), budget)``.
+
+        Unlike the per-epoch book, this export is RNG-free (deterministic
+        reach, no arbitrage coin), because a streaming service's resting
+        bids persist between auctions — re-exporting an unchanged agent
+        yields a bit-identical row.  Keys are ``agent-<uid>`` over the
+        stable uids, so rows survive index compaction on departures.
+        """
+        pop = self.pop
+        if agents is None:
+            agents = np.arange(len(pop))
+        agents = np.asarray(agents, np.int64)
+        n, C, T = agents.size, self.C, self.T
+        home = pop.home[agents]
+        n_reach = np.clip(
+            np.rint(pop.mobility[agents] * C).astype(np.int64), 1, C
+        )
+        # deterministic reach order: home first, then cluster index
+        order_key = np.broadcast_to(
+            np.arange(C, dtype=np.float64), (n, C)
+        ).copy()
+        has_home = home >= 0
+        order_key[np.flatnonzero(has_home), home[has_home]] = -1.0
+        order = np.argsort(order_key, axis=1, kind="stable")
+        valid = np.arange(C)[None, :] < n_reach[:, None]
+        believed = bundle_cluster_costs(pop.req[agents], self.belief)  # (n, C)
+        away = np.arange(C)[None, :] != home[:, None]
+        ceiling = np.minimum(
+            np.minimum(
+                pop.value[agents, None] - pop.relocation_cost[agents, None] * away,
+                believed * (1.0 + pop.margins()[agents])[:, None],
+            ),
+            pop.budget[agents, None],
+        )
+        bc = np.where(valid, order, 0)
+        idx_rows = (bc[:, :, None] * T + np.arange(T)[None, None, :]).astype(
+            np.int32
+        )
+        idx_rows = np.where(valid[:, :, None], idx_rows, 0)
+        val_rows = np.where(
+            valid[:, :, None], pop.req[agents, None, :], 0.0
+        ).astype(np.float32)
+        pi_rows = np.where(
+            valid, np.take_along_axis(ceiling, bc, axis=1), 0.0
+        ).astype(np.float32)
+        # a bundle priced at or below zero can never win — mask it out so
+        # the book's validation (pi > 0 where mask) holds
+        mask_rows = valid & (pi_rows > 0.0)
+        pi_rows = np.where(mask_rows, pi_rows, 0.0)
+        val_rows = np.where(mask_rows[:, :, None], val_rows, 0.0)
+        idx_rows = np.where(mask_rows[:, :, None], idx_rows, 0)
+        keys = [f"agent-{u}" for u in self._agent_uid[agents]]
+        return keys, idx_rows, val_rows, mask_rows, pi_rows
+
+    def drain_bid_deltas(
+        self,
+    ) -> tuple[
+        list[str],
+        tuple[list[str], np.ndarray, np.ndarray, np.ndarray, np.ndarray],
+    ]:
+        """Bid-book deltas accumulated since the last drain.
+
+        Returns ``(withdraw_keys, upserts)`` where ``upserts`` has the
+        :meth:`export_bid_rows` layout, covering exactly the agents whose
+        sticky bids changed (arrivals, policy actions) and the uids that
+        departed.  Applying both to a MarketBook previously synced with
+        ``export_bid_rows()`` re-synchronizes it in O(Δ)."""
+        withdraw = [f"agent-{u}" for u in sorted(self._removed_uids)]
+        dirty = np.array(sorted(self._dirty_uids), dtype=np.int64)
+        # uids -> current indices: _agent_uid is strictly increasing (concat
+        # appends fresh uids; select preserves order), so searchsorted maps
+        idx = np.searchsorted(self._agent_uid, dirty)
+        upserts = self.export_bid_rows(idx)
+        self._removed_uids.clear()
+        self._dirty_uids.clear()
+        return withdraw, upserts
 
     # -- pool bookkeeping ----------------------------------------------------
     def pool_idx(self, c: int, t: int) -> int:
@@ -820,6 +1016,7 @@ class Economy:
         pi_scale: np.ndarray | None = None
         arb: np.ndarray | None = None
         margin: np.ndarray | None = None
+        acted: list[np.ndarray] = []
         for pid, pol in enumerate(self.policies):
             idx = np.flatnonzero(pop.policy == pid)
             if idx.size == 0:
@@ -827,6 +1024,7 @@ class Economy:
             act = pol.act(obs, pop, idx)
             if act is None:
                 continue
+            acted.append(idx)
             if act.redraw_reach is not None and self._reach_keys is not None:
                 keep = ~np.asarray(act.redraw_reach, bool)
                 keep &= ~np.isnan(self._reach_keys[idx]).any(axis=1)
@@ -849,6 +1047,10 @@ class Economy:
                 margin[idx] = act.margin
         if not dry_run:
             self._reach_keys = base_keys
+            # policy actions changed these agents' effective bids: mark them
+            # dirty so the always-on service bridge re-exports their rows
+            for idx in acted:
+                self._dirty_uids.update(self._agent_uid[idx].tolist())
         return perm_keys, pi_scale, arb, margin
 
     # -- bid-book construction -----------------------------------------------
@@ -1275,6 +1477,9 @@ class Economy:
         return seed
 
     def _settle_epoch(self, dry_run: bool) -> EpochStats:
+        churn_rej, churn_units, churn_short = self._consume_churn_counters(
+            dry_run
+        )
         draw, cap_eff, usage_eff, placed_ov, pre_evict, pre_claw, pre_comp = (
             self._epoch_view()
         )
@@ -1381,6 +1586,9 @@ class Economy:
                 clock_escalations=escalations, dropped_bids=dropped,
                 evictions=0 if pre_evict is None else int(pre_evict.sum()),
                 clawback_units=pre_claw, compensation=pre_comp,
+                arrivals_rejected=churn_rej,
+                arrival_units_rejected=churn_units,
+                release_shortfall_units=churn_short,
             )
 
         apply = (
@@ -1448,6 +1656,9 @@ class Economy:
             evictions=evictions,
             clawback_units=pre_claw + post["clawback_units"],
             compensation=pre_comp + post["compensation"],
+            arrivals_rejected=churn_rej,
+            arrival_units_rejected=churn_units,
+            release_shortfall_units=churn_short,
         )
 
     # -- fused epoch path (repro.core.fused) ---------------------------------
@@ -1460,8 +1671,27 @@ class Economy:
         ``belief`` directly from outside the Economy API."""
         self._state_dirty = True
 
-    def _fused_program(self):
+    def _fused_cap(self) -> int:
+        """Agent capacity the fused program is (or should be) built for.
+
+        Without slack this is exactly ``len(pop)`` — any churn recompiles.
+        With ``fused_slack`` the capacity is a power of two that only grows
+        (by doubling), so arrivals within the slack and ANY departure reuse
+        the already-compiled trace; dead slots ride along bit-neutrally in
+        allocations (their presence mask is zeroed via dropout)."""
         n = len(self.pop)
+        if not self.fused_slack:
+            return n
+        cap = self._fused_n if self._fused_n is not None else 0
+        if cap >= n:
+            return cap
+        cap = max(cap, 16)
+        while cap < n:
+            cap *= 2
+        return cap
+
+    def _fused_program(self):
+        n = self._fused_cap()
         if self._fused_fn is None or self._fused_n != n:
             self._fused_fn = build_fused_epoch(
                 num_agents=n, num_clusters=self.C, num_rtypes=self.T,
@@ -1475,12 +1705,22 @@ class Economy:
             self._device_const = None
         return self._fused_fn
 
+    def _pad_agents(self, a: np.ndarray, fill) -> np.ndarray:
+        """Pad a per-agent array's leading axis to the built fused capacity
+        (no-op without slack, or when the population fills the capacity)."""
+        cap = self._fused_n if self._fused_n is not None else len(self.pop)
+        n = a.shape[0]
+        if n == cap:
+            return a
+        pad = np.full((cap - n,) + a.shape[1:], fill, dtype=a.dtype)
+        return np.concatenate([a, pad], axis=0)
+
     def _fused_const(self) -> tuple:
         if self._device_const is None or self._state_dirty:
             pop = self.pop
             with jax.experimental.enable_x64(True):
                 self._device_const = tuple(
-                    jnp.asarray(a)
+                    jnp.asarray(self._pad_agents(np.asarray(a), 0))
                     for a in (
                         pop.req, pop.value, pop.relocation_cost,
                         pop.mobility, pop.budget,
@@ -1492,7 +1732,7 @@ class Economy:
         if self._device_state is None or self._state_dirty:
             self._fused_const()  # refresh immutables alongside
             self._device_state = DeviceMarketState.from_host(
-                self.pop, self.usage, self.belief
+                self.pop, self.usage, self.belief, capacity=self._fused_n
             )
             self._state_dirty = False
         return self._device_state
@@ -1504,6 +1744,7 @@ class Economy:
         so fault/no-fault and policy/no-policy epochs share one trace."""
         pop = self.pop
         n, C, T = len(pop), self.C, self.T
+        churn = self._consume_churn_counters(dry_run)
         draw, cap_eff, usage_eff, placed_ov, pre_evict, pre_claw, pre_comp = (
             self._epoch_view()
         )
@@ -1581,22 +1822,38 @@ class Economy:
             "u_arb": u_arb, "perm_keys": perm_keys, "pi_scale": pi_scale,
             "arb": arb, "margin": margin, "dropout": dropout,
             "sells": sells, "wants": wants, "placed_eff": placed_eff,
-            "home_pre": pop.home,
+            "home_pre": pop.home, "churn": churn,
             "util_pct": None if dry_run else self._util_percentiles(),
         }
+
+    # per-agent fused inputs and their slack-slot fill values: dropout=True
+    # zeroes a dead slot's presence mask in-trace, u_arb=1 ≥ arb=0 keeps the
+    # sell coin from firing, and the rest are bit-neutral under ~present
+    _FUSED_AGENT_INPUTS = (
+        ("u_arb", 1.0), ("perm_keys", 0.5), ("pi_scale", 1.0),
+        ("arb", 0.0), ("margin", 0.0), ("dropout", True),
+    )
+    # per-agent fused outputs, sliced back to the live population under slack
+    _FUSED_AGENT_OUTPUTS = (
+        "sells", "wants", "won_sell", "won_buy", "pay_sell", "pay_buy",
+        "pi_sell", "pi_buy", "buy_cluster", "buy_scale",
+        "placed_new", "home_new", "fill_new",
+    )
 
     def _fused_dispatch(self, prep: dict, dry_run: bool) -> dict:
         """Upload epoch inputs and launch the fused program (async)."""
         fn = self._fused_program()
+        n = len(self.pop)
         with jax.experimental.enable_x64(True):
             if dry_run:
                 # ephemeral state copies: donation consumes them, the
                 # persistent device state and host mirrors are untouched
                 self._fused_const()
+                pad_i = np.full(max(self._fused_n - n, 0), -1, np.int64)
                 state = (
-                    jnp.asarray(prep["placed_eff"]),
-                    jnp.asarray(self.pop.home),
-                    jnp.asarray(self.pop.fill_rate),
+                    jnp.asarray(np.concatenate([prep["placed_eff"], pad_i])),
+                    jnp.asarray(np.concatenate([self.pop.home, pad_i])),
+                    jnp.asarray(self._pad_agents(self.pop.fill_rate, 1.0)),
                     jnp.asarray(prep["usage_eff"]),
                     jnp.asarray(self.belief),
                 )
@@ -1604,20 +1861,32 @@ class Economy:
                 st = self._fused_state()
                 state = (st.placed, st.home, st.fill_rate, st.usage, st.belief)
             inputs = tuple(
+                jnp.asarray(
+                    self._pad_agents(np.asarray(prep[k]), fill)
+                )
+                for k, fill in self._FUSED_AGENT_INPUTS
+            ) + tuple(
                 jnp.asarray(prep[k])
                 for k in (
-                    "u_arb", "perm_keys", "pi_scale", "arb", "margin",
-                    "dropout", "cap_eff", "free_basis", "tilde_p", "start",
+                    "cap_eff", "free_basis", "tilde_p", "start",
                     "base_cost_flat",
                 )
             )
             out = fn(self._device_const, state, inputs)
         if not dry_run:
+            # the persistent device state keeps the FULL-capacity arrays
+            # (they feed next epoch's donation chain); downstream adopt /
+            # finalize sees the live-agent slice
             self._device_state = DeviceMarketState(
                 placed=out["placed_new"], home=out["home_new"],
                 fill_rate=out["fill_new"], usage=out["usage_new"],
                 belief=out["belief_new"],
             )
+        if self._fused_n != n:
+            out = dict(out)
+            for k in self._FUSED_AGENT_OUTPUTS:
+                if k in out:
+                    out[k] = out[k][:n]
         return out
 
     def _fused_adopt(self, prep: dict, out: dict) -> None:
@@ -1688,6 +1957,9 @@ class Economy:
                 clock_escalations=escalations, dropped_bids=prep["dropped"],
                 evictions=0 if pre_evict is None else int(pre_evict.sum()),
                 clawback_units=prep["pre_claw"], compensation=prep["pre_comp"],
+                arrivals_rejected=prep["churn"][0],
+                arrival_units_rejected=prep["churn"][1],
+                release_shortfall_units=prep["churn"][2],
             )
 
         won_sell = np.asarray(out["won_sell"])
@@ -1772,6 +2044,9 @@ class Economy:
             evictions=evictions,
             clawback_units=prep["pre_claw"] + post["clawback_units"],
             compensation=prep["pre_comp"] + post["compensation"],
+            arrivals_rejected=prep["churn"][0],
+            arrival_units_rejected=prep["churn"][1],
+            release_shortfall_units=prep["churn"][2],
         )
 
     def _settle_epoch_fused(self, dry_run: bool) -> EpochStats:

@@ -127,12 +127,33 @@ class DeviceMarketState:
     belief: jax.Array  # (R,) float64
 
     @classmethod
-    def from_host(cls, pop, usage: np.ndarray, belief: np.ndarray):
+    def from_host(
+        cls,
+        pop,
+        usage: np.ndarray,
+        belief: np.ndarray,
+        capacity: int | None = None,
+    ):
+        """Upload host mirrors; ``capacity > len(pop)`` pads the per-agent
+        fields with inert slots (placed/home −1, fill_rate 1.0) so a
+        slack-padded fused program (``Economy(fused_slack=True)``) keeps one
+        compiled trace across bounded population churn.  Inert slots carry
+        ``dropout=True`` on dispatch, which zeroes their presence mask."""
+        n = int(len(pop.placed))
+        cap = n if capacity is None else int(capacity)
+        if cap < n:
+            raise ValueError(f"device capacity {cap} < population {n}")
+        placed, home, fill = pop.placed, pop.home, pop.fill_rate
+        if cap > n:
+            pad_i = np.full(cap - n, -1, dtype=placed.dtype)
+            placed = np.concatenate([placed, pad_i])
+            home = np.concatenate([home, pad_i])
+            fill = np.concatenate([fill, np.ones(cap - n, fill.dtype)])
         with jax.experimental.enable_x64(True):
             return cls(
-                placed=jnp.asarray(pop.placed),
-                home=jnp.asarray(pop.home),
-                fill_rate=jnp.asarray(pop.fill_rate),
+                placed=jnp.asarray(placed),
+                home=jnp.asarray(home),
+                fill_rate=jnp.asarray(fill),
                 usage=jnp.asarray(usage),
                 belief=jnp.asarray(belief),
             )

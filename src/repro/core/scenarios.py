@@ -122,12 +122,15 @@ class Arrivals:
             self.num_agents, eco.C, seed=self.seed,
             value_mult=self.value_mult, home=self.home, placed_frac=0.0,
         )
-        eco.add_agents(pop)
+        # add_agents may ration a pre-placed arrival down to unplaced when
+        # its cluster lacks free capacity — count what was actually seated,
+        # not what the cohort requested, or the conservation check drifts
+        placed = eco.add_agents(pop)
         return EventReport(
             self.epoch,
             f"{self.num_agents} agents arrive",
             agents_added=self.num_agents,
-            placed_added=int((pop.placed >= 0).sum()),
+            placed_added=placed,
         )
 
 

@@ -831,6 +831,427 @@ def densify(problem: SparseAuctionProblem) -> AuctionProblem:
     )
 
 
+# ---------------------------------------------------------------------------
+# Incremental (always-on) CSR bid book
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _book_static_layout(rows_cap: int, b: int, k: int):
+    """(rows, offsets) of the fixed-count-K book layout — constant per shape."""
+    offsets = (np.arange(rows_cap * b + 1, dtype=np.int64) * k).astype(np.int32)
+    rows = np.repeat(np.arange(rows_cap * b, dtype=np.int32), k)
+    return jnp.asarray(rows), jnp.asarray(offsets)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _csr_apply_row_deltas(
+    idx: jax.Array,  # (rows_cap·B·K,) int32 — donated
+    val: jax.Array,  # (rows_cap·B·K,) float32 — donated
+    mask: jax.Array,  # (rows_cap, B) bool — donated
+    pi: jax.Array,  # (rows_cap, B) float32 — donated
+    rows: jax.Array,  # (D,) int32 — target row slots (duplicates allowed iff
+    #     they carry identical payloads; the book pads delta batches that way)
+    idx_rows: jax.Array,  # (D, B, K) int32
+    val_rows: jax.Array,  # (D, B, K) float32
+    mask_rows: jax.Array,  # (D, B) bool
+    pi_rows: jax.Array,  # (D, B) float32
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Overwrite ``D`` whole row slots of a device-resident CSR book in place.
+
+    This is the delta-application kernel of the always-on market service: the
+    four big buffers are donated, so applying a tick's Δ bid changes costs
+    O(Δ·B·K) device work and **zero** host↔device traffic for the unchanged
+    rows — instead of the O(N) re-upload a from-scratch repack pays.  Shapes
+    are static per (capacity, delta-bucket), so bounded churn reuses one
+    compiled program.
+    """
+    d, b, k = idx_rows.shape
+    flat = (
+        rows[:, None, None] * (b * k)
+        + jnp.arange(b, dtype=rows.dtype)[None, :, None] * k
+        + jnp.arange(k, dtype=rows.dtype)[None, None, :]
+    ).reshape(-1)
+    idx = idx.at[flat].set(idx_rows.reshape(-1), unique_indices=False)
+    val = val.at[flat].set(val_rows.reshape(-1), unique_indices=False)
+    mask = mask.at[rows].set(mask_rows, unique_indices=False)
+    pi = pi.at[rows].set(pi_rows, unique_indices=False)
+    return idx, val, mask, pi
+
+
+class MarketBook:
+    """Persistent slotted CSR bid book with amortized-O(Δ) delta application.
+
+    The always-on twin of the per-epoch packers: instead of rebuilding the
+    flat ``idx``/``val`` streams from scratch every auction, the book owns
+    ``rows_cap`` fixed-width row slots — slot ``s`` holds one account's XOR
+    bid in elements ``[s·B·K, (s+1)·B·K)`` — and arrivals / departures / bid
+    updates land as whole-row insert/delete/update writes.  ``offsets`` are
+    the static ``arange·K`` ladder (every bundle region is exactly ``K``
+    wide, zero-padded inside — explicit ``(idx=0, val=0)`` elements gather
+    pool 0's price and contribute exact ``0.0``, the same bit-neutral padding
+    contract every packer in this repo relies on), so the
+    :class:`CSRAuctionProblem` this book emits has a **stable shape** per
+    capacity and the jitted settlement program compiles once per
+    capacity-doubling, not once per churn event.
+
+    Host numpy arrays are the master copy (validation, oracle); a device
+    mirror is maintained by :func:`_csr_apply_row_deltas` with donated
+    buffers, so per-tick device work is O(Δ·B·K).
+
+    Parity oracle: :meth:`rebuilt` re-packs every live account from its raw
+    submission into the *same slot* of a fresh zeroed book — the full-repack
+    twin of ``packer="loop"`` — and :meth:`parity_check` asserts the
+    incremental arrays are bit-identical to it.  ``supply_scale`` is carried
+    as an exact float64 per-pool |q| ledger (adds on insert, subtracts on
+    delete); within the service's validated quantity range every ledger op is
+    exact in float64, so the incremental ledger equals the oracle's
+    from-scratch sum bit for bit.
+    """
+
+    def __init__(
+        self,
+        base_cost: np.ndarray,
+        num_bundles: int,
+        k_bound: int,
+        rows_cap: int = 64,
+    ) -> None:
+        if num_bundles < 1 or k_bound < 1:
+            raise ValueError("num_bundles and k_bound must be >= 1")
+        self.base_cost = np.asarray(base_cost, np.float32)
+        self.num_resources = int(self.base_cost.shape[0])
+        self.num_bundles = int(num_bundles)
+        self.k_bound = int(k_bound)
+        self.rows_cap = 1
+        while self.rows_cap < max(int(rows_cap), 1):
+            self.rows_cap *= 2
+        self._alloc_arrays(self.rows_cap)
+        self._key_slot: dict = {}
+        self._slot_key: list = [None] * self.rows_cap
+        self._accounts: dict = {}  # key -> (bundles tuple, pi tuple) as packed
+        self._next_slot = 0
+        self._free: list[int] = []  # LIFO of freed slots below _next_slot
+        self._ledger = np.zeros(self.num_resources, np.float64)
+        self._generation = 0  # bumps on every growth (device full re-upload)
+        self._dev: dict | None = None
+        self._dev_generation = -1
+        self._dev_pending: list[int] = []  # slots written since last sync
+        self.deltas_applied = 0  # lifetime upsert+remove count (telemetry)
+
+    # -- storage ------------------------------------------------------------
+
+    def _alloc_arrays(self, rows_cap: int) -> None:
+        b, k = self.num_bundles, self.k_bound
+        self.idx = np.zeros(rows_cap * b * k, np.int32)
+        self.val = np.zeros(rows_cap * b * k, np.float32)
+        self.mask = np.zeros((rows_cap, b), bool)
+        self.pi = np.zeros((rows_cap, b), np.float32)
+
+    def _ensure_rows(self, extra: int) -> None:
+        need = self._next_slot - len(self._free) + extra
+        if need <= self.rows_cap:
+            return
+        new_cap = self.rows_cap
+        while new_cap < need:
+            new_cap *= 2
+        b, k = self.num_bundles, self.k_bound
+        idx, val, mask, pi = self.idx, self.val, self.mask, self.pi
+        self._alloc_arrays(new_cap)
+        self.idx[: idx.shape[0]] = idx
+        self.val[: val.shape[0]] = val
+        self.mask[: mask.shape[0]] = mask
+        self.pi[: pi.shape[0]] = pi
+        self._slot_key.extend([None] * (new_cap - self.rows_cap))
+        self.rows_cap = new_cap
+        self._generation += 1  # stale device mirror: full re-upload
+        self._dev = None
+        self._dev_pending.clear()
+
+    @property
+    def num_rows(self) -> int:
+        """Live account count."""
+        return len(self._key_slot)
+
+    @property
+    def nnz_cap(self) -> int:
+        return self.rows_cap * self.num_bundles * self.k_bound
+
+    # -- row packing --------------------------------------------------------
+
+    def _pack_row(self, bundles, pi):
+        """One account's raw submission → (idx (B,K), val (B,K), mask (B,),
+        pi (B,)) row payload.  Nonzeros are sorted ascending by pool (the
+        fold-order contract every demand path shares) and zero-padded to K.
+        """
+        b_cap, k_cap = self.num_bundles, self.k_bound
+        if len(bundles) == 0 or len(bundles) > b_cap:
+            raise ValueError(f"bundle count must be in [1, {b_cap}], got {len(bundles)}")
+        pi_arr = np.broadcast_to(np.asarray(pi, np.float32), (len(bundles),))
+        idx_row = np.zeros((b_cap, k_cap), np.int32)
+        val_row = np.zeros((b_cap, k_cap), np.float32)
+        mask_row = np.zeros(b_cap, bool)
+        pi_row = np.zeros(b_cap, np.float32)
+        for b, q in enumerate(bundles):
+            ii, vv = q
+            ii = np.asarray(ii, np.int32)
+            vv = np.asarray(vv, np.float32)
+            if ii.shape != vv.shape or ii.ndim != 1:
+                raise ValueError("each bundle must be a flat (idx, val) pair")
+            if len(ii) > k_cap:
+                raise ValueError(f"bundle nnz {len(ii)} > k_bound {k_cap}")
+            if ii.size and (ii.min() < 0 or ii.max() >= self.num_resources):
+                raise ValueError(
+                    f"bundle pool indices must be in [0, {self.num_resources})"
+                )
+            if not np.isfinite(vv).all():
+                raise ValueError("bundle quantities must be finite")
+            order = np.argsort(ii, kind="stable")
+            idx_row[b, : len(ii)] = ii[order]
+            val_row[b, : len(ii)] = vv[order]
+            mask_row[b] = True
+            pi_row[b] = pi_arr[b]
+        if not np.isfinite(pi_row).all():
+            raise ValueError("pi must be finite")
+        return idx_row, val_row, mask_row, pi_row
+
+    # -- delta application --------------------------------------------------
+
+    def upsert(self, key, bundles, pi) -> None:
+        """Insert or replace one account's bid.  Amortized O(B·K)."""
+        row = self._pack_row(bundles, pi)
+        self._write_rows([key], *(a[None] for a in row))
+        self._accounts[key] = (tuple(
+            (np.array(ii, np.int32), np.array(vv, np.float32)) for ii, vv in bundles
+        ), np.asarray(pi, np.float32))
+
+    def upsert_rows(self, keys, idx_rows, val_rows, mask_rows, pi_rows, raw=None):
+        """Vectorized multi-account upsert of pre-packed row payloads.
+
+        ``raw`` optionally carries the original (bundles, pi) submissions so
+        :meth:`rebuilt` can re-pack them; when omitted the payload itself is
+        stored (already canonical)."""
+        self._write_rows(keys, idx_rows, val_rows, mask_rows, pi_rows)
+        for i, key in enumerate(keys):
+            if raw is not None:
+                self._accounts[key] = raw[i]
+            else:
+                self._accounts[key] = (
+                    idx_rows[i].copy(), val_rows[i].copy(),
+                    mask_rows[i].copy(), pi_rows[i].copy(),
+                )
+
+    def _write_rows(self, keys, idx_rows, val_rows, mask_rows, pi_rows) -> None:
+        d = len(keys)
+        if len(set(keys)) != d:
+            # the ledger reads each slot's old contents once per batch, so a
+            # key repeated within one batch would double-retire them
+            raise ValueError("duplicate keys in one delta batch (dedupe first)")
+        idx_rows = np.asarray(idx_rows, np.int32)
+        val_rows = np.asarray(val_rows, np.float32)
+        mask_rows = np.asarray(mask_rows, bool)
+        pi_rows = np.asarray(pi_rows, np.float32)
+        new = [k for k in keys if k not in self._key_slot]
+        self._ensure_rows(len(new))
+        slots = np.empty(d, np.int64)
+        for i, key in enumerate(keys):
+            s = self._key_slot.get(key)
+            if s is None:
+                s = self._free.pop() if self._free else self._next_slot
+                if s == self._next_slot:
+                    self._next_slot += 1
+                self._key_slot[key] = s
+                self._slot_key[s] = key
+            slots[i] = s
+        b, k = self.num_bundles, self.k_bound
+        el = (
+            slots[:, None, None] * (b * k)
+            + np.arange(b)[None, :, None] * k
+            + np.arange(k)[None, None, :]
+        ).reshape(d, -1)
+        old_val = self.val[el]
+        old_idx = self.idx[el]
+        # exact f64 ledger: retire the old elements' |q|, credit the new
+        self._ledger -= np.bincount(
+            old_idx.reshape(-1),
+            weights=np.abs(old_val.reshape(-1), dtype=np.float64),
+            minlength=self.num_resources,
+        )
+        self._ledger += np.bincount(
+            idx_rows.reshape(-1).astype(np.int64),
+            weights=np.abs(val_rows.reshape(-1), dtype=np.float64),
+            minlength=self.num_resources,
+        )
+        flat = el.reshape(-1)
+        self.idx[flat] = idx_rows.reshape(-1)
+        self.val[flat] = val_rows.reshape(-1)
+        self.mask[slots] = mask_rows
+        self.pi[slots] = pi_rows
+        self._dev_pending.extend(int(s) for s in slots)
+        self.deltas_applied += d
+
+    def remove(self, key) -> bool:
+        """Withdraw one account's bid; frees its slot (LIFO reuse).  O(B·K)."""
+        s = self._key_slot.pop(key, None)
+        if s is None:
+            return False
+        b, k = self.num_bundles, self.k_bound
+        lo, hi = s * b * k, (s + 1) * b * k
+        self._ledger -= np.bincount(
+            self.idx[lo:hi].astype(np.int64),
+            weights=np.abs(self.val[lo:hi], dtype=np.float64),
+            minlength=self.num_resources,
+        )
+        self.idx[lo:hi] = 0
+        self.val[lo:hi] = 0.0
+        self.mask[s] = False
+        self.pi[s] = 0.0
+        self._slot_key[s] = None
+        self._accounts.pop(key, None)
+        self._free.append(s)
+        self._dev_pending.append(s)
+        self.deltas_applied += 1
+        return True
+
+    def __contains__(self, key) -> bool:
+        return key in self._key_slot
+
+    def __len__(self) -> int:
+        return self.num_rows
+
+    # -- problem views ------------------------------------------------------
+
+    def supply_scale(self) -> np.ndarray:
+        return np.maximum(self._ledger.astype(np.float32), 1.0)
+
+    def problem(self) -> CSRAuctionProblem:
+        """Host-array snapshot as a CSRAuctionProblem (fresh upload)."""
+        rows, offsets = _book_static_layout(
+            self.rows_cap, self.num_bundles, self.k_bound
+        )
+        return CSRAuctionProblem(
+            idx=jnp.asarray(self.idx),
+            val=jnp.asarray(self.val),
+            rows=rows,
+            offsets=offsets,
+            bundle_mask=jnp.asarray(self.mask),
+            pi=jnp.asarray(self.pi),
+            base_cost=jnp.asarray(self.base_cost),
+            supply_scale=jnp.asarray(self.supply_scale()),
+            num_resources=self.num_resources,
+            k_bound=self.k_bound,
+        )
+
+    def device_problem(self) -> CSRAuctionProblem:
+        """Device-resident view, synced by O(Δ) donated row scatters.
+
+        On first use (and after every capacity doubling) the whole book is
+        uploaded once; afterwards each call flushes only the slots written
+        since the last sync, with the delta batch padded to a power-of-two
+        bucket (idempotent duplicate writes of the first slot) so churn
+        reuses a handful of compiled scatter programs per capacity.
+        """
+        if self._dev is None or self._dev_generation != self._generation:
+            self._dev = {
+                "idx": jnp.asarray(self.idx),
+                "val": jnp.asarray(self.val),
+                "mask": jnp.asarray(self.mask),
+                "pi": jnp.asarray(self.pi),
+            }
+            self._dev_generation = self._generation
+            self._dev_pending.clear()
+        elif self._dev_pending:
+            slots = sorted(set(self._dev_pending))
+            d = 1
+            while d < len(slots):  # rows_cap is a power of two, so d <= rows_cap
+                d *= 2
+            padded = np.full(d, slots[0], np.int32)
+            padded[: len(slots)] = slots
+            b, k = self.num_bundles, self.k_bound
+            el = (
+                padded.astype(np.int64)[:, None, None] * (b * k)
+                + np.arange(b)[None, :, None] * k
+                + np.arange(k)[None, None, :]
+            ).reshape(d, b, k)
+            new = _csr_apply_row_deltas(
+                self._dev["idx"], self._dev["val"], self._dev["mask"],
+                self._dev["pi"], jnp.asarray(padded),
+                jnp.asarray(self.idx[el.reshape(d, -1)].reshape(d, b, k)),
+                jnp.asarray(self.val[el.reshape(d, -1)].reshape(d, b, k)),
+                jnp.asarray(self.mask[padded]),
+                jnp.asarray(self.pi[padded]),
+            )
+            self._dev = dict(zip(("idx", "val", "mask", "pi"), new))
+            self._dev_pending.clear()
+        rows, offsets = _book_static_layout(
+            self.rows_cap, self.num_bundles, self.k_bound
+        )
+        return CSRAuctionProblem(
+            idx=self._dev["idx"],
+            val=self._dev["val"],
+            rows=rows,
+            offsets=offsets,
+            bundle_mask=self._dev["mask"],
+            pi=self._dev["pi"],
+            base_cost=jnp.asarray(self.base_cost),
+            supply_scale=jnp.asarray(self.supply_scale()),
+            num_resources=self.num_resources,
+            k_bound=self.k_bound,
+        )
+
+    # -- full-repack oracle -------------------------------------------------
+
+    def rebuilt(self) -> "MarketBook":
+        """From-scratch repack: every live account re-packed from its raw
+        submission into the *same slot* of a fresh zeroed book — the
+        ``packer="loop"`` analogue.  Dead slots stay zeroed, so any stale
+        element an incremental delete left behind shows up as a mismatch."""
+        fresh = MarketBook(
+            self.base_cost, self.num_bundles, self.k_bound, self.rows_cap
+        )
+        for s in range(self._next_slot):
+            key = self._slot_key[s]
+            if key is None:
+                continue
+            acct = self._accounts[key]
+            if len(acct) == 2:  # (bundles, pi) raw submission
+                row = fresh._pack_row(*acct)
+            else:  # pre-packed payload from upsert_rows
+                row = acct
+            fresh._key_slot[key] = s
+            fresh._slot_key[s] = key
+            fresh._accounts[key] = acct
+            b, k = fresh.num_bundles, fresh.k_bound
+            lo = s * b * k
+            fresh.idx[lo : lo + b * k] = np.asarray(row[0], np.int32).reshape(-1)
+            fresh.val[lo : lo + b * k] = np.asarray(row[1], np.float32).reshape(-1)
+            fresh.mask[s] = row[2]
+            fresh.pi[s] = row[3]
+            fresh._ledger += np.bincount(
+                np.asarray(row[0], np.int64).reshape(-1),
+                weights=np.abs(np.asarray(row[1], np.float64)).reshape(-1),
+                minlength=fresh.num_resources,
+            )
+        fresh._next_slot = self._next_slot
+        fresh._free = [s for s in range(self._next_slot) if self._slot_key[s] is None]
+        return fresh
+
+    def parity_check(self) -> None:
+        """Assert the incremental book is bit-identical to a full repack."""
+        oracle = self.rebuilt()
+        for name in ("idx", "val", "mask", "pi"):
+            a, b = getattr(self, name), getattr(oracle, name)
+            if not np.array_equal(a, b):
+                where = np.flatnonzero((a != b).reshape(-1))[:8]
+                raise AssertionError(
+                    f"incremental book diverged from full repack in {name!r} "
+                    f"at flat positions {where.tolist()}"
+                )
+        if not np.array_equal(self.supply_scale(), oracle.supply_scale()):
+            raise AssertionError(
+                "incremental supply_scale ledger diverged from full repack"
+            )
+
+
 def operator_supply_bids(
     pools: Sequence[ResourcePool],
     reserve_prices: np.ndarray,

@@ -54,9 +54,13 @@ def main(argv=None):
             t0 = time.time()
             logits = jax.jit(prefill)(params, {"tokens": prompt})
             logits.block_until_ready()
+            # the prefill's last-position logits are the first generated
+            # token's distribution — report it instead of discarding the pass
+            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
             print(
                 f"[serve] prefill {args.batch}x{args.prompt_len}: "
-                f"{time.time()-t0:.2f}s logits {logits.shape}",
+                f"{time.time()-t0:.2f}s logits {logits.shape} "
+                f"greedy next ids {nxt.tolist()}",
                 flush=True,
             )
 

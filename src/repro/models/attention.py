@@ -50,17 +50,27 @@ def attn_decls(
 
 
 def cache_write(cache: jax.Array, new: jax.Array, idx) -> jax.Array:
-    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at position idx.
+    """Write ``new`` (B, S, ...) into ``cache`` (B, T, ...) at [idx, idx+S).
 
-    Uses a one-hot select instead of dynamic_update_slice: a DUS with a
-    *dynamic* start on a sharded sequence dim forces the SPMD partitioner to
-    all-gather the whole cache (GBs per layer per token); the elementwise
-    select stays shard-local under any layout.
+    Uses a one-hot / windowed select instead of dynamic_update_slice: a DUS
+    with a *dynamic* start on a sharded sequence dim forces the SPMD
+    partitioner to all-gather the whole cache (GBs per layer per token); the
+    elementwise select stays shard-local under any layout.  ``S == 1`` is the
+    original per-token select; ``S > 1`` (one-shot chunked prefill) gathers
+    each in-window cache position's source token with a clipped take.
     """
     T = cache.shape[1]
-    hot = jnp.arange(T, dtype=jnp.int32) == idx
-    hot = hot.reshape((1, T) + (1,) * (cache.ndim - 2))
-    return jnp.where(hot, new.astype(cache.dtype), cache)
+    S = new.shape[1]
+    if S == 1:
+        hot = jnp.arange(T, dtype=jnp.int32) == idx
+        hot = hot.reshape((1, T) + (1,) * (cache.ndim - 2))
+        return jnp.where(hot, new.astype(cache.dtype), cache)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    within = (pos >= idx) & (pos < idx + S)
+    src = jnp.clip(pos - idx, 0, S - 1)
+    gathered = jnp.take(new.astype(cache.dtype), src, axis=1)
+    within = within.reshape((1, T) + (1,) * (cache.ndim - 2))
+    return jnp.where(within, gathered, cache)
 
 
 def _mask(

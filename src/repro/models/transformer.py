@@ -329,14 +329,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
 def decode_step(
     params: dict,
     cache: dict,
-    tokens: jax.Array,  # (B, 1)
-    idx: jax.Array,  # scalar int32 — current position
+    tokens: jax.Array,  # (B, S) — S=1 per-token decode, S>1 chunked prefill
+    idx: jax.Array,  # scalar int32 — position of tokens[:, 0]
     cfg: ModelConfig,
 ) -> tuple[jax.Array, dict]:
-    B = tokens.shape[0]
+    B, S = tokens.shape
     x = jnp.asarray(params["embed"])[tokens].astype(cfg.adt())
     x = shard(x, "batch", None, "act_embed")
-    q_pos = jnp.full((B, 1), idx, jnp.int32)
+    if S == 1:
+        q_pos = jnp.full((B, 1), idx, jnp.int32)
+    else:
+        # chunked prefill: S tokens at consecutive positions.  Not supported
+        # by the hybrid family's rolling-window recurrent decode (see
+        # serve.decode.generate, which keeps the per-token warmup there).
+        q_pos = jnp.broadcast_to(
+            (jnp.asarray(idx, jnp.int32) + jnp.arange(S, dtype=jnp.int32))[
+                None, :
+            ],
+            (B, S),
+        )
 
     def attn_block_step(c, lp, lc, use_moe):
         h = rmsnorm(c, lp["ln1"], cfg.norm_eps)

@@ -41,6 +41,12 @@ def sample_token(logits: jax.Array, key, temperature: float = 0.0) -> jax.Array:
     ].astype(jnp.int32)
 
 
+# families whose decode advances strictly one token at a time (griffin's
+# rolling-window attention state; the audio decoder): these keep the
+# per-token cache warmup instead of the chunked prefill
+_TOKEN_BY_TOKEN_FAMILIES = ("hybrid", "audio")
+
+
 def generate(
     params,
     cfg: ModelConfig,
@@ -49,7 +55,16 @@ def generate(
     temperature: float = 0.0,
     seed: int = 0,
 ):
-    """Prefill the prompt token-by-token (cache warmup), then decode max_new."""
+    """Seed the cache with ONE chunked prefill call, then decode max_new.
+
+    The whole prompt goes through ``decode_step`` as a single (B, S0) chunk
+    at ``idx=0`` — one dispatch instead of S0 — and its last-position logits
+    sample the first generated token.  Sampling keys match the old
+    token-by-token loop exactly (token at position ``i+1`` uses
+    ``fold_in(keys, i)``), so generations are reproducible across the two
+    schedules.  Families whose recurrent decode state only advances one
+    token at a time (hybrid, audio) keep the per-token warmup loop.
+    """
     api = get_api(cfg)
     B, S0 = prompt.shape
     cache = api.init_cache(cfg, B, S0 + max_new)
@@ -57,21 +72,44 @@ def generate(
 
     step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i, cfg))
 
+    if cfg.family in _TOKEN_BY_TOKEN_FAMILIES:
+        def warm(i, state):
+            cache, toks, cur = state
+            logits, cache = step(params, cache, cur, i)
+            in_prompt = i + 1 < S0
+            nxt = jnp.where(
+                in_prompt,
+                jax.lax.dynamic_slice_in_dim(
+                    toks, jnp.minimum(i + 1, S0 + max_new - 1), 1, 1
+                ),
+                sample_token(logits, jax.random.fold_in(keys, i), temperature),
+            )
+            toks = jax.lax.dynamic_update_slice_in_dim(toks, nxt, i + 1, 1)
+            return cache, toks, nxt
+
+        toks = jnp.concatenate(
+            [prompt, jnp.zeros((B, max_new), jnp.int32)], axis=1
+        )
+        cache, toks, first = jax.lax.fori_loop(
+            0, S0, warm, (cache, toks, prompt[:, :1])
+        )
+    else:
+        logits, cache = step(params, cache, prompt, 0)
+        first = sample_token(
+            logits, jax.random.fold_in(keys, S0 - 1), temperature
+        )
+        toks = jnp.concatenate(
+            [prompt, first, jnp.zeros((B, max_new - 1), jnp.int32)], axis=1
+        )
+
     def body(i, state):
         cache, toks, cur = state
         logits, cache = step(params, cache, cur, i)
-        in_prompt = i + 1 < S0
-        nxt = jnp.where(
-            in_prompt,
-            jax.lax.dynamic_slice_in_dim(toks, jnp.minimum(i + 1, S0 + max_new - 1), 1, 1),
-            sample_token(logits, jax.random.fold_in(keys, i), temperature),
-        )
+        nxt = sample_token(logits, jax.random.fold_in(keys, i), temperature)
         toks = jax.lax.dynamic_update_slice_in_dim(toks, nxt, i + 1, 1)
         return cache, toks, nxt
 
-    toks = jnp.concatenate(
-        [prompt, jnp.zeros((B, max_new), jnp.int32)], axis=1
+    cache, toks, _ = jax.lax.fori_loop(
+        S0, S0 + max_new - 1, body, (cache, toks, first)
     )
-    state = (cache, toks, prompt[:, :1])
-    cache, toks, _ = jax.lax.fori_loop(0, S0 + max_new - 1, body, state)
     return toks

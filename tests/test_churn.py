@@ -1,0 +1,216 @@
+"""Churn round-trips: arrivals / departures / bid updates interleaved with
+epochs, across every execution path.
+
+The always-on service makes population churn a steady-state condition, not
+an edge case, so this suite pins the churn paths the same way the parity
+suites pin the packers: staged vs fused EpochStats stay bit-identical under
+interleaved add/remove churn (with warm starts, policies, and faults in
+play), per-agent side state (``_reach_keys``, ``fill_rate``) stays
+row-aligned through removals, the fused device mirrors re-sync after every
+mutation (``_state_dirty``), and the ``fused_slack`` capacity padding
+reuses one compiled program across bounded churn while staying float-close
+to the unpadded program.  Seeds 0/3/7 × 4 epochs, per the roadmap's parity
+protocol.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.economy import make_fleet_economy
+from repro.core.faults import FaultModel
+from repro.core.markets import fleet_population
+from repro.core.policies import (
+    BudgetSmoothingPolicy,
+    PriceChasingPolicy,
+    StaticPolicy,
+)
+
+SEEDS = (0, 3, 7)
+EPOCHS = 4
+
+
+def _stats_equal(sa, sb):
+    da, db = dataclasses.asdict(sa), dataclasses.asdict(sb)
+    assert da.keys() == db.keys()
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, np.ndarray):
+            assert va.shape == vb.shape, k
+            assert np.array_equal(va, vb), k  # bitwise, not approx
+        elif isinstance(va, float) and np.isnan(va):
+            assert isinstance(vb, float) and np.isnan(vb), k
+        else:
+            assert va == vb, (k, va, vb)
+
+
+def _churn(eco, seed, epoch):
+    """One deterministic churn step: epoch 1 removes, epoch 2 adds (a mix of
+    placed and unplaced arrivals), epoch 3 does both."""
+    if epoch in (1, 3):
+        keep = np.ones(len(eco.pop), bool)
+        keep[(epoch + 1) :: 7] = False
+        keep[0] = True  # never empty the economy
+        eco.remove_agents(~keep)
+    if epoch in (2, 3):
+        eco.add_agents(
+            fleet_population(5, eco.C, seed=seed + 100 + epoch, placed_frac=0.0)
+        )
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_churn_staged_vs_fused_bit_identical(seed):
+    """Interleaved churn × epochs: the fused program (rebuilding as N
+    changes) matches the staged path stat-for-stat, bitwise."""
+    kw = dict(warm_start=True)
+    a = make_fleet_economy(seed=seed, **kw)
+    b = make_fleet_economy(seed=seed, fused=True, **kw)
+    for epoch in range(EPOCHS):
+        _churn(a, seed, epoch)
+        _churn(b, seed, epoch)
+        _stats_equal(a.run_epoch(), b.run_epoch())
+    np.testing.assert_array_equal(a.usage, b.usage)
+    np.testing.assert_array_equal(a.pop.placed, b.pop.placed)
+    np.testing.assert_array_equal(a._agent_uid, b._agent_uid)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_churn_with_policies_and_faults(seed):
+    """Churn under the full perturbation stack — mixed bidder policies plus
+    bid-dropout faults — keeps staged/fused parity and the churn telemetry
+    identical on both paths."""
+    kw = dict(
+        policies=[StaticPolicy(), PriceChasingPolicy(), BudgetSmoothingPolicy()],
+        faults=FaultModel(seed=seed, bid_dropout=0.1),
+        warm_start=True,
+    )
+    a = make_fleet_economy(seed=seed, **kw)
+    b = make_fleet_economy(seed=seed, fused=True, **kw)
+    # saturate one cluster so epoch-2 placed arrivals exercise the explicit
+    # rejection path (arrivals_rejected telemetry) on both executions
+    for eco in (a, b):
+        eco.usage[0] = eco.capacity[0]
+    for epoch in range(EPOCHS):
+        for eco in (a, b):
+            _churn(eco, seed, epoch)
+            if epoch == 2:
+                arrivals = fleet_population(
+                    3, eco.C, seed=seed + 200, home=0, placed_frac=1.0
+                )
+                arrivals = dataclasses.replace(
+                    arrivals, req=np.full((3, eco.T), 1e9)  # can never fit
+                )
+                assert eco.add_agents(arrivals) == 0
+        sa, sb = a.run_epoch(), b.run_epoch()
+        _stats_equal(sa, sb)
+        if epoch == 2:
+            assert sa.arrivals_rejected == 3
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_churn_dry_run_interleaved(seed):
+    """A dry run right after churn must not perturb the binding epoch, and
+    must report (without consuming) the pending churn telemetry."""
+    a = make_fleet_economy(seed=seed, warm_start=True)
+    b = make_fleet_economy(seed=seed, warm_start=True, fused=True)
+    for epoch in range(EPOCHS):
+        _churn(a, seed, epoch)
+        _churn(b, seed, epoch)
+        da, db = a.run_epoch(dry_run=True), b.run_epoch(dry_run=True)
+        _stats_equal(da, db)
+        _stats_equal(a.run_epoch(), b.run_epoch())
+    np.testing.assert_array_equal(a.pop.placed, b.pop.placed)
+
+
+def test_reach_keys_and_fill_rate_stay_row_aligned():
+    """Removal compacts the population; every per-agent side array must be
+    selected by the same mask or later epochs read another agent's state."""
+    eco = make_fleet_economy(
+        seed=1, warm_start=True,
+        policies=[StaticPolicy(), PriceChasingPolicy()],
+    )
+    eco.run_epoch()
+    eco.run_epoch()
+    assert eco._reach_keys is not None  # policies store sticky reach
+    rk = eco._reach_keys.copy()
+    fr = eco.pop.fill_rate.copy()
+    uid = eco._agent_uid.copy()
+    keep = np.ones(len(eco.pop), bool)
+    keep[1::3] = False
+    eco.remove_agents(~keep)
+    np.testing.assert_array_equal(eco._reach_keys, rk[keep])  # NaN-safe
+    np.testing.assert_array_equal(eco.pop.fill_rate, fr[keep])
+    np.testing.assert_array_equal(eco._agent_uid, uid[keep])
+    added = fleet_population(4, eco.C, seed=9, placed_frac=0.0)
+    eco.add_agents(added)
+    assert np.isnan(eco._reach_keys[-4:]).all()  # fresh draw forced
+    eco.run_epoch()  # and the next epoch still runs clean
+
+
+def test_state_dirty_resyncs_fused_mirrors():
+    """Every churn mutation flags the device mirrors stale; the next fused
+    epoch rebuilds them at the new population size."""
+    eco = make_fleet_economy(seed=2, fused=True)
+    eco.run_epoch()
+    assert not eco._state_dirty
+    eco.add_agents(fleet_population(4, eco.C, seed=5, placed_frac=0.0))
+    assert eco._state_dirty
+    eco.run_epoch()
+    assert not eco._state_dirty
+    assert len(eco._device_state.placed) == eco._fused_n
+    keep = np.ones(len(eco.pop), bool)
+    keep[::6] = False
+    eco.remove_agents(~keep)
+    assert eco._state_dirty
+    eco.run_epoch()
+    assert len(eco._device_state.placed) == eco._fused_n
+
+
+def test_fused_slack_reuses_one_program_across_churn():
+    """With ``fused_slack`` the agent axis pads to a power of two, so bounded
+    churn keeps the compiled program (same capacity → same shapes) and the
+    settlement stays float-close to the unpadded program."""
+    a = make_fleet_economy(seed=0, fused=True)
+    b = make_fleet_economy(seed=0, fused=True, fused_slack=True)
+    cap0 = b._fused_cap()
+    assert cap0 >= len(b.pop) and cap0 & (cap0 - 1) == 0
+    for epoch in range(3):
+        if epoch == 1:
+            for eco in (a, b):
+                keep = np.ones(len(eco.pop), bool)
+                keep[::9] = False
+                eco.remove_agents(~keep)
+                eco.add_agents(
+                    fleet_population(3, eco.C, seed=11, placed_frac=0.0)
+                )
+        sa, sb = a.run_epoch(), b.run_epoch()
+        np.testing.assert_allclose(sb.prices, sa.prices, rtol=1e-5, atol=1e-5)
+        assert sb.converged == sa.converged
+        assert sb.system_ok
+    # churn stayed under the padded capacity: no regrowth, no reshape
+    assert b._fused_cap() == cap0
+    np.testing.assert_allclose(b.usage, a.usage, rtol=1e-5, atol=1e-4)
+
+
+def test_fused_slack_requires_fused():
+    with pytest.raises(ValueError, match="fused_slack"):
+        make_fleet_economy(seed=0, fused_slack=True)
+
+
+def test_uids_are_stable_across_interleaved_churn():
+    """uids never recycle and always map back to rows via searchsorted —
+    the invariant the O(Δ) bid-delta bridge rests on."""
+    eco = make_fleet_economy(seed=0)
+    seen = set(eco._agent_uid.tolist())
+    for epoch in range(EPOCHS):
+        _churn(eco, 0, epoch)
+        fresh = set(eco._agent_uid.tolist()) - seen
+        assert all(u >= max(seen) or u in seen for u in fresh)
+        seen |= fresh
+        assert (np.diff(eco._agent_uid) > 0).all()  # strictly increasing
+        eco.run_epoch()
+    # dirty uids accumulated by churn/policies always resolve to live rows
+    dirty = np.array(sorted(eco._dirty_uids), dtype=np.int64)
+    if dirty.size:
+        idx = np.searchsorted(eco._agent_uid, dirty)
+        np.testing.assert_array_equal(eco._agent_uid[idx], dirty)

@@ -50,6 +50,17 @@ def test_market_sim_scenario_smoke():
     assert m and int(m.group(1)) > 0, out.stdout
 
 
+def test_market_service_demo_smoke():
+    out = _run_example(
+        "market_service_demo.py", "--agents", "300", "--ticks", "3",
+        "--seed", "0",
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "churn synced" in out.stdout
+    assert "incremental book bit-identical to full repack: True" in out.stdout
+    assert "SYSTEM ok=True" in out.stdout
+
+
 def test_market_sim_lists_scenarios():
     out = _run_example("market_sim.py", "--list-scenarios")
     assert out.returncode == 0, out.stdout + "\n" + out.stderr

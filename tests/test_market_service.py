@@ -1,0 +1,339 @@
+"""Always-on MarketService: streaming ingestion, backpressure, and the
+incremental-book ↔ full-repack parity oracle, plus the churn-path
+conservation bugfixes.
+
+The service's persistent :class:`~repro.core.MarketBook` applies every delta
+as an O(B·K) row write and flushes only changed slots to the device; the
+from-scratch repack (``MarketBook.rebuilt``) survives as the parity oracle,
+exactly as ``packer="loop"`` does for the vectorized epoch packer.  The
+pinned suite here interleaves submits, withdrawals, binding ticks, dry-run
+previews, and fault overlays across seeds 0/3/7 and asserts the incremental
+book stays bit-identical to its oracle after every step.
+
+The conservation tests pin the ``add_agents`` / ``remove_agents`` bugfixes:
+an arrival whose placement does not fit is now rejected explicitly
+(``placed = -1`` + EpochStats counters) instead of silently clamping usage,
+and a release shortfall is counted instead of vanishing into the floor.
+These tests FAIL against the old clamping behavior.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.economy import make_fleet_economy
+from repro.core.faults import FaultModel
+from repro.core.markets import fleet_economy, fleet_population
+from repro.serve.market import BidDelta, MarketService
+
+SEEDS = (0, 3, 7)
+
+
+def _tiny_service(**kw):
+    """4-resource book, no economy attached — ingestion unit tests."""
+    kw.setdefault("rows_cap", 8)
+    return MarketService(np.ones(4, np.float32), num_bundles=2, k_bound=2, **kw)
+
+
+def _bid(key, q=1.0, pi=5.0):
+    return BidDelta(key, [([0, 1], [q, 2.0 * q])], [pi])
+
+
+# -- ingestion front end ------------------------------------------------------
+
+
+def test_submit_validates_and_counts_rejections():
+    svc = _tiny_service()
+    assert svc.submit(_bid("a"))
+    assert not svc.submit(BidDelta("bad-pool", [([9], [1.0])], [5.0]))
+    assert not svc.submit(BidDelta("bad-pi", [([0], [1.0])], [np.nan]))
+    assert not svc.submit(BidDelta("no-bundles", [], [5.0]))
+    assert svc.pending == 1
+    s = svc.tick()
+    assert s.bids_submitted == 1
+    assert s.bids_rejected == 3
+    assert svc.tick().bids_rejected == 0  # binding tick consumed the counter
+
+
+def test_submit_rejects_oversized_quantity():
+    svc = _tiny_service(max_quantity=10.0)
+    assert not svc.submit(_bid("whale", q=1e8))
+    assert svc.submit(_bid("ok", q=5.0))
+    assert svc.tick().bids_rejected == 1
+
+
+def test_backpressure_defers_fresh_keys_only():
+    svc = _tiny_service(max_pending=2)
+    assert svc.submit(_bid("a"))
+    assert svc.submit(_bid("b"))
+    assert not svc.submit(_bid("c"))  # fresh key over the cap -> deferred
+    assert svc.submit(_bid("a", pi=6.0))  # updating a queued key always lands
+    s = svc.tick()
+    assert s.bids_deferred == 1
+    assert s.bids_submitted == 2
+
+
+def test_pending_last_write_wins():
+    svc = _tiny_service()
+    svc.submit(_bid("a", pi=5.0))
+    svc.submit(_bid("a", pi=7.0))
+    s = svc.tick()
+    assert s.bids_submitted == 1
+    slot = svc.book._key_slot["a"]
+    assert float(svc.book.pi[slot, 0]) == 7.0
+    svc.book.parity_check()
+
+
+def test_withdraw_cancels_unsettled_submission():
+    svc = _tiny_service()
+    svc.submit(_bid("a"))
+    assert svc.withdraw("a")  # cancels the queued submit outright
+    assert svc.pending == 0
+    s = svc.tick()
+    assert "a" not in svc.book
+    assert s.bids_submitted == 0 and s.bids_withdrawn == 0
+
+
+def test_withdraw_unknown_key_rejected():
+    svc = _tiny_service()
+    assert not svc.withdraw("ghost")
+    assert svc.tick().bids_rejected == 1
+
+
+def test_withdraw_settled_key_removes_row():
+    svc = _tiny_service()
+    svc.submit(_bid("a"))
+    svc.submit(_bid("b"))
+    svc.tick()
+    assert svc.withdraw("a")
+    s = svc.tick()
+    assert s.bids_withdrawn == 1
+    assert "a" not in svc.book and "b" in svc.book
+    svc.book.parity_check()
+
+
+def test_poll_prices_reserve_before_first_tick():
+    svc = _tiny_service()
+    p, epoch = svc.poll_prices()
+    np.testing.assert_array_equal(p, svc.reserve.astype(np.float32))
+    assert epoch == -1
+    svc.submit(_bid("a"))
+    s = svc.tick()
+    p, epoch = svc.poll_prices()
+    np.testing.assert_array_equal(p, s.prices)
+    assert epoch == 0
+
+
+def test_preview_is_side_effect_free():
+    svc = _tiny_service()
+    svc.submit(_bid("a"))
+    svc.tick()
+    svc.submit(_bid("b"))
+    before = (svc.pending, svc.epoch, len(svc.price_history))
+    s1, s2 = svc.preview(), svc.preview()
+    assert (svc.pending, svc.epoch, len(svc.price_history)) == before
+    assert "b" not in svc.book  # pending deltas stay queued
+    np.testing.assert_array_equal(s1.prices, s2.prices)
+    assert s1.bids_submitted == 0
+    assert svc.tick().bids_submitted == 1  # the queued delta lands later
+
+
+# -- incremental book == full repack, pinned ---------------------------------
+
+
+def _assert_matches_oracle(svc):
+    """The incremental book must be bit-identical to a from-scratch repack."""
+    svc.book.parity_check()
+    fresh = svc.book.rebuilt()
+    pa, pb = svc.book.problem(), fresh.problem()
+    for f in ("idx", "val", "bundle_mask", "pi", "supply_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pa, f)), np.asarray(getattr(pb, f)), err_msg=f
+        )
+
+
+def _settlement_fields_equal(sa, sb):
+    """EpochStats equality over the settlement outcome (the ingestion
+    counters legitimately differ between a drained and a pre-built book)."""
+    skip = {"bids_submitted", "bids_withdrawn", "bids_rejected", "bids_deferred"}
+    da, db = dataclasses.asdict(sa), dataclasses.asdict(sb)
+    for k, va in da.items():
+        if k in skip:
+            continue
+        vb = db[k]
+        if isinstance(va, np.ndarray):
+            assert va.shape == vb.shape and np.array_equal(va, vb), k
+        elif isinstance(va, float) and np.isnan(va):
+            assert np.isnan(vb), k
+        else:
+            assert va == vb, (k, va, vb)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_incremental_book_bit_identical_under_interleaving(seed):
+    """Arbitrary interleavings of deltas / ticks / previews / faults keep the
+    incremental book bit-identical to the full repack, and each binding tick
+    settles exactly like a twin service running on the rebuilt book."""
+    eco = fleet_economy(60, 3, seed=seed)
+    svc = MarketService.from_economy(
+        eco, faults=FaultModel(bid_dropout=0.25, seed=seed)
+    )
+    keys, idx_rows, val_rows, mask_rows, pi_rows = eco.export_bid_rows()
+    live = np.flatnonzero(mask_rows.any(axis=1))
+    rng = np.random.default_rng(seed)
+    for step in range(4):
+        pick = rng.choice(live, size=6, replace=False)
+        for j, i in enumerate(pick):
+            bundles = [
+                (idx_rows[i, b], val_rows[i, b])
+                for b in np.flatnonzero(mask_rows[i])
+            ]
+            svc.submit(
+                BidDelta(
+                    keys[i], bundles,
+                    pi_rows[i][mask_rows[i]] * (0.9 + 0.05 * j),
+                )
+            )
+        if step == 2:
+            svc.submit(BidDelta(keys[pick[0]], None))  # withdraw via delta
+        svc.preview()
+        # a twin on the repacked book, warm-started identically, must settle
+        # bit-identically (the fault overlay is counter-based on the epoch)
+        svc._drain()
+        twin = MarketService(
+            svc.book.base_cost, svc.book.num_bundles, svc.book.k_bound,
+            reserve=svc.reserve, clock=svc.clock,
+            settle_blocks=svc.settle_blocks, rows_cap=svc.book.rows_cap,
+            faults=svc.faults,
+        )
+        twin.book = svc.book.rebuilt()
+        twin.epoch = svc.epoch
+        twin.price_history = [p.copy() for p in svc.price_history]
+        _settlement_fields_equal(svc.tick(), twin.tick())
+        _assert_matches_oracle(svc)
+    assert svc.epoch == 4
+    assert svc.poll_prices()[1] == 3
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sync_from_economy_is_o_delta_and_exact(seed):
+    """Churning the economy and draining its dirty-uid deltas leaves the
+    book's agent rows exactly equal to a fresh full export."""
+    eco = fleet_economy(50, 3, seed=seed)
+    svc = MarketService.from_economy(eco)
+    keep = np.ones(len(eco.pop), bool)
+    keep[::5] = False
+    gone_uids = eco._agent_uid[~keep]
+    eco.remove_agents(~keep)
+    eco.add_agents(fleet_population(7, eco.C, seed=seed + 1, placed_frac=0.0))
+    ups, wd = svc.sync_from_economy(eco)
+    assert wd == len(gone_uids)
+    assert ups >= 7  # at least the arrivals were re-exported
+    for u in gone_uids:
+        assert f"agent-{u}" not in svc.book
+    fkeys, fi, fv, fm, fp = eco.export_bid_rows()
+    for j, k in enumerate(fkeys):
+        assert k in svc.book
+        s = svc.book._key_slot[k]
+        np.testing.assert_array_equal(svc.book.mask[s], fm[j], err_msg=k)
+        np.testing.assert_array_equal(svc.book.pi[s], fp[j], err_msg=k)
+    _assert_matches_oracle(svc)
+    # a second drain with no churn is empty — the export is change-driven
+    assert svc.sync_from_economy(eco) == (0, 0)
+
+
+# -- churn-path conservation bugfixes ----------------------------------------
+
+
+def test_arrival_rejected_when_cluster_full():
+    """A placed arrival that does not fit is rejected explicitly (placed=-1,
+    EpochStats counters) — the old code silently clamped usage to capacity
+    and left the agent 'placed' on resources that do not exist."""
+    eco = make_fleet_economy(seed=0, num_agents=8)
+    eco.usage[:] = eco.capacity  # saturate every pool
+    before = eco.usage.copy()
+    n0 = len(eco.pop)
+    arrivals = fleet_population(5, eco.C, seed=1, home=0, placed_frac=1.0)
+    assert (arrivals.placed == 0).all()
+    accepted = eco.add_agents(arrivals)
+    assert accepted == 0
+    np.testing.assert_array_equal(eco.usage, before)
+    assert (eco.pop.placed[n0:] == -1).all()  # fails on the old silent clamp
+    s = eco.run_epoch()
+    assert s.arrivals_rejected == 5
+    assert s.arrival_units_rejected == pytest.approx(float(arrivals.req.sum()))
+    assert eco.run_epoch().arrivals_rejected == 0  # binding epoch consumed it
+
+
+def test_arrival_partial_first_fit_admission():
+    """When a cluster can seat only part of an arriving cohort, admission is
+    first-fit in arrival order: earlier arrivals seat, later ones join the
+    market unplaced, and usage lands exactly at capacity — never beyond."""
+    eco = make_fleet_economy(seed=0, num_agents=8)
+    arrivals = fleet_population(4, eco.C, seed=2, home=0, placed_frac=1.0)
+    arrivals = dataclasses.replace(
+        arrivals, req=np.full((4, eco.T), 8.0)  # exact float arithmetic
+    )
+    eco.usage[:] = eco.capacity
+    eco.usage[0] = eco.capacity[0] - 16.0  # room for exactly two arrivals
+    n0 = len(eco.pop)
+    accepted = eco.add_agents(arrivals)
+    assert accepted == 2
+    np.testing.assert_array_equal(eco.pop.placed[n0:], [0, 0, -1, -1])
+    np.testing.assert_array_equal(eco.usage, eco.capacity)
+    s = eco.run_epoch()
+    assert s.arrivals_rejected == 2
+    assert s.arrival_units_rejected == pytest.approx(2 * 8.0 * eco.T)
+
+
+def test_arrival_dry_run_reports_without_consuming():
+    eco = make_fleet_economy(seed=0, num_agents=8)
+    eco.usage[:] = eco.capacity
+    eco.add_agents(fleet_population(3, eco.C, seed=3, home=0, placed_frac=1.0))
+    assert eco.run_epoch(dry_run=True).arrivals_rejected == 3
+    assert eco.run_epoch().arrivals_rejected == 3  # still there for binding
+    assert eco.run_epoch().arrivals_rejected == 0
+
+
+def test_whole_cohort_admitted_when_it_fits():
+    """The vectorized fast path: a cohort whose total influx fits is
+    admitted wholesale, and usage grows by exactly the cohort's demand."""
+    eco = make_fleet_economy(seed=0, num_agents=8)
+    eco.usage[:] = 0.0
+    arrivals = fleet_population(6, eco.C, seed=4, home=2, placed_frac=1.0)
+    arrivals = dataclasses.replace(
+        arrivals, req=np.full((6, eco.T), 1.0)  # certainly fits, exactly
+    )
+    before = eco.usage.copy()
+    assert eco.add_agents(arrivals) == 6
+    expect = before.copy()
+    expect[2] += arrivals.req.sum(axis=0)
+    np.testing.assert_allclose(eco.usage, expect, rtol=0, atol=1e-9)
+    assert eco.run_epoch().arrivals_rejected == 0
+
+
+def test_release_shortfall_counted_not_silent():
+    """Freeing more than a pool holds (phantom usage) is still floored at
+    zero, but the absorbed units are now surfaced in EpochStats."""
+    eco = make_fleet_economy(seed=0, num_agents=12)
+    held = np.flatnonzero(eco.pop.placed >= 0)
+    assert held.size
+    i = int(held[0])
+    req_sum = float(eco.pop.req[i].sum())
+    eco.usage[:] = 0.0  # the leaver's claim no longer exists
+    mask = np.zeros(len(eco.pop), bool)
+    mask[i] = True
+    eco.remove_agents(mask)
+    assert (eco.usage >= 0.0).all()
+    s = eco.run_epoch()
+    assert s.release_shortfall_units == pytest.approx(req_sum)
+    assert eco.run_epoch().release_shortfall_units == 0.0
+
+
+def test_normal_release_has_no_shortfall():
+    eco = make_fleet_economy(seed=0, num_agents=12)
+    held = np.flatnonzero(eco.pop.placed >= 0)
+    mask = np.zeros(len(eco.pop), bool)
+    mask[held[0]] = True
+    eco.remove_agents(mask)
+    assert eco.run_epoch().release_shortfall_units == 0.0
