@@ -821,6 +821,110 @@ def market_serve():
     return p99_by_churn[0.01], round(speedup, 1)
 
 
+def market_recover():
+    """Durable market service (ISSUE 9 tentpole): WAL ingestion overhead and
+    crash-recovery wall time at a 100k-row book.  Measures the per-submit
+    cost of the journaled path (default "flush" mode, asserted < 2x the
+    no-WAL submit path, plus the optional per-append-fsync mode for the
+    power-failure-durability trade-off), the tick-boundary checkpoint cost,
+    and full recovery wall time (restore latest checkpoint + replay the WAL
+    tail through validation).  us_per_call: recovery wall.  derived: WAL-on
+    ingestion overhead ratio (asserted < 2x)."""
+    import shutil
+    import tempfile
+
+    from repro.core.markets import fleet_economy
+    from repro.serve.market import BidDelta, MarketService
+
+    n = int(os.environ.get("MARKET_RECOVER_AGENTS", 100_000))
+    tail = int(os.environ.get("MARKET_RECOVER_TAIL", 5_000))
+    eco = fleet_economy(n, 6, seed=0)
+    d = tempfile.mkdtemp(prefix="market_recover_")
+    try:
+        kw = dict(
+            wal_path=os.path.join(d, "market.wal"),
+            checkpoint_dir=os.path.join(d, "ckpt"),
+        )
+        t0 = time.perf_counter()
+        svc = MarketService.from_economy(eco, **kw)
+        load_s = time.perf_counter() - t0
+        print(
+            f"# market_recover: {svc.book.num_rows} rows bulk-loaded + "
+            f"bootstrap checkpoint in {load_s:.2f}s",
+            file=sys.stderr,
+        )
+        keys, idx_rows, val_rows, mask_rows, pi_rows = eco.export_bid_rows()
+        live = np.flatnonzero(mask_rows.any(axis=1))
+        rng = np.random.default_rng(0)
+
+        def deltas(count, salt):
+            pick = rng.choice(live, size=min(count, live.size), replace=False)
+            out = []
+            for j, i in enumerate(pick):
+                bundles = [
+                    (idx_rows[i, b], val_rows[i, b])
+                    for b in np.flatnonzero(mask_rows[i])
+                ]
+                out.append(BidDelta(
+                    keys[i], bundles,
+                    pi_rows[i][mask_rows[i]] * (0.95 + 0.001 * ((j + salt) % 100)),
+                ))
+            return out
+
+        def time_ingest(batch):
+            t0 = time.perf_counter()
+            for dl in batch:
+                svc.submit(dl)
+            return (time.perf_counter() - t0) / len(batch) * 1e6
+
+        # -- WAL ingestion overhead vs the bare submit path ------------------
+        # same service, same book, same pending state: detach the WAL for the
+        # baseline so the ONLY difference is the journaled write
+        us_wal = time_ingest(deltas(tail, 0))
+        wal = svc._wal
+        svc._wal = None
+        us_bare = time_ingest(deltas(tail, 1))
+        svc._wal = wal
+        overhead = us_wal / max(us_bare, 1e-9)
+        # per-append fsync mode: power-failure durable, priced separately
+        wal.sync_mode = "fsync"
+        us_fsync = time_ingest(deltas(200, 2))
+        wal.sync_mode = "flush"
+
+        # -- tick-boundary commit: settle + checkpoint + WAL compaction ------
+        t0 = time.perf_counter()
+        svc.tick()
+        tick_s = time.perf_counter() - t0
+
+        # -- crash + recovery: restore checkpoint, replay the WAL tail -------
+        for dl in deltas(tail, 3):
+            svc.submit(dl)
+        pend = svc.pending
+        del svc  # hard drop: no drain, no checkpoint
+        t0 = time.perf_counter()
+        svc = MarketService.from_economy(eco, **kw)
+        recover_s = time.perf_counter() - t0
+        assert svc.restored_step is not None, "recovery never found a checkpoint"
+        assert svc.pending == pend, (
+            f"recovery lost pending bids: {svc.pending} != {pend}"
+        )
+        svc.book.parity_check()  # the recovered book must match its oracle
+
+        print(
+            f"# market_recover: submit {us_bare:.1f} us bare, {us_wal:.1f} us "
+            f"WAL(flush) = {overhead:.2f}x, {us_fsync:.0f} us WAL(fsync); "
+            f"commit tick {tick_s:.2f}s; recovery "
+            f"{recover_s * 1e3:.0f} ms ({svc.replayed_records} records replayed)",
+            file=sys.stderr,
+        )
+        assert overhead < 2.0, (
+            f"WAL ingestion overhead {overhead:.2f}x >= 2x the no-WAL path"
+        )
+        return recover_s * 1e6, round(overhead, 2)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def roofline_summary():
     """§Roofline — aggregate the dry-run matrix artifacts.
     derived: count of single-pod cells whose compile succeeded."""
@@ -863,6 +967,7 @@ BENCHES = {
     "bid_eval_sparse": bid_eval_sparse,
     "bid_eval_csr": bid_eval_csr,
     "market_serve": market_serve,
+    "market_recover": market_recover,
     "roofline_summary": roofline_summary,
 }
 
@@ -909,7 +1014,7 @@ def _load_records(path: str) -> list:
 # env knobs that reshape a benchmark's workload — any of these being set means
 # the numbers are not comparable to a run without them, so they go in the
 # record's identity stamp
-_WORKLOAD_ENV_PREFIXES = ("ECONOMY_EPOCH_", "MARKET_SERVE_")
+_WORKLOAD_ENV_PREFIXES = ("ECONOMY_EPOCH_", "MARKET_SERVE_", "MARKET_RECOVER_")
 
 
 def _workload() -> dict:

@@ -1,0 +1,217 @@
+"""Crash-recoverable market *service* state (tick-boundary checkpointing).
+
+:class:`ServiceCheckpointer` is the :class:`~repro.checkpoint.market.
+MarketCheckpointer` pattern applied to the always-on
+:class:`~repro.serve.market.MarketService`: at every binding tick boundary
+it persists the full mutable service state through the generic atomic
+manifest+npz layout, so a killed service resumes bit-identically:
+
+* the complete :class:`~repro.core.types.MarketBook` mutable state — slot
+  arrays, both exact f64 ledgers, key↔slot maps, freelist order,
+  generation, and the raw account submissions behind the ``rebuilt()``
+  oracle (``MarketBook.export_state``; restore runs ``parity_check()`` so
+  a corrupt restore is caught before it serves a single price),
+* the settled price history ring (warm-start seed + ``poll_prices``) and
+  the EpochStats history ring (array fields stacked per-field, scalars in
+  the JSON manifest),
+* the epoch counter, ingestion backpressure counters, operator-row key
+  set, and the :class:`~repro.serve.market.ServiceHealth` state machine,
+* the WAL byte offset at checkpoint time — recovery replays only records
+  past this offset, so a crash *between* checkpoint and log compaction
+  cannot double-apply a drained delta.
+
+Recovery = restore latest checkpoint + replay the WAL tail through the
+service's unchanged validation path; the fault stream needs no
+persistence (counter-based on the epoch index, exactly like the economy's
+checkpointer).  Restore reads the npz directly rather than through
+``Checkpointer.restore`` — that path re-device_puts every leaf, and with
+x64 disabled JAX would silently truncate the book's float64 ledgers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+
+import numpy as np
+
+from ..core.economy import EpochStats
+from ..core.types import MarketBook
+from .checkpoint import Checkpointer
+
+# EpochStats fields that are numpy arrays (stacked across the history ring);
+# everything else is a JSON scalar.  Derived once from the dataclass so a new
+# field cannot silently fall through the encoding.
+_STATS_FIELDS = [f.name for f in dataclasses.fields(EpochStats)]
+_STATS_ARRAY_FIELDS = (
+    "prices",
+    "reserve",
+    "psi",
+    "price_ratio",
+    "buy_util_percentiles",
+    "sell_util_percentiles",
+)
+
+
+class ServiceCheckpointer:
+    """Persist/restore full mutable MarketService state at tick boundaries."""
+
+    def __init__(self, directory: str, keep: int = 2):
+        self.ckpt = Checkpointer(directory)
+        # an always-on service checkpoints every tick forever; retain only
+        # the newest ``keep`` steps (>= 2 so a crash mid-save of step N can
+        # still fall back to step N-1)
+        self.keep = max(int(keep), 1)
+
+    # -- write ----------------------------------------------------------------
+
+    def _stats_tree(self, history: list[EpochStats]) -> dict[str, np.ndarray]:
+        tree = {}
+        for name in _STATS_ARRAY_FIELDS:
+            if history:
+                tree[f"stats/{name}"] = np.stack(
+                    [np.asarray(getattr(s, name)) for s in history]
+                )
+            else:
+                tree[f"stats/{name}"] = np.zeros((0, 0))
+        return tree
+
+    def save(self, svc, block: bool = True) -> int:
+        """Checkpoint at the current tick boundary; returns the step.
+
+        The step is ``svc.epoch`` — the number of binding ticks committed —
+        so one checkpoint per tick, and ``restore_latest`` resumes from the
+        newest boundary.  ``wal_offset`` records how much of the WAL the
+        checkpointed book already incorporates."""
+        step = int(svc.epoch)
+        book_arrays, book_meta = svc.book.export_state()
+        tree = {f"book/{k}": v for k, v in book_arrays.items()}
+        tree["reserve"] = svc.reserve
+        tree["price_history"] = (
+            np.stack(svc.price_history)
+            if svc.price_history
+            else np.zeros((0, svc.book.num_resources), np.float32)
+        )
+        tree.update(self._stats_tree(svc.stats_history))
+        scalars = [
+            {
+                name: _jsonable(getattr(s, name))
+                for name in _STATS_FIELDS
+                if name not in _STATS_ARRAY_FIELDS
+            }
+            for s in svc.stats_history
+        ]
+        meta = {
+            "book": book_meta,
+            "epoch": step,
+            "rejected": int(svc._rejected),
+            "deferred": int(svc._deferred),
+            "last_price_epoch": int(svc._last_price_epoch),
+            "operator_keys": sorted(svc._operator_keys),
+            "health": dataclasses.asdict(svc.health),
+            "stats_scalars": scalars,
+            "wal_offset": (
+                int(svc._wal_drained_offset) if svc._wal is not None else 0
+            ),
+            "wal_generation": (
+                int(svc._wal.generation) if svc._wal is not None else 0
+            ),
+        }
+        self.ckpt.save(step, tree, metadata=meta, block=block)
+        if block:
+            self._prune(step)
+        return step
+
+    def wait(self) -> None:
+        self.ckpt.wait()
+
+    def _prune(self, newest: int) -> None:
+        steps = []
+        for name in os.listdir(self.ckpt.dir):
+            m = re.fullmatch(r"ckpt_(\d+)", name)
+            if m:
+                steps.append(int(m.group(1)))
+        for step in sorted(steps)[: -self.keep]:
+            if step != newest:
+                shutil.rmtree(
+                    os.path.join(self.ckpt.dir, f"ckpt_{step:08d}"),
+                    ignore_errors=True,
+                )
+
+    # -- read -----------------------------------------------------------------
+
+    def restore(self, step: int, svc) -> int:
+        """Overwrite ``svc``'s mutable state from checkpoint ``step``."""
+        path = os.path.join(self.ckpt.dir, f"ckpt_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        meta = manifest["metadata"]
+        data = np.load(os.path.join(path, "arrays.npz"))
+        tree = {
+            k: data[k].astype(np.dtype(manifest["dtypes"][k]), copy=False)
+            for k in manifest["keys"]
+        }
+
+        book_meta = meta["book"]
+        if (
+            book_meta["num_resources"] != svc.book.num_resources
+            or book_meta["num_bundles"] != svc.book.num_bundles
+            or book_meta["k_bound"] != svc.book.k_bound
+        ):
+            raise ValueError(
+                f"checkpoint is for a (R={book_meta['num_resources']}, "
+                f"B={book_meta['num_bundles']}, K={book_meta['k_bound']}) "
+                f"book, got (R={svc.book.num_resources}, "
+                f"B={svc.book.num_bundles}, K={svc.book.k_bound}) — "
+                "reconstruct the same service before restoring"
+            )
+        book_arrays = {
+            k[len("book/") :]: v for k, v in tree.items() if k.startswith("book/")
+        }
+        svc.book = MarketBook.from_state(book_arrays, book_meta)
+        # restore oracle: the incremental arrays must match a from-scratch
+        # repack of the restored raw accounts, or the checkpoint is corrupt
+        svc.book.parity_check()
+
+        svc.reserve = np.asarray(tree["reserve"], np.float64)
+        svc.price_history = [row.copy() for row in tree["price_history"]]
+        svc.stats_history = _decode_stats(tree, meta["stats_scalars"])
+        svc.epoch = int(meta["epoch"])
+        svc._rejected = int(meta["rejected"])
+        svc._deferred = int(meta["deferred"])
+        svc._last_price_epoch = int(meta["last_price_epoch"])
+        svc._operator_keys = set(meta["operator_keys"])
+        svc.health = type(svc.health)(**meta["health"])
+        svc._pending.clear()
+        svc._restored_wal_offset = int(meta.get("wal_offset", 0))
+        svc._restored_wal_generation = int(meta.get("wal_generation", 0))
+        return step
+
+    def restore_latest(self, svc) -> int | None:
+        """Restore the newest checkpoint into ``svc``; None if none exist."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, svc)
+
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    return v
+
+
+def _decode_stats(tree: dict, scalars: list[dict]) -> list[EpochStats]:
+    out = []
+    for i, rec in enumerate(scalars):
+        fields = dict(rec)
+        for name in _STATS_ARRAY_FIELDS:
+            fields[name] = np.asarray(tree[f"stats/{name}"][i])
+        out.append(EpochStats(**fields))
+    return out

@@ -361,6 +361,15 @@ class EpochStats:
     bids_withdrawn: int = 0  # withdrawals applied this tick
     bids_rejected: int = 0  # deltas refused by validation
     bids_deferred: int = 0  # deltas refused by the max_pending backpressure cap
+    # -- serving health (MarketService deadline-bounded ticks) ---------------
+    # A failed tick (non-convergence within the bounded escalation ladder)
+    # commits nothing: poll_prices keeps serving the last-good curve while
+    # these fields report the degradation.  All default to the healthy
+    # values, so Economy epochs and clean service ticks are unchanged.
+    deadline_missed: bool = False  # wall-clock deadline cut the ladder short
+    tick_failures: int = 0  # consecutive failed ticks (resets on success)
+    retry_backoff_s: float = 0.0  # suggested wait before the next retry
+    health: str = "healthy"  # ServiceHealth state after this tick
 
 
 # row kinds in a packed bid book

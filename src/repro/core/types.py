@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 from typing import Sequence
 
 import jax
@@ -932,6 +933,10 @@ class MarketBook:
         self._next_slot = 0
         self._free: list[int] = []  # LIFO of freed slots below _next_slot
         self._ledger = np.zeros(self.num_resources, np.float64)
+        # offered-supply twin of the |q| ledger: per-pool sum of |q| over the
+        # *sell-side* elements only (q < 0) — real utilization telemetry for
+        # the service (settled demand / offered supply) without an O(nnz) scan
+        self._sell_ledger = np.zeros(self.num_resources, np.float64)
         self._generation = 0  # bumps on every growth (device full re-upload)
         self._dev: dict | None = None
         self._dev_generation = -1
@@ -1070,7 +1075,7 @@ class MarketBook:
         ).reshape(d, -1)
         old_val = self.val[el]
         old_idx = self.idx[el]
-        # exact f64 ledger: retire the old elements' |q|, credit the new
+        # exact f64 ledgers: retire the old elements' |q|, credit the new
         self._ledger -= np.bincount(
             old_idx.reshape(-1),
             weights=np.abs(old_val.reshape(-1), dtype=np.float64),
@@ -1079,6 +1084,16 @@ class MarketBook:
         self._ledger += np.bincount(
             idx_rows.reshape(-1).astype(np.int64),
             weights=np.abs(val_rows.reshape(-1), dtype=np.float64),
+            minlength=self.num_resources,
+        )
+        self._sell_ledger -= np.bincount(
+            old_idx.reshape(-1),
+            weights=np.maximum(-old_val.reshape(-1).astype(np.float64), 0.0),
+            minlength=self.num_resources,
+        )
+        self._sell_ledger += np.bincount(
+            idx_rows.reshape(-1).astype(np.int64),
+            weights=np.maximum(-val_rows.reshape(-1).astype(np.float64), 0.0),
             minlength=self.num_resources,
         )
         flat = el.reshape(-1)
@@ -1099,6 +1114,11 @@ class MarketBook:
         self._ledger -= np.bincount(
             self.idx[lo:hi].astype(np.int64),
             weights=np.abs(self.val[lo:hi], dtype=np.float64),
+            minlength=self.num_resources,
+        )
+        self._sell_ledger -= np.bincount(
+            self.idx[lo:hi].astype(np.int64),
+            weights=np.maximum(-self.val[lo:hi].astype(np.float64), 0.0),
             minlength=self.num_resources,
         )
         self.idx[lo:hi] = 0
@@ -1231,6 +1251,13 @@ class MarketBook:
                 weights=np.abs(np.asarray(row[1], np.float64)).reshape(-1),
                 minlength=fresh.num_resources,
             )
+            fresh._sell_ledger += np.bincount(
+                np.asarray(row[0], np.int64).reshape(-1),
+                weights=np.maximum(
+                    -np.asarray(row[1], np.float64).reshape(-1), 0.0
+                ),
+                minlength=fresh.num_resources,
+            )
         fresh._next_slot = self._next_slot
         fresh._free = [s for s in range(self._next_slot) if self._slot_key[s] is None]
         return fresh
@@ -1250,6 +1277,198 @@ class MarketBook:
             raise AssertionError(
                 "incremental supply_scale ledger diverged from full repack"
             )
+        if not np.array_equal(self._sell_ledger, oracle._sell_ledger):
+            raise AssertionError(
+                "incremental offered-supply ledger diverged from full repack"
+            )
+
+    # -- crash-recoverable state ---------------------------------------------
+
+    def offered_supply(self) -> np.ndarray:
+        """Per-pool units offered for sale across all live rows (exact f64)."""
+        return self._sell_ledger.copy()
+
+    def export_state(self) -> tuple[dict[str, np.ndarray], dict]:
+        """Full mutable state as (flat arrays, JSON-able metadata).
+
+        The encoding is O(1) npz entries regardless of book size: raw
+        (bundles, pi) submissions are CSR-flattened across accounts and
+        pre-packed payloads are stacked, so a 100k-row book checkpoints as
+        ~15 arrays instead of ~300k tiny zip members.  Accounts are stored
+        *independently* of the slot arrays, so :meth:`parity_check` on the
+        restored book is a real oracle (a corrupt array region cannot hide
+        behind accounts re-derived from the same bytes).  Keys must be
+        JSON-serializable (the service uses strings throughout).
+        """
+        keys: list = []
+        slots: list[int] = []
+        kinds: list[int] = []  # 0 = raw (bundles, pi), 1 = pre-packed payload
+        raw_counts: list[int] = []
+        raw_nnz: list[int] = []
+        raw_idx: list[np.ndarray] = []
+        raw_val: list[np.ndarray] = []
+        raw_pi: list[np.ndarray] = []
+        packed_idx: list[np.ndarray] = []
+        packed_val: list[np.ndarray] = []
+        packed_mask: list[np.ndarray] = []
+        packed_pi: list[np.ndarray] = []
+        b_cap, k_cap = self.num_bundles, self.k_bound
+        for s in range(self._next_slot):
+            key = self._slot_key[s]
+            if key is None:
+                continue
+            try:
+                json.dumps(key)
+            except TypeError:
+                raise TypeError(
+                    f"book key {key!r} is not JSON-serializable — durable "
+                    "books require str/int keys"
+                ) from None
+            acct = self._accounts[key]
+            keys.append(key)
+            slots.append(s)
+            if len(acct) == 2:  # raw (bundles, pi) submission
+                bundles, pi = acct
+                kinds.append(0)
+                raw_counts.append(len(bundles))
+                pi_arr = np.broadcast_to(
+                    np.asarray(pi, np.float32), (len(bundles),)
+                )
+                raw_pi.append(np.asarray(pi_arr, np.float32))
+                for ii, vv in bundles:
+                    ii = np.asarray(ii, np.int32).reshape(-1)
+                    raw_nnz.append(ii.shape[0])
+                    raw_idx.append(ii)
+                    raw_val.append(np.asarray(vv, np.float32).reshape(-1))
+            else:  # pre-packed (idx, val, mask, pi) payload
+                kinds.append(1)
+                packed_idx.append(np.asarray(acct[0], np.int32))
+                packed_val.append(np.asarray(acct[1], np.float32))
+                packed_mask.append(np.asarray(acct[2], bool))
+                packed_pi.append(np.asarray(acct[3], np.float32))
+
+        def _cat(chunks, dtype):
+            return (
+                np.concatenate(chunks).astype(dtype, copy=False)
+                if chunks
+                else np.zeros(0, dtype)
+            )
+
+        def _stack(chunks, dtype, shape):
+            return (
+                np.stack(chunks).astype(dtype, copy=False)
+                if chunks
+                else np.zeros((0, *shape), dtype)
+            )
+
+        arrays = {
+            "idx": self.idx,
+            "val": self.val,
+            "mask": self.mask,
+            "pi": self.pi,
+            "ledger": self._ledger,
+            "sell_ledger": self._sell_ledger,
+            "free": np.asarray(self._free, np.int64),
+            "slots": np.asarray(slots, np.int64),
+            "kinds": np.asarray(kinds, np.int8),
+            "raw_counts": np.asarray(raw_counts, np.int32),
+            "raw_nnz": np.asarray(raw_nnz, np.int32),
+            "raw_idx": _cat(raw_idx, np.int32),
+            "raw_val": _cat(raw_val, np.float32),
+            "raw_pi": _cat(raw_pi, np.float32),
+            "packed_idx": _stack(packed_idx, np.int32, (b_cap, k_cap)),
+            "packed_val": _stack(packed_val, np.float32, (b_cap, k_cap)),
+            "packed_mask": _stack(packed_mask, bool, (b_cap,)),
+            "packed_pi": _stack(packed_pi, np.float32, (b_cap,)),
+            "base_cost": self.base_cost,
+        }
+        meta = {
+            "keys": keys,
+            "num_bundles": self.num_bundles,
+            "k_bound": self.k_bound,
+            "rows_cap": self.rows_cap,
+            "num_resources": self.num_resources,
+            "next_slot": self._next_slot,
+            "generation": self._generation,
+            "deltas_applied": self.deltas_applied,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict) -> "MarketBook":
+        """Rebuild a book bit-identically from :meth:`export_state` output.
+
+        The device mirror starts cold (full upload on first
+        ``device_problem``); everything host-side — slot arrays, both f64
+        ledgers, key↔slot maps, freelist order (LIFO reuse determinism),
+        generation, and the raw accounts behind the :meth:`rebuilt`
+        oracle — is restored exactly.
+        """
+        book = cls(
+            np.asarray(arrays["base_cost"], np.float32),
+            int(meta["num_bundles"]),
+            int(meta["k_bound"]),
+            int(meta["rows_cap"]),
+        )
+        if book.rows_cap != int(meta["rows_cap"]):
+            raise ValueError(
+                f"rows_cap {meta['rows_cap']} is not the power of two the "
+                "book would allocate — corrupt metadata"
+            )
+        book.idx = np.asarray(arrays["idx"], np.int32).copy()
+        book.val = np.asarray(arrays["val"], np.float32).copy()
+        book.mask = np.asarray(arrays["mask"], bool).copy()
+        book.pi = np.asarray(arrays["pi"], np.float32).copy()
+        book._ledger = np.asarray(arrays["ledger"], np.float64).copy()
+        book._sell_ledger = np.asarray(
+            arrays["sell_ledger"], np.float64
+        ).copy()
+        book._free = [int(s) for s in arrays["free"]]
+        book._next_slot = int(meta["next_slot"])
+        book._generation = int(meta["generation"])
+        book.deltas_applied = int(meta["deltas_applied"])
+
+        keys = meta["keys"]
+        slots = np.asarray(arrays["slots"], np.int64)
+        kinds = np.asarray(arrays["kinds"], np.int8)
+        if not (len(keys) == slots.shape[0] == kinds.shape[0]):
+            raise ValueError("account encoding length mismatch")
+        raw_counts = np.asarray(arrays["raw_counts"], np.int32)
+        raw_nnz = np.asarray(arrays["raw_nnz"], np.int32)
+        raw_idx = np.asarray(arrays["raw_idx"], np.int32)
+        raw_val = np.asarray(arrays["raw_val"], np.float32)
+        raw_pi = np.asarray(arrays["raw_pi"], np.float32)
+        c_raw = c_bundle = c_el = c_pi = c_packed = 0
+        for key, s, kind in zip(keys, slots, kinds):
+            s = int(s)
+            book._key_slot[key] = s
+            book._slot_key[s] = key
+            if kind == 0:
+                nb = int(raw_counts[c_raw])
+                c_raw += 1
+                bundles = []
+                for j in range(nb):
+                    n = int(raw_nnz[c_bundle + j])
+                    bundles.append(
+                        (
+                            raw_idx[c_el : c_el + n].copy(),
+                            raw_val[c_el : c_el + n].copy(),
+                        )
+                    )
+                    c_el += n
+                c_bundle += nb
+                pi = raw_pi[c_pi : c_pi + nb].copy()
+                c_pi += nb
+                book._accounts[key] = (tuple(bundles), pi)
+            else:
+                book._accounts[key] = (
+                    np.asarray(arrays["packed_idx"][c_packed], np.int32).copy(),
+                    np.asarray(arrays["packed_val"][c_packed], np.float32).copy(),
+                    np.asarray(arrays["packed_mask"][c_packed], bool).copy(),
+                    np.asarray(arrays["packed_pi"][c_packed], np.float32).copy(),
+                )
+                c_packed += 1
+        return book
 
 
 def operator_supply_bids(

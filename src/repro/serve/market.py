@@ -1,14 +1,16 @@
-"""Always-on market service: streaming bid ingestion over a persistent book.
+"""Always-on market service: durable streaming ingestion over a persistent book.
 
     PYTHONPATH=src python -m repro.serve.market --agents 2000 --clusters 4 \
-        --ticks 3 --churn 0.05
+        --ticks 3 --churn 0.05 --durable-dir /tmp/market
 
 The paper runs its clock auction "at regular time intervals" so prices
-fluctuate like a real economy.  This module is the production shape of that
-loop: a :class:`MarketService` accepts a *stream* of :class:`BidDelta`
-records between auctions (``submit`` / ``withdraw``), validates and batches
-them, and settles the book on a ``tick`` — the Tycoon-style split between an
-always-available ingestion front end and a periodic allocation round.
+fluctuate like a real economy — which only works if the next round *will*
+happen and standing bids survive it.  This module is the production shape
+of that loop: a :class:`MarketService` accepts a *stream* of
+:class:`BidDelta` records between auctions (``submit`` / ``withdraw``),
+validates and batches them, and settles the book on a ``tick`` — the
+Tycoon-style split between an always-available ingestion front end and a
+periodic allocation round.
 
 The book itself is a :class:`repro.core.MarketBook`: a persistent
 device-resident CSR bid book where each delta lands as an O(B·K) row write
@@ -18,9 +20,32 @@ instead of the simulator's O(N) from-scratch repack.  The full repack
 (``MarketBook.rebuilt``) survives as the parity oracle, exactly like
 ``packer="loop"`` does for the vectorized epoch packer.
 
-Backpressure is explicit: a bounded pending queue defers excess submissions
-(``bids_deferred``) and validation failures are rejected loudly
-(``bids_rejected``); both counters ride on the tick's
+Three layers make the loop durable and available (ISSUE 9):
+
+* **Write-ahead log** (``wal_path=``): every ``submit``/``withdraw`` is
+  journaled (:class:`repro.serve.wal.WriteAheadLog`) *before* it is
+  acknowledged, so the accepted-delta stream survives any process death;
+  recovery replays the tail through the unchanged validation path, and
+  last-write-wins pending semantics make the replay idempotent by
+  construction.
+* **Tick-boundary checkpoints** (``checkpoint_dir=``): every binding tick
+  commits the full service state — book, price/stats history rings,
+  epoch, counters, health — through
+  :class:`repro.checkpoint.service.ServiceCheckpointer` (atomic
+  manifest+npz, ``parity_check()`` as the restore oracle) and then
+  compacts the WAL.  Recovery = restore latest checkpoint + replay the
+  WAL tail, bit-identical to the uninterrupted service.
+* **Deadline-bounded ticks**: ``tick(deadline_s=...)`` bounds wall time
+  with a bounded escalation ladder (``escalate_clock`` continuations);
+  on deadline miss or non-convergence nothing commits — ``poll_prices``
+  keeps serving the last-good curve, the :class:`ServiceHealth` machine
+  steps healthy → degraded → recovering with exponential-backoff
+  counters, and no bid is re-queued or lost (drained bids rest in the
+  book; a crashed tick replays them from the WAL).
+
+Backpressure is explicit: a bounded pending queue defers excess
+submissions (``bids_deferred``) and validation failures are rejected
+loudly (``bids_rejected``); both counters ride on the tick's
 :class:`repro.core.economy.EpochStats`.
 """
 from __future__ import annotations
@@ -33,10 +58,12 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.service import ServiceCheckpointer
 from ..core.auction import (
     ClockConfig,
     blocked_demand_fn,
     clock_auction,
+    escalate_clock,
     surplus_and_trade,
     verify_system,
 )
@@ -44,6 +71,7 @@ from ..core.economy import Economy, EpochStats
 from ..core.faults import FaultModel
 from ..core.reserve import DEFAULT_WEIGHTING, reserve_prices
 from ..core.types import MarketBook
+from .wal import WriteAheadLog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,16 +91,84 @@ class BidDelta:
         return self.bundles is None
 
 
+def _tolist(x):
+    return x.tolist() if isinstance(x, np.ndarray) else x
+
+
+def _submit_record(delta: BidDelta) -> tuple:
+    """WAL record for a submit, with numpy leaves down-converted to plain
+    lists: pickling a dozen tiny arrays costs ~4 us apiece in per-object
+    overhead, which alone would blow the <2x ingestion-overhead budget.
+    The round trip is exact (int32 -> int -> int32; float32 -> float ->
+    float32) and validation-faithful (``_pack_row`` re-converts through the
+    same ``np.asarray`` calls either way).  Anything that is not a plain
+    list/tuple of array pairs journals as-is — the replay path must see
+    malformed submissions exactly as the live path did."""
+    bundles = delta.bundles
+    if isinstance(bundles, (list, tuple)):
+        try:
+            bundles = [(_tolist(i), _tolist(v)) for i, v in bundles]
+        except (TypeError, ValueError):
+            bundles = delta.bundles
+    return ("submit", delta.key, bundles, _tolist(delta.pi))
+
+
+@dataclasses.dataclass
+class ServiceHealth:
+    """Serving-health state machine for the always-on loop.
+
+    ``healthy`` → (failed tick) → ``degraded`` → (one good tick) →
+    ``recovering`` → (another good tick) → ``healthy``.  A failed tick is
+    one whose settlement did not converge within the deadline-bounded
+    escalation ladder; the service keeps serving the last-good curve and
+    suggests an exponentially backed-off retry interval.
+    """
+
+    state: str = "healthy"  # healthy | degraded | recovering
+    consecutive_failures: int = 0
+    total_failures: int = 0
+    recoveries: int = 0
+    retry_backoff_s: float = 0.0
+    last_good_epoch: int = -1
+
+    def on_failure(self, base_s: float, cap_s: float) -> None:
+        self.consecutive_failures += 1
+        self.total_failures += 1
+        self.state = "degraded"
+        self.retry_backoff_s = min(
+            base_s * 2.0 ** (self.consecutive_failures - 1), cap_s
+        )
+
+    def on_success(self, epoch: int) -> None:
+        if self.state == "degraded":
+            self.state = "recovering"
+            self.recoveries += 1
+        elif self.state == "recovering":
+            self.state = "healthy"
+        self.consecutive_failures = 0
+        self.retry_backoff_s = 0.0
+        self.last_good_epoch = epoch
+
+
 class MarketService:
     """Ingestion front end + periodic settlement over a persistent book.
 
-    Deltas stream in via :meth:`submit` / :meth:`withdraw` (validated
-    immediately, queued per key — last write wins, so one tick's batch never
-    carries duplicate keys).  :meth:`tick` drains the queue into the book,
-    syncs the device mirror in O(Δ), and runs one clock auction warm-started
-    at ``max(p_prev, reserve)``; :meth:`preview` settles the committed book
-    without draining or recording anything.  :meth:`poll_prices` serves the
-    last settled curve to clients between auctions.
+    Deltas stream in via :meth:`submit` / :meth:`withdraw` (journaled to
+    the WAL before acknowledgment when ``wal_path`` is set, validated
+    immediately, queued per key — last write wins, so one tick's batch
+    never carries duplicate keys).  :meth:`tick` drains the queue into the
+    book, syncs the device mirror in O(Δ), and runs one clock auction
+    warm-started at ``max(p_prev, reserve)`` under a deadline-bounded
+    escalation ladder; :meth:`preview` settles the committed book without
+    draining or recording anything.  :meth:`poll_prices` serves the
+    last-good settled curve to clients between auctions — including
+    through degraded ticks that fail to converge.
+
+    Durability contract: reconstruct the service with the same arguments
+    (same ``wal_path`` / ``checkpoint_dir``) after a crash and the
+    constructor restores the latest checkpoint, recovers the WAL's torn
+    tail, and replays the un-checkpointed records through the validation
+    path — state is bit-identical to the moment before the kill.
     """
 
     def __init__(
@@ -87,8 +183,17 @@ class MarketService:
         settle_blocks: int = 8,
         max_pending: int = 100_000,
         max_quantity: float = 1e6,
+        max_history: int = 512,
         warm_start: bool = True,
         faults: FaultModel | None = None,
+        wal_path: str | None = None,
+        wal_sync: str = "flush",
+        checkpoint_dir: str | None = None,
+        checkpoint_keep: int = 2,
+        tick_deadline_s: float | None = None,
+        max_escalations: int = 2,
+        backoff_base_s: float = 1.0,
+        backoff_cap_s: float = 60.0,
     ) -> None:
         self.book = MarketBook(base_cost, num_bundles, k_bound, rows_cap)
         self.reserve = (
@@ -107,27 +212,106 @@ class MarketService:
         # the f64 supply ledger is exact only while every |q| (and their
         # per-pool sums) stays well inside the 2^53 integer window — bound it
         self.max_quantity = float(max_quantity)
+        # bounded history rings: an always-on process must not grow without
+        # bound, and warm starts / poll_prices only ever read the tail
+        self.max_history = max(int(max_history), 1)
         self.warm_start = bool(warm_start)
         self.faults = faults
+        self.tick_deadline_s = tick_deadline_s
+        self.max_escalations = int(max_escalations)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
         self.epoch = 0
         self.price_history: list[np.ndarray] = []
         self.stats_history: list[EpochStats] = []
+        self.health = ServiceHealth()
         # key -> ("upsert", packed_row, raw) | ("remove",) — insertion-ordered
         self._pending: dict = {}
         self._rejected = 0
         self._deferred = 0
+        self._last_price_epoch = -1
+        self._operator_keys: set = set()
+        self._test_hooks: dict = {}  # name -> callable, crash-point probes
+        self._replaying = False
+        self._restored_wal_offset = 0
+        self._restored_wal_generation = 0
+
+        # -- crash recovery: checkpoint first, then the WAL tail -------------
+        self._ckpt = (
+            ServiceCheckpointer(checkpoint_dir, keep=checkpoint_keep)
+            if checkpoint_dir is not None
+            else None
+        )
+        self.restored_step = (
+            self._ckpt.restore_latest(self) if self._ckpt is not None else None
+        )
+        self._wal = (
+            WriteAheadLog(wal_path, sync=wal_sync)
+            if wal_path is not None
+            else None
+        )
+        self.replayed_records = 0
+        self._wal_drained_offset = 0
+        if self._wal is not None:
+            if self._wal.generation == self._restored_wal_generation:
+                replay_start = self._restored_wal_offset
+            else:
+                # the log was compacted after the checkpoint was cut, so the
+                # stored offset points into a dead generation — everything
+                # that survives compaction is post-checkpoint and replays
+                replay_start = self._wal.data_start
+            self.replayed_records = self._replay_wal(replay_start)
+            # records at or before this offset are already inside the book
+            # (or consumed counters); only the tail past it needs replay
+            self._wal_drained_offset = replay_start
 
     # -- ingestion -----------------------------------------------------------
+
+    def _hook(self, name: str) -> None:
+        fn = self._test_hooks.get(name)
+        if fn is not None:
+            fn()
+
+    def _wal_append(self, record) -> None:
+        if self._wal is not None and not self._replaying:
+            self._wal.append(record)
+            self._hook("mid_ingest")
+
+    def _replay_wal(self, start: int) -> int:
+        """Replay the un-checkpointed WAL tail through submit/withdraw.
+
+        Every record goes through the *same* validation, backpressure, and
+        last-write-wins queue logic it originally took, so the pending
+        queue and counters re-derive exactly; duplicated records (a crash
+        between checkpoint and compaction cannot happen thanks to the
+        stored generation+offset, but a duplicated client retry can)
+        collapse idempotently in the pending dict."""
+        self._replaying = True
+        count = 0
+        try:
+            for record, _ in self._wal.records(start):
+                if record[0] == "submit":
+                    self.submit(BidDelta(record[1], record[2], record[3]))
+                elif record[0] == "withdraw":
+                    self.withdraw(record[1])
+                count += 1
+        finally:
+            self._replaying = False
+        return count
 
     def submit(self, delta: BidDelta) -> bool:
         """Queue one delta for the next tick.  Returns acceptance.
 
-        Invalid submissions (malformed bundles, out-of-range pools,
-        non-finite or oversized quantities) are rejected; fresh keys beyond
-        the ``max_pending`` backpressure cap are deferred.  Both outcomes
+        With a WAL attached the raw attempt is journaled (and flushed per
+        the WAL's sync mode) *before* anything is mutated or acknowledged,
+        so an accepted delta survives a kill at any later point.  Invalid
+        submissions (malformed bundles, out-of-range pools, non-finite or
+        oversized quantities) are rejected; fresh keys beyond the
+        ``max_pending`` backpressure cap are deferred.  Both outcomes
         return False and surface in the next tick's EpochStats."""
         if delta.is_withdraw:
             return self.withdraw(delta.key)
+        self._wal_append(_submit_record(delta))
         if delta.key not in self._pending and len(self._pending) >= self.max_pending:
             self._deferred += 1
             return False
@@ -151,6 +335,7 @@ class MarketService:
 
     def withdraw(self, key) -> bool:
         """Queue a withdrawal.  Unknown keys are rejected (False)."""
+        self._wal_append(("withdraw", key))
         pending = self._pending.get(key)
         if pending is not None and pending[0] == "upsert" and key not in self.book:
             # an unsettled submission cancels without ever touching the book
@@ -163,9 +348,12 @@ class MarketService:
         return True
 
     def poll_prices(self) -> tuple[np.ndarray, int]:
-        """Last settled price curve (reserve before any tick) + its epoch."""
+        """Last-good settled price curve (reserve before any tick) + its epoch.
+
+        Degraded ticks never publish here: on non-convergence or a
+        deadline miss the previous converged curve keeps serving."""
         if self.price_history:
-            return self.price_history[-1].copy(), self.epoch - 1
+            return self.price_history[-1].copy(), self._last_price_epoch
         return self.reserve.astype(np.float32).copy(), -1
 
     @property
@@ -193,19 +381,107 @@ class MarketService:
             )
         withdrawn = sum(self.book.remove(k) for k in removes)
         self._pending.clear()
+        if self._wal is not None:
+            self._wal_drained_offset = self._wal.offset
         return len(ups), int(withdrawn)
 
-    def tick(self, dry_run: bool = False) -> EpochStats:
+    def _settle(self, problem, start, deadline_s):
+        """Deadline-bounded settlement: one clock run plus a bounded
+        escalation ladder (``escalate_clock`` continuations from the
+        truncated ascending trajectory).  Wall time only decides how much
+        of the ladder runs — a committed (converged) result is always
+        produced by a deterministic attempt sequence, so recovery re-runs
+        settle bit-identically."""
+        t0 = time.monotonic()
+        config = self.clock
+        result = clock_auction(
+            problem,
+            start,
+            config,
+            demand_fn=blocked_demand_fn(self.settle_blocks),
+        )
+        escalations = 0
+        deadline_missed = (
+            deadline_s is not None and time.monotonic() - t0 >= deadline_s
+        )
+        while (
+            not bool(result.converged)
+            and not deadline_missed
+            and escalations < self.max_escalations
+        ):
+            config = escalate_clock(config)
+            result = clock_auction(
+                problem,
+                result.prices,
+                config,
+                demand_fn=blocked_demand_fn(self.settle_blocks),
+            )
+            escalations += 1
+            deadline_missed = (
+                deadline_s is not None and time.monotonic() - t0 >= deadline_s
+            )
+        return result, escalations, deadline_missed
+
+    def _settled_psi(self, won: np.ndarray, chosen: np.ndarray) -> np.ndarray:
+        """Real per-pool utilization of the offered supply: settled buy
+        units over the book's exact f64 offered-supply ledger (pools with
+        nothing on offer report 0)."""
+        r = self.book.num_resources
+        offered = self.book.offered_supply()
+        won_slots = np.flatnonzero(won)
+        if won_slots.size:
+            b, k = self.book.num_bundles, self.book.k_bound
+            el = (
+                (won_slots * b + chosen[won_slots])[:, None] * k
+                + np.arange(k)[None, :]
+            ).reshape(-1)
+            demand = np.bincount(
+                self.book.idx[el].astype(np.int64),
+                weights=np.maximum(self.book.val[el].astype(np.float64), 0.0),
+                minlength=r,
+            )
+        else:
+            demand = np.zeros(r, np.float64)
+        return np.divide(
+            demand,
+            offered,
+            out=np.zeros(r, np.float64),
+            where=offered > 0,
+        )
+
+    def _operator_slot_mask(self) -> np.ndarray:
+        is_op = np.zeros(self.book.rows_cap, bool)
+        for key in self._operator_keys:
+            slot = self.book._key_slot.get(key)
+            if slot is not None:
+                is_op[slot] = True
+        return is_op
+
+    def tick(
+        self, dry_run: bool = False, deadline_s: float | None = None
+    ) -> EpochStats:
         """Settle one auction over the book; binding ticks drain the queue.
+
+        ``deadline_s`` (default: the service's ``tick_deadline_s``) bounds
+        the settlement ladder's wall time.  A binding tick *commits* —
+        publishes prices, appends history, advances the epoch, checkpoints,
+        compacts the WAL — only when the clock converged; otherwise the
+        tick is recorded as failed (health machine, backoff counters), the
+        last-good curve keeps serving, and nothing is re-queued: drained
+        bids rest in the book for the retry, and a crash replays them from
+        the WAL.
 
         A dry run (:meth:`preview`) settles the *committed* book — pending
         deltas stay queued for the next binding tick — and records nothing,
         mirroring ``Economy.preview_prices``'s side-effect-free contract.
         """
+        if deadline_s is None:
+            deadline_s = self.tick_deadline_s
         if dry_run:
             submitted = withdrawn = 0
         else:
             submitted, withdrawn = self._drain()
+            self._hook("post_drain")
         problem = self.book.device_problem()
 
         dropped = 0
@@ -234,11 +510,8 @@ class MarketService:
             if warm
             else self.reserve
         )
-        result = clock_auction(
-            problem,
-            jnp.asarray(np.asarray(start, np.float32)),
-            self.clock,
-            demand_fn=blocked_demand_fn(self.settle_blocks),
+        result, escalations, deadline_missed = self._settle(
+            problem, jnp.asarray(np.asarray(start, np.float32)), deadline_s
         )
         prices = np.asarray(result.prices)
         converged = bool(result.converged)
@@ -246,25 +519,37 @@ class MarketService:
         surplus, trade = surplus_and_trade(problem, result)
 
         won = np.asarray(result.won)
+        chosen = np.maximum(np.asarray(result.chosen_bundle), 0)
         pay = np.asarray(result.payments).astype(np.float64)
         pi = np.take_along_axis(
-            np.asarray(problem.pi, np.float64),
-            np.maximum(np.asarray(result.chosen_bundle), 0)[:, None],
-            axis=1,
+            np.asarray(problem.pi, np.float64), chosen[:, None], axis=1
         )[:, 0]
         g = won & (np.abs(pay) > 1e-9)
         gammas = np.abs(pi[g] - pay[g]) / np.abs(pay[g])
         base = np.asarray(self.book.base_cost, np.float64)
+        # operator rows are supply, not demand: they settle by construction
+        # whenever p >= reserve, so they belong in neither side of the
+        # "how many bids settled" ratio
+        is_op = self._operator_slot_mask()
+        agent_rows = self.book.num_rows - int(is_op.sum())
+        agent_won = int((won & ~is_op).sum())
+        self._hook("post_settle")
+
+        if not dry_run:
+            if converged:
+                self.health.on_success(self.epoch)
+            else:
+                self.health.on_failure(self.backoff_base_s, self.backoff_cap_s)
 
         stats = EpochStats(
             epoch=self.epoch,
             prices=prices,
             reserve=np.asarray(self.reserve),
-            psi=np.zeros(self.book.num_resources),
+            psi=self._settled_psi(won, chosen),
             price_ratio=prices / base,
             gamma_median=float(np.median(gammas)) if gammas.size else float("nan"),
             gamma_mean=float(np.mean(gammas)) if gammas.size else float("nan"),
-            pct_settled=100.0 * int(won.sum()) / max(self.book.num_rows, 1),
+            pct_settled=100.0 * agent_won / max(agent_rows, 1),
             buy_util_percentiles=np.empty(0),
             sell_util_percentiles=np.empty(0),
             migrations=0,
@@ -274,20 +559,63 @@ class MarketService:
             converged=converged,
             system_ok=sys_ok,
             warm_started=warm,
-            degraded=bool(not converged or dropped),
+            degraded=bool(not converged or dropped or deadline_missed),
+            clock_escalations=escalations,
             dropped_bids=dropped,
             bids_submitted=submitted,
             bids_withdrawn=withdrawn,
             bids_rejected=self._rejected,
             bids_deferred=self._deferred,
+            deadline_missed=deadline_missed,
+            tick_failures=self.health.consecutive_failures,
+            retry_backoff_s=self.health.retry_backoff_s,
+            health=self.health.state,
         )
         if not dry_run:
             self._rejected = 0
             self._deferred = 0
-            self.price_history.append(prices)
+            if converged:
+                self.price_history.append(prices)
+                self._last_price_epoch = self.epoch
+                del self.price_history[: -self.max_history]
             self.stats_history.append(stats)
+            del self.stats_history[: -self.max_history]
             self.epoch += 1
+            self._commit_durable()
         return stats
+
+    def _commit_durable(self) -> None:
+        """Tick-boundary durability: checkpoint, then compact the WAL.
+
+        The pending queue is empty here (the tick just drained it), so
+        the checkpoint covers every WAL record and the log can truncate;
+        a crash *between* the two replays from the checkpoint's stored
+        drain offset, so nothing double-applies.  Without a checkpointer
+        the WAL is group-fsync'd instead — committed ticks are
+        power-durable even under the cheap per-append flush mode."""
+        if self._ckpt is not None:
+            self._ckpt.save(self, block=True)
+            if self._wal is not None:
+                self._wal.reset()
+                self._wal_drained_offset = self._wal.offset
+        elif self._wal is not None:
+            self._wal.sync()
+
+    def checkpoint(self) -> int | None:
+        """Cut an out-of-band checkpoint (after bridge loads/syncs, which
+        mutate the book without passing through the WAL).  The WAL is only
+        compacted when nothing is pending — queued records must survive
+        until a tick drains them."""
+        if self._ckpt is None:
+            return None
+        step = self._ckpt.save(self, block=True)
+        if self._wal is not None:
+            if not self._pending:
+                self._wal.reset()
+                self._wal_drained_offset = self._wal.offset
+            else:
+                self._wal.sync()
+        return step
 
     def preview(self) -> EpochStats:
         """Side-effect-free settlement of the committed book."""
@@ -304,7 +632,13 @@ class MarketService:
         (``Economy.export_bid_rows``) are bulk-loaded; afterwards
         :meth:`sync_from_economy` keeps agent rows current in O(Δ) via the
         economy's dirty-uid tracking.  Operator rows are snapshot at bridge
-        time (a production deployment would re-quote them per tick)."""
+        time (a production deployment would re-quote them per tick).
+
+        With ``checkpoint_dir`` set, a prior checkpoint wins: the restored
+        book already holds the bridged rows, so the bulk load is skipped
+        and the service resumes where it crashed.  A fresh durable bridge
+        cuts a bootstrap checkpoint, because the bulk load bypasses the
+        WAL."""
         base_cost = np.tile(eco.base_cost_rt, eco.C).astype(np.float32)
         reserve = np.asarray(reserve_prices(eco.pools(), eco.weighting))
         kwargs.setdefault("clock", eco.clock)
@@ -314,6 +648,8 @@ class MarketService:
             base_cost, num_bundles=eco.C, k_bound=eco.T,
             reserve=reserve, **kwargs,
         )
+        if svc.restored_step is not None:
+            return svc
         free = np.maximum(eco.capacity - eco.usage, 0.0).reshape(-1)
         for r in np.flatnonzero(free > 1e-9):
             svc.book.upsert(
@@ -321,17 +657,24 @@ class MarketService:
                 [(np.array([r], np.int32), np.array([-free[r]], np.float32))],
                 [float(-free[r] * reserve[r])],
             )
+            svc._operator_keys.add(f"op-{r}")
         svc.book.upsert_rows(*eco.export_bid_rows())
+        if svc._ckpt is not None:
+            svc.checkpoint()
         return svc
 
     def sync_from_economy(self, eco: Economy) -> tuple[int, int]:
         """Drain the economy's dirty-bid deltas into the book (O(Δ)).
 
-        Returns ``(upserted, withdrawn)``."""
+        Bridge syncs bypass the WAL (they are derived from the economy's
+        own durable state), so a durable service cuts a checkpoint right
+        after.  Returns ``(upserted, withdrawn)``."""
         withdraw_keys, upserts = eco.drain_bid_deltas()
         withdrawn = sum(self.book.remove(k) for k in withdraw_keys)
         if upserts[0]:
             self.book.upsert_rows(*upserts)
+        if self._ckpt is not None and (upserts[0] or withdrawn):
+            self.checkpoint()
         return len(upserts[0]), int(withdrawn)
 
 
@@ -347,11 +690,33 @@ def main(argv=None):
     ap.add_argument("--ticks", type=int, default=3)
     ap.add_argument("--churn", type=float, default=0.05,
                     help="fraction of agents re-pricing their bid per tick")
+    ap.add_argument("--withdraw-frac", type=float, default=0.01,
+                    help="fraction of agents withdrawing their bid per tick")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-tick bid-stream dropout probability (fault)")
+    ap.add_argument("--durable-dir", default=None,
+                    help="directory for WAL + checkpoints (enables kill-resume)")
+    ap.add_argument("--kill-resume", action="store_true",
+                    help="drop the service mid-horizon and resume from disk")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    import os
+
     eco = fleet_economy(args.agents, args.clusters, seed=args.seed)
-    svc = MarketService.from_economy(eco)
+    durable = {}
+    if args.durable_dir:
+        os.makedirs(args.durable_dir, exist_ok=True)
+        durable = dict(
+            wal_path=os.path.join(args.durable_dir, "market.wal"),
+            checkpoint_dir=os.path.join(args.durable_dir, "ckpt"),
+        )
+    faults = (
+        FaultModel(bid_dropout=args.dropout, seed=args.seed)
+        if args.dropout > 0
+        else None
+    )
+    svc = MarketService.from_economy(eco, faults=faults, **durable)
     rng = np.random.default_rng(args.seed)
     print(
         f"[market] book: {svc.book.num_rows} rows "
@@ -359,24 +724,45 @@ def main(argv=None):
         flush=True,
     )
     keys, idx_rows, val_rows, mask_rows, pi_rows = eco.export_bid_rows()
+    live = np.flatnonzero(mask_rows.any(axis=1))
+    withdrawn_keys: set = set()
     for t in range(args.ticks):
         n_delta = max(1, int(args.churn * args.agents))
-        pick = rng.choice(args.agents, size=n_delta, replace=False)
-        scale = rng.uniform(0.9, 1.1, size=n_delta).astype(np.float32)
+        pick = rng.choice(live, size=min(n_delta, live.size), replace=False)
+        scale = rng.uniform(0.9, 1.1, size=pick.size).astype(np.float32)
         for j, i in enumerate(pick):
+            if keys[i] in withdrawn_keys:
+                withdrawn_keys.discard(keys[i])  # re-submission revives it
             bundles = [
                 (idx_rows[i, b], val_rows[i, b])
                 for b in np.flatnonzero(mask_rows[i])
             ]
             pi = pi_rows[i][mask_rows[i]] * scale[j]
             svc.submit(BidDelta(keys[i], bundles, pi))
+        n_wd = int(args.withdraw_frac * args.agents)
+        if n_wd:
+            for i in rng.choice(live, size=min(n_wd, live.size), replace=False):
+                if keys[i] not in withdrawn_keys and svc.withdraw(keys[i]):
+                    withdrawn_keys.add(keys[i])
+        if args.kill_resume and args.durable_dir and t == args.ticks // 2:
+            pend = svc.pending
+            del svc  # hard drop mid-horizon: no checkpoint, no drain
+            svc = MarketService.from_economy(eco, faults=faults, **durable)
+            print(
+                f"[market] killed + resumed: epoch {svc.epoch}, "
+                f"{svc.replayed_records} WAL records replayed, "
+                f"{svc.pending}/{pend} pending reconstructed",
+                flush=True,
+            )
         t0 = time.time()
         s = svc.tick()
         dt = time.time() - t0
         print(
             f"[market] tick {t}: {s.bids_submitted} bids in, "
+            f"{s.bids_withdrawn} out, {s.dropped_bids} dropped, "
             f"{s.rounds} rounds, converged={s.converged}, "
-            f"pct_settled={s.pct_settled:.1f}%, {dt*1e3:.0f} ms",
+            f"health={s.health}, pct_settled={s.pct_settled:.1f}%, "
+            f"peak psi={s.psi.max():.2f}, {dt*1e3:.0f} ms",
             flush=True,
         )
     svc.book.parity_check()

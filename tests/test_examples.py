@@ -57,6 +57,8 @@ def test_market_service_demo_smoke():
     )
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     assert "churn synced" in out.stdout
+    assert "killed + resumed" in out.stdout
+    assert "WAL records replayed" in out.stdout
     assert "incremental book bit-identical to full repack: True" in out.stdout
     assert "SYSTEM ok=True" in out.stdout
 

@@ -209,6 +209,7 @@ def test_incremental_book_bit_identical_under_interleaving(seed):
         twin.book = svc.book.rebuilt()
         twin.epoch = svc.epoch
         twin.price_history = [p.copy() for p in svc.price_history]
+        twin._operator_keys = set(svc._operator_keys)
         _settlement_fields_equal(svc.tick(), twin.tick())
         _assert_matches_oracle(svc)
     assert svc.epoch == 4

@@ -1,0 +1,225 @@
+"""Write-ahead log: framing, torn-tail recovery, compaction generations.
+
+The WAL's whole contract is "everything acknowledged survives, everything
+torn truncates" — these tests exercise the on-disk format directly
+(truncations, bit flips, stale offsets) plus the service-level replay
+semantics that ride on it (idempotence under duplicated records).
+Randomized versions of the corruption tests live in
+test_wal_properties.py (hypothesis, optional dependency).
+"""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serve.market import BidDelta, MarketService
+from repro.serve.wal import _DATA_START, _HEADER, _MAGIC, WriteAheadLog
+
+
+def _records(path, **kw):
+    with WriteAheadLog(path, **kw) as w:
+        return [r for r, _ in w.records()]
+
+
+def test_roundtrip_and_offsets(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        offs = [w.append(("submit", i, [i] * i)) for i in range(5)]
+        assert w.offset == offs[-1]
+        got = list(w.records())
+        assert [r for r, _ in got] == [("submit", i, [i] * i) for i in range(5)]
+        assert [o for _, o in got] == offs
+        # tail replay from a mid-log boundary
+        assert [r for r, _ in w.records(offs[2])] == [
+            ("submit", 3, [3] * 3),
+            ("submit", 4, [4] * 4),
+        ]
+        # a start beyond the end of log yields nothing (compacted checkpoint)
+        assert list(w.records(w.offset + 100)) == []
+    assert _records(p) == [("submit", i, [i] * i) for i in range(5)]
+
+
+@pytest.mark.parametrize("cut", [1, 3, 7])
+def test_torn_tail_truncates_to_last_intact_record(tmp_path, cut):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        w.append(("a", 1))
+        w.append(("b", 2))
+        end = w.offset
+    with open(p, "r+b") as f:
+        f.truncate(end - cut)  # torn mid-payload / mid-header
+    w = WriteAheadLog(p)
+    assert w.recovered_records == 1
+    assert w.dropped_bytes > 0
+    assert [r for r, _ in w.records()] == [("a", 1)]
+    # the log is append-ready again at the recovered boundary
+    w.append(("c", 3))
+    w.close()
+    assert _records(p) == [("a", 1), ("c", 3)]
+
+
+def test_bit_flip_truncates_from_corruption(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        first_end = w.append(("a", 1))
+        w.append(("b", 2))
+        w.append(("c", 3))
+    with open(p, "r+b") as f:
+        f.seek(first_end + _HEADER.size + 1)  # inside record b's payload
+        byte = f.read(1)
+        f.seek(first_end + _HEADER.size + 1)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    w = WriteAheadLog(p)
+    # longest intact prefix: the flip kills b AND everything after it
+    assert w.recovered_records == 1
+    assert [r for r, _ in w.records()] == [("a", 1)]
+    w.close()
+
+
+def test_torn_header_on_fresh_log_reinitializes(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with open(p, "wb") as f:
+        f.write(_MAGIC[:5])  # crash mid-header-write
+    w = WriteAheadLog(p)
+    assert w.dropped_bytes == 5
+    assert list(w.records()) == []
+    w.append(("x",))
+    w.close()
+    assert _records(p) == [("x",)]
+
+
+def test_bad_magic_rejected_loudly(tmp_path):
+    p = str(tmp_path / "not.wal")
+    with open(p, "wb") as f:
+        f.write(b"NOTAWAL!" + b"\x00" * 32)
+    with pytest.raises(ValueError, match="bad magic"):
+        WriteAheadLog(p)
+
+
+def test_bad_sync_mode_rejected(tmp_path):
+    with pytest.raises(ValueError, match="sync must be"):
+        WriteAheadLog(str(tmp_path / "w.wal"), sync="eventually")
+
+
+def test_frame_length_beyond_eof_is_torn(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        w.append(("a", 1))
+    with open(p, "ab") as f:
+        # header claiming a 1 MiB payload that was never written
+        f.write(_HEADER.pack(1 << 20, 0))
+        f.write(b"short")
+    w = WriteAheadLog(p)
+    assert w.recovered_records == 1
+    assert [r for r, _ in w.records()] == [("a", 1)]
+    w.close()
+
+
+def test_reset_compacts_and_bumps_generation(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        w.append(("old", 0))
+        assert w.generation == 0
+        w.reset()
+        assert w.generation == 1
+        assert w.offset == w.data_start == _DATA_START
+        assert list(w.records()) == []
+        w.append(("new", 1))
+    # the generation survives reopen — this is what lets a checkpoint's
+    # (generation, offset) pair detect that its offset points into a dead log
+    w = WriteAheadLog(p)
+    assert w.generation == 1
+    assert [r for r, _ in w.records()] == [("new", 1)]
+    w.close()
+    (gen,) = struct.Struct("<Q").unpack(
+        open(p, "rb").read()[len(_MAGIC) : _DATA_START]
+    )
+    assert gen == 1
+
+
+def test_fsync_mode_appends_and_recovers(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p, sync="fsync") as w:
+        w.append(("a", 1))
+        w.append(("b", 2))
+    assert _records(p) == [("a", 1), ("b", 2)]
+
+
+# -- service-level replay semantics ------------------------------------------
+
+
+def _tiny_service(tmp_path, **kw):
+    return MarketService(
+        np.ones(3, np.float32), num_bundles=2, k_bound=2,
+        wal_path=str(tmp_path / "svc.wal"), **kw,
+    )
+
+
+def _bid(key, pool, q, pi):
+    return BidDelta(
+        key, [(np.array([pool], np.int32), np.array([q], np.float32))], [pi]
+    )
+
+
+def test_replay_reconstructs_pending_and_counters(tmp_path):
+    svc = _tiny_service(tmp_path)
+    svc.submit(_bid("a", 0, 2.0, 5.0))
+    svc.submit(_bid("b", 1, 1.0, 3.0))
+    svc.submit(_bid("a", 0, 4.0, 6.0))  # last write wins
+    svc.submit(BidDelta("bad", [(np.array([99], np.int32), np.array([1.0], np.float32))], [1.0]))
+    svc.withdraw("nope")  # unknown: rejected, but still journaled
+    svc.withdraw("b")  # cancels the unsettled submission
+    assert (svc.pending, svc._rejected) == (1, 2)
+    svc._wal.close()
+
+    twin = _tiny_service(tmp_path)
+    assert twin.replayed_records == 6
+    assert twin.pending == 1
+    assert twin._rejected == 2
+    assert twin._pending.keys() == svc._pending.keys()
+    np.testing.assert_array_equal(
+        twin._pending["a"][1][1], svc._pending["a"][1][1]
+    )
+
+
+def test_replay_is_idempotent_under_duplicated_records(tmp_path):
+    """A client retrying an unacknowledged submit duplicates its WAL record;
+    last-write-wins pending semantics collapse the duplicate exactly."""
+    svc = _tiny_service(tmp_path)
+    svc.submit(_bid("a", 0, 2.0, 5.0))
+    svc.submit(_bid("b", 1, 1.0, 3.0))
+    # duplicate the raw frames (simulated retry storm), including a withdraw
+    for rec, _ in list(svc._wal.records()):
+        svc._wal.append(rec)
+        svc._wal.append(rec)
+    svc._wal.append(("withdraw", "a"))
+    svc._wal.append(("withdraw", "a"))
+    svc._wal.close()
+
+    twin = _tiny_service(tmp_path)
+    assert twin.replayed_records == 8
+    assert twin.pending == 1  # "a" cancelled, "b" stands
+    assert list(twin._pending) == ["b"]
+
+
+def test_torn_service_wal_tail_drops_only_unacked(tmp_path):
+    svc = _tiny_service(tmp_path)
+    svc.submit(_bid("a", 0, 2.0, 5.0))
+    end = svc._wal.offset
+    svc.submit(_bid("b", 1, 1.0, 3.0))
+    svc._wal.close()
+    path = str(tmp_path / "svc.wal")
+    with open(path, "r+b") as f:
+        f.truncate(end + 4)  # tear mid-frame of the second submit
+    twin = _tiny_service(tmp_path)
+    assert twin._wal.recovered_records == 1
+    assert list(twin._pending) == ["a"]
+
+
+def test_wal_disabled_service_has_no_log(tmp_path):
+    svc = MarketService(np.ones(3, np.float32), num_bundles=2, k_bound=2)
+    assert svc._wal is None
+    svc.submit(_bid("a", 0, 2.0, 5.0))
+    assert svc.pending == 1
+    assert not os.listdir(tmp_path)
