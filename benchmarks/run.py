@@ -834,6 +834,7 @@ def market_recover():
     import tempfile
 
     from repro.core.markets import fleet_economy
+    from repro.serve import ServiceConfig
     from repro.serve.market import BidDelta, MarketService
 
     n = int(os.environ.get("MARKET_RECOVER_AGENTS", 100_000))
@@ -841,12 +842,12 @@ def market_recover():
     eco = fleet_economy(n, 6, seed=0)
     d = tempfile.mkdtemp(prefix="market_recover_")
     try:
-        kw = dict(
+        cfg = ServiceConfig(
             wal_path=os.path.join(d, "market.wal"),
             checkpoint_dir=os.path.join(d, "ckpt"),
         )
         t0 = time.perf_counter()
-        svc = MarketService.from_economy(eco, **kw)
+        svc = MarketService.from_economy(eco, config=cfg)
         load_s = time.perf_counter() - t0
         print(
             f"# market_recover: {svc.book.num_rows} rows bulk-loaded + "
@@ -902,7 +903,7 @@ def market_recover():
         pend = svc.pending
         del svc  # hard drop: no drain, no checkpoint
         t0 = time.perf_counter()
-        svc = MarketService.from_economy(eco, **kw)
+        svc = MarketService.from_economy(eco, config=cfg)
         recover_s = time.perf_counter() - t0
         assert svc.restored_step is not None, "recovery never found a checkpoint"
         assert svc.pending == pend, (
@@ -921,6 +922,132 @@ def market_recover():
             f"WAL ingestion overhead {overhead:.2f}x >= 2x the no-WAL path"
         )
         return recover_s * 1e6, round(overhead, 2)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def market_commit():
+    """Low-latency durable commits (ISSUE 10 tentpole): the binding-tick
+    commit wall at a 100k-row book under 1%/5%/20% churn, three ways —
+    the PR-9 style *full* checkpoint (every commit exports the whole
+    book), the *incremental* dirty-row delta record (O(Δ) in the churn),
+    and the *async* background commit (the tick pays only snapshot +
+    dispatch; durability is settled by the next tick's wait).  Each cycle
+    churns the book, drains it with a tick (checkpoint_interval is parked
+    high so the tick itself does not commit), then times one commit
+    through the service's own sync commit sequence (save + WAL truncate).
+    Override the book size with MARKET_COMMIT_AGENTS.
+    us_per_call: incremental commit wall at 1% churn.  derived:
+    full/incremental commit speedup at 1% churn (asserted >= 3x, the
+    acceptance bound vs the PR-9 full-export commit)."""
+    import shutil
+    import tempfile
+
+    from repro.core.markets import fleet_economy
+    from repro.serve import ServiceConfig
+    from repro.serve.market import BidDelta, MarketService
+
+    n = int(os.environ.get("MARKET_COMMIT_AGENTS", 100_000))
+    eco = fleet_economy(n, 6, seed=0)
+    d = tempfile.mkdtemp(prefix="market_commit_")
+    try:
+        cfg = ServiceConfig(
+            wal_path=os.path.join(d, "market.wal"),
+            checkpoint_dir=os.path.join(d, "ckpt"),
+            # ticks drain and settle but never auto-commit: the commit is
+            # timed explicitly below, isolated from settlement wall
+            checkpoint_interval=1_000_000_000,
+            checkpoint_full_every=1_000_000_000,
+        )
+        t0 = time.perf_counter()
+        svc = MarketService.from_economy(eco, config=cfg)
+        print(
+            f"# market_commit: {svc.book.num_rows} rows bulk-loaded + "
+            f"bootstrap checkpoint in {time.perf_counter() - t0:.2f}s",
+            file=sys.stderr,
+        )
+        keys, idx_rows, val_rows, mask_rows, pi_rows = eco.export_bid_rows()
+        live = np.flatnonzero(mask_rows.any(axis=1))
+        rng = np.random.default_rng(0)
+
+        def churn(frac):
+            pick = rng.choice(
+                live, size=min(max(1, int(frac * n)), live.size), replace=False
+            )
+            scale = rng.uniform(0.9, 1.1, size=pick.size).astype(np.float32)
+            for j, i in enumerate(pick):
+                bundles = [
+                    (idx_rows[i, b], val_rows[i, b])
+                    for b in np.flatnonzero(mask_rows[i])
+                ]
+                svc.submit(BidDelta(
+                    keys[i], bundles, pi_rows[i][mask_rows[i]] * scale[j]
+                ))
+
+        def sync_commit(force_full=False):
+            """The service's own sync commit sequence, timed in isolation."""
+            t0 = time.perf_counter()
+            svc._ckpt.save(svc, block=True, force_full=force_full)
+            svc._durable_wal_offset = svc._wal_drained_offset
+            svc._truncate_wal()
+            return time.perf_counter() - t0
+
+        svc.tick()  # compile + settle the cold book once
+        sync_commit()  # establish the base full record
+
+        incr_by_churn = {}
+        for frac in (0.01, 0.05, 0.20):
+            walls = []
+            for _ in range(2):
+                churn(frac)
+                svc.tick()
+                walls.append(sync_commit())
+            incr_by_churn[frac] = min(walls) * 1e6
+            print(
+                f"# market_commit: churn {frac:.0%} — incremental commit "
+                f"{incr_by_churn[frac] / 1e3:.1f} ms",
+                file=sys.stderr,
+            )
+
+        # PR-9 baseline shape: every commit exports the full book
+        full_walls = []
+        for _ in range(2):
+            churn(0.01)
+            svc.tick()
+            full_walls.append(sync_commit(force_full=True))
+        us_full = min(full_walls) * 1e6
+
+        # async commit: the tick-visible wall is snapshot + dispatch; the
+        # write itself overlaps the next tick and is settled by its wait
+        disp_walls, wait_walls = [], []
+        for _ in range(2):
+            churn(0.01)
+            svc.tick()
+            t0 = time.perf_counter()
+            svc._ckpt.save_async(svc)
+            disp_walls.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            payload, err = svc._ckpt.wait_commit(svc)
+            wait_walls.append(time.perf_counter() - t0)
+            assert err is None and payload is not None
+            svc._durable_wal_offset = payload.wal_offset
+            svc._truncate_wal()
+        us_disp = min(disp_walls) * 1e6
+
+        svc.book.parity_check()
+        speedup = us_full / max(incr_by_churn[0.01], 1e-9)
+        print(
+            f"# market_commit: full {us_full / 1e3:.0f} ms vs incremental "
+            f"{incr_by_churn[0.01] / 1e3:.1f} ms = {speedup:.1f}x at 1% churn; "
+            f"async dispatch {us_disp / 1e3:.1f} ms "
+            f"(+{min(wait_walls) * 1e3:.1f} ms settled next tick)",
+            file=sys.stderr,
+        )
+        assert speedup >= 3.0, (
+            f"incremental commit speedup {speedup:.1f}x < 3x over the "
+            "full-export commit"
+        )
+        return incr_by_churn[0.01], round(speedup, 1)
     finally:
         shutil.rmtree(d, ignore_errors=True)
 
@@ -968,6 +1095,7 @@ BENCHES = {
     "bid_eval_csr": bid_eval_csr,
     "market_serve": market_serve,
     "market_recover": market_recover,
+    "market_commit": market_commit,
     "roofline_summary": roofline_summary,
 }
 
@@ -1014,7 +1142,9 @@ def _load_records(path: str) -> list:
 # env knobs that reshape a benchmark's workload — any of these being set means
 # the numbers are not comparable to a run without them, so they go in the
 # record's identity stamp
-_WORKLOAD_ENV_PREFIXES = ("ECONOMY_EPOCH_", "MARKET_SERVE_", "MARKET_RECOVER_")
+_WORKLOAD_ENV_PREFIXES = (
+    "ECONOMY_EPOCH_", "MARKET_SERVE_", "MARKET_RECOVER_", "MARKET_COMMIT_",
+)
 
 
 def _workload() -> dict:

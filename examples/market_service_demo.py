@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.faults import FaultModel
 from repro.core.markets import fleet_economy, fleet_population
+from repro.serve import ServiceConfig
 from repro.serve.market import BidDelta, MarketService
 
 
@@ -47,11 +48,11 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     faults = FaultModel(bid_dropout=args.dropout, seed=args.seed)
     tmp = tempfile.mkdtemp(prefix="market_demo_")
-    durable = dict(
+    cfg = ServiceConfig(
         wal_path=os.path.join(tmp, "market.wal"),
         checkpoint_dir=os.path.join(tmp, "ckpt"),
     )
-    svc = MarketService.from_economy(eco, faults=faults, **durable)
+    svc = MarketService.from_economy(eco, config=cfg, faults=faults)
     print(
         f"book: {svc.book.num_rows} rows ({svc.book.rows_cap} slots), "
         f"{eco.C} clusters x {eco.T} rtypes; durable in {tmp}"
@@ -101,7 +102,7 @@ def main(argv=None) -> int:
         if t == args.ticks // 2:
             pend = svc.pending
             del svc  # no drain, no checkpoint, no goodbye
-            svc = MarketService.from_economy(eco, faults=faults, **durable)
+            svc = MarketService.from_economy(eco, config=cfg, faults=faults)
             print(
                 f"tick {t}: killed + resumed — epoch {svc.epoch}, "
                 f"{svc.replayed_records} WAL records replayed, "

@@ -30,18 +30,19 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.economy import _POP_FIELDS, AgentPopulation, Economy
-from .checkpoint import Checkpointer
+from .store import CheckpointStore
 
 # optional epoch-to-epoch carry arrays, persisted only when present; restore
 # detects them through the manifest key list
 _OPTIONAL = ("_last_reserve", "_last_filled", "_last_cap_eff", "_reach_keys")
 
 
-class MarketCheckpointer:
-    """Persist/restore full mutable Economy state at epoch boundaries."""
+class MarketCheckpointer(CheckpointStore):
+    """Persist/restore full mutable Economy state at epoch boundaries.
 
-    def __init__(self, directory: str):
-        self.ckpt = Checkpointer(directory)
+    A thin subclass of :class:`~repro.checkpoint.store.CheckpointStore`:
+    the atomic manifest+npz protocol lives there (shared with the service
+    checkpointer), this class only spells the economy's state tree."""
 
     # -- write ----------------------------------------------------------------
     def _state_tree(self, eco: Economy) -> dict[str, np.ndarray]:
@@ -73,28 +74,23 @@ class MarketCheckpointer:
         """
         step = len(eco.price_history)
         meta = {"rng_state": eco.rng.bit_generator.state, "num_agents": len(eco.pop)}
-        self.ckpt.save(step, self._state_tree(eco), metadata=meta, block=block)
+        if block:
+            self.wait()
+            self.write_record("ckpt", step, self._state_tree(eco), metadata=meta)
+        else:
+            self.write_record_async(
+                "ckpt", step, self._state_tree(eco), metadata=meta
+            )
         return step
 
     # -- read -----------------------------------------------------------------
     def restore(self, step: int, eco: Economy) -> int:
         """Overwrite ``eco``'s mutable state from checkpoint ``step``."""
-        import json
-        import os
-
-        path = os.path.join(self.ckpt.dir, f"ckpt_{step:08d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        # read the npz directly rather than through Checkpointer.restore:
-        # that path re-device_puts every leaf, and with x64 disabled JAX
-        # would silently truncate the economy's float64 state to float32
-        # (also: the checkpointed population may be a different size than
-        # ``eco``'s, so there is no in-memory target tree to mirror)
-        data = np.load(os.path.join(path, "arrays.npz"))
-        tree = {
-            k: data[k].astype(np.dtype(manifest["dtypes"][k]), copy=False)
-            for k in manifest["keys"]
-        }
+        # read_record loads the npz directly with the manifest dtypes, so
+        # the economy's float64 state survives x64-disabled JAX (also: the
+        # checkpointed population may be a different size than ``eco``'s,
+        # so there is no in-memory target tree to mirror)
+        tree, manifest = self.read_record("ckpt", step)
 
         if tree["capacity"].shape != eco.capacity.shape:
             raise ValueError(
@@ -125,7 +121,7 @@ class MarketCheckpointer:
 
     def restore_latest(self, eco: Economy) -> int | None:
         """Restore the newest checkpoint into ``eco``; None if none exist."""
-        step = self.ckpt.latest_step()
+        step = self.latest_step("ckpt")
         if step is None:
             return None
         return self.restore(step, eco)

@@ -941,6 +941,10 @@ class MarketBook:
         self._dev: dict | None = None
         self._dev_generation = -1
         self._dev_pending: list[int] = []  # slots written since last sync
+        # slots written since the last checkpoint export — a separate set from
+        # _dev_pending because the two clear at different times (device sync
+        # per tick vs. durable commit)
+        self._ckpt_dirty: set[int] = set()
         self.deltas_applied = 0  # lifetime upsert+remove count (telemetry)
 
     # -- storage ------------------------------------------------------------
@@ -1102,6 +1106,7 @@ class MarketBook:
         self.mask[slots] = mask_rows
         self.pi[slots] = pi_rows
         self._dev_pending.extend(int(s) for s in slots)
+        self._ckpt_dirty.update(int(s) for s in slots)
         self.deltas_applied += d
 
     def remove(self, key) -> bool:
@@ -1129,6 +1134,7 @@ class MarketBook:
         self._accounts.pop(key, None)
         self._free.append(s)
         self._dev_pending.append(s)
+        self._ckpt_dirty.add(int(s))
         self.deltas_applied += 1
         return True
 
@@ -1288,18 +1294,13 @@ class MarketBook:
         """Per-pool units offered for sale across all live rows (exact f64)."""
         return self._sell_ledger.copy()
 
-    def export_state(self) -> tuple[dict[str, np.ndarray], dict]:
-        """Full mutable state as (flat arrays, JSON-able metadata).
-
-        The encoding is O(1) npz entries regardless of book size: raw
-        (bundles, pi) submissions are CSR-flattened across accounts and
-        pre-packed payloads are stacked, so a 100k-row book checkpoints as
-        ~15 arrays instead of ~300k tiny zip members.  Accounts are stored
-        *independently* of the slot arrays, so :meth:`parity_check` on the
-        restored book is a real oracle (a corrupt array region cannot hide
-        behind accounts re-derived from the same bytes).  Keys must be
-        JSON-serializable (the service uses strings throughout).
-        """
+    def _encode_accounts(
+        self, live_slots: Sequence[int]
+    ) -> tuple[list, dict[str, np.ndarray]]:
+        """CSR-flatten the raw accounts behind ``live_slots`` (ascending
+        slot order, every slot live) into O(1) npz-able arrays.  Shared by
+        the full and dirty-row exporters so both spell the identical
+        on-disk encoding."""
         keys: list = []
         slots: list[int] = []
         kinds: list[int] = []  # 0 = raw (bundles, pi), 1 = pre-packed payload
@@ -1313,10 +1314,8 @@ class MarketBook:
         packed_mask: list[np.ndarray] = []
         packed_pi: list[np.ndarray] = []
         b_cap, k_cap = self.num_bundles, self.k_bound
-        for s in range(self._next_slot):
+        for s in live_slots:
             key = self._slot_key[s]
-            if key is None:
-                continue
             try:
                 json.dumps(key)
             except TypeError:
@@ -1361,14 +1360,7 @@ class MarketBook:
                 else np.zeros((0, *shape), dtype)
             )
 
-        arrays = {
-            "idx": self.idx,
-            "val": self.val,
-            "mask": self.mask,
-            "pi": self.pi,
-            "ledger": self._ledger,
-            "sell_ledger": self._sell_ledger,
-            "free": np.asarray(self._free, np.int64),
+        return keys, {
             "slots": np.asarray(slots, np.int64),
             "kinds": np.asarray(kinds, np.int8),
             "raw_counts": np.asarray(raw_counts, np.int32),
@@ -1380,6 +1372,82 @@ class MarketBook:
             "packed_val": _stack(packed_val, np.float32, (b_cap, k_cap)),
             "packed_mask": _stack(packed_mask, bool, (b_cap,)),
             "packed_pi": _stack(packed_pi, np.float32, (b_cap,)),
+        }
+
+    @staticmethod
+    def _decode_accounts(arrays: dict, keys: list):
+        """Inverse of :meth:`_encode_accounts`: yields (key, slot, account)
+        triples in encoding order."""
+        slots = np.asarray(arrays["slots"], np.int64)
+        kinds = np.asarray(arrays["kinds"], np.int8)
+        if not (len(keys) == slots.shape[0] == kinds.shape[0]):
+            raise ValueError("account encoding length mismatch")
+        raw_counts = np.asarray(arrays["raw_counts"], np.int32)
+        raw_nnz = np.asarray(arrays["raw_nnz"], np.int32)
+        raw_idx = np.asarray(arrays["raw_idx"], np.int32)
+        raw_val = np.asarray(arrays["raw_val"], np.float32)
+        raw_pi = np.asarray(arrays["raw_pi"], np.float32)
+        c_raw = c_bundle = c_el = c_pi = c_packed = 0
+        for key, s, kind in zip(keys, slots, kinds):
+            if kind == 0:
+                nb = int(raw_counts[c_raw])
+                c_raw += 1
+                bundles = []
+                for j in range(nb):
+                    n = int(raw_nnz[c_bundle + j])
+                    bundles.append(
+                        (
+                            raw_idx[c_el : c_el + n].copy(),
+                            raw_val[c_el : c_el + n].copy(),
+                        )
+                    )
+                    c_el += n
+                c_bundle += nb
+                pi = raw_pi[c_pi : c_pi + nb].copy()
+                c_pi += nb
+                acct = (tuple(bundles), pi)
+            else:
+                acct = (
+                    np.asarray(arrays["packed_idx"][c_packed], np.int32).copy(),
+                    np.asarray(arrays["packed_val"][c_packed], np.float32).copy(),
+                    np.asarray(arrays["packed_mask"][c_packed], bool).copy(),
+                    np.asarray(arrays["packed_pi"][c_packed], np.float32).copy(),
+                )
+                c_packed += 1
+            yield key, int(s), acct
+
+    def export_state(
+        self, clear_dirty: bool = False
+    ) -> tuple[dict[str, np.ndarray], dict]:
+        """Full mutable state as (flat arrays, JSON-able metadata).
+
+        The encoding is O(1) npz entries regardless of book size: raw
+        (bundles, pi) submissions are CSR-flattened across accounts and
+        pre-packed payloads are stacked, so a 100k-row book checkpoints as
+        ~15 arrays instead of ~300k tiny zip members.  Accounts are stored
+        *independently* of the slot arrays, so :meth:`parity_check` on the
+        restored book is a real oracle (a corrupt array region cannot hide
+        behind accounts re-derived from the same bytes).  Keys must be
+        JSON-serializable (the service uses strings throughout).
+
+        With ``clear_dirty=True`` the checkpoint-dirty set is reset, making
+        this export the new baseline the next :meth:`export_dirty_state`
+        delta chains from.  The returned arrays alias live book storage —
+        callers persisting them asynchronously must copy first.
+        """
+        live = [
+            s for s in range(self._next_slot) if self._slot_key[s] is not None
+        ]
+        keys, acct_arrays = self._encode_accounts(live)
+        arrays = {
+            "idx": self.idx,
+            "val": self.val,
+            "mask": self.mask,
+            "pi": self.pi,
+            "ledger": self._ledger,
+            "sell_ledger": self._sell_ledger,
+            "free": np.asarray(self._free, np.int64),
+            **acct_arrays,
             "base_cost": self.base_cost,
         }
         meta = {
@@ -1392,7 +1460,126 @@ class MarketBook:
             "generation": self._generation,
             "deltas_applied": self.deltas_applied,
         }
+        if clear_dirty:
+            self._ckpt_dirty.clear()
         return arrays, meta
+
+    @property
+    def dirty_rows(self) -> int:
+        """Slots written since the last checkpoint export (delta size)."""
+        return len(self._ckpt_dirty)
+
+    def mark_dirty(self, slots) -> None:
+        """Re-mark rows checkpoint-dirty — the undo for a cleared export
+        whose record never became durable (failed background save)."""
+        self._ckpt_dirty.update(int(s) for s in slots)
+
+    def export_dirty_state(
+        self, clear: bool = True
+    ) -> tuple[dict[str, np.ndarray], dict]:
+        """Only the rows written since the last export, as a delta record.
+
+        The payload carries each dirty slot's row arrays (fancy-indexed —
+        already a stable copy, safe to serialize asynchronously), the full
+        f64 ledgers and freelist (O(R + frees), tiny next to the rows), and
+        the raw accounts behind the dirty *live* slots in the identical
+        encoding :meth:`export_state` uses.  ``meta["row_keys"]`` records
+        each dirty slot's occupant (``None`` = tombstone), so
+        :meth:`apply_dirty_state` can evict superseded keys before
+        installing the new ones.  With ``clear=True`` the dirty set resets,
+        chaining the next delta off this one.
+        """
+        rows = sorted(self._ckpt_dirty)
+        b, k = self.num_bundles, self.k_bound
+        sl = np.asarray(rows, np.int64)
+        el = (
+            sl[:, None] * (b * k) + np.arange(b * k, dtype=np.int64)[None, :]
+        ).reshape(-1)
+        live = [s for s in rows if self._slot_key[s] is not None]
+        keys, acct_arrays = self._encode_accounts(live)
+        arrays = {
+            "rows": sl,
+            "idx": self.idx[el],
+            "val": self.val[el],
+            "mask": self.mask[sl],
+            "pi": self.pi[sl],
+            "ledger": self._ledger.copy(),
+            "sell_ledger": self._sell_ledger.copy(),
+            "free": np.asarray(self._free, np.int64),
+            **acct_arrays,
+        }
+        meta = {
+            "keys": keys,
+            "row_keys": [self._slot_key[s] for s in rows],
+            "num_bundles": self.num_bundles,
+            "k_bound": self.k_bound,
+            "rows_cap": self.rows_cap,
+            "num_resources": self.num_resources,
+            "next_slot": self._next_slot,
+            "generation": self._generation,
+            "deltas_applied": self.deltas_applied,
+        }
+        if clear:
+            self._ckpt_dirty.clear()
+        return arrays, meta
+
+    def apply_dirty_state(self, arrays: dict, meta: dict) -> None:
+        """Replay one :meth:`export_dirty_state` record onto this book.
+
+        The record must be the next delta in the chain that produced this
+        book's state (base + ordered replay).  Capacity growth recorded in
+        the delta is re-applied; superseded occupants of dirty slots are
+        evicted before the new keys install, so remove→re-add slot swaps
+        within one delta window land exactly.  The device mirror is
+        invalidated (full re-upload on next ``device_problem``).
+        """
+        if (
+            int(meta["num_bundles"]) != self.num_bundles
+            or int(meta["k_bound"]) != self.k_bound
+            or int(meta["num_resources"]) != self.num_resources
+        ):
+            raise ValueError("delta record shape does not match this book")
+        new_cap = int(meta["rows_cap"])
+        if new_cap < self.rows_cap:
+            raise ValueError("delta record predates this book (rows_cap shrank)")
+        if new_cap > self.rows_cap:
+            idx, val, mask, pi = self.idx, self.val, self.mask, self.pi
+            self._alloc_arrays(new_cap)
+            self.idx[: idx.shape[0]] = idx
+            self.val[: val.shape[0]] = val
+            self.mask[: mask.shape[0]] = mask
+            self.pi[: pi.shape[0]] = pi
+            self._slot_key.extend([None] * (new_cap - self.rows_cap))
+            self.rows_cap = new_cap
+        rows = np.asarray(arrays["rows"], np.int64)
+        b, k = self.num_bundles, self.k_bound
+        el = (
+            rows[:, None] * (b * k) + np.arange(b * k, dtype=np.int64)[None, :]
+        ).reshape(-1)
+        self.idx[el] = np.asarray(arrays["idx"], np.int32).reshape(-1)
+        self.val[el] = np.asarray(arrays["val"], np.float32).reshape(-1)
+        self.mask[rows] = np.asarray(arrays["mask"], bool)
+        self.pi[rows] = np.asarray(arrays["pi"], np.float32)
+        for s in rows:  # evict every dirty slot's previous occupant first
+            old = self._slot_key[int(s)]
+            if old is not None:
+                self._key_slot.pop(old, None)
+                self._accounts.pop(old, None)
+                self._slot_key[int(s)] = None
+        for s, key in zip(rows, meta["row_keys"]):
+            if key is not None:
+                self._slot_key[int(s)] = key
+                self._key_slot[key] = int(s)
+        for key, _s, acct in self._decode_accounts(arrays, meta["keys"]):
+            self._accounts[key] = acct
+        self._ledger = np.asarray(arrays["ledger"], np.float64).copy()
+        self._sell_ledger = np.asarray(arrays["sell_ledger"], np.float64).copy()
+        self._free = [int(x) for x in arrays["free"]]
+        self._next_slot = int(meta["next_slot"])
+        self._generation = int(meta["generation"])
+        self.deltas_applied = int(meta["deltas_applied"])
+        self._dev = None
+        self._dev_pending.clear()
 
     @classmethod
     def from_state(cls, arrays: dict, meta: dict) -> "MarketBook":
@@ -1427,47 +1614,10 @@ class MarketBook:
         book._next_slot = int(meta["next_slot"])
         book._generation = int(meta["generation"])
         book.deltas_applied = int(meta["deltas_applied"])
-
-        keys = meta["keys"]
-        slots = np.asarray(arrays["slots"], np.int64)
-        kinds = np.asarray(arrays["kinds"], np.int8)
-        if not (len(keys) == slots.shape[0] == kinds.shape[0]):
-            raise ValueError("account encoding length mismatch")
-        raw_counts = np.asarray(arrays["raw_counts"], np.int32)
-        raw_nnz = np.asarray(arrays["raw_nnz"], np.int32)
-        raw_idx = np.asarray(arrays["raw_idx"], np.int32)
-        raw_val = np.asarray(arrays["raw_val"], np.float32)
-        raw_pi = np.asarray(arrays["raw_pi"], np.float32)
-        c_raw = c_bundle = c_el = c_pi = c_packed = 0
-        for key, s, kind in zip(keys, slots, kinds):
-            s = int(s)
+        for key, s, acct in cls._decode_accounts(arrays, meta["keys"]):
             book._key_slot[key] = s
             book._slot_key[s] = key
-            if kind == 0:
-                nb = int(raw_counts[c_raw])
-                c_raw += 1
-                bundles = []
-                for j in range(nb):
-                    n = int(raw_nnz[c_bundle + j])
-                    bundles.append(
-                        (
-                            raw_idx[c_el : c_el + n].copy(),
-                            raw_val[c_el : c_el + n].copy(),
-                        )
-                    )
-                    c_el += n
-                c_bundle += nb
-                pi = raw_pi[c_pi : c_pi + nb].copy()
-                c_pi += nb
-                book._accounts[key] = (tuple(bundles), pi)
-            else:
-                book._accounts[key] = (
-                    np.asarray(arrays["packed_idx"][c_packed], np.int32).copy(),
-                    np.asarray(arrays["packed_val"][c_packed], np.float32).copy(),
-                    np.asarray(arrays["packed_mask"][c_packed], bool).copy(),
-                    np.asarray(arrays["packed_pi"][c_packed], np.float32).copy(),
-                )
-                c_packed += 1
+            book._accounts[key] = acct
         return book
 
 

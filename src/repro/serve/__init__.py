@@ -1,0 +1,10 @@
+"""Serving layer: the always-on market service and friends.
+
+Only the light config surface is imported eagerly — ``repro.serve.
+ServiceConfig`` must be importable without paying for jax.  The heavy
+modules stay explicit imports (``repro.serve.market``, ``repro.serve.
+decode``, ``repro.serve.wal``).
+"""
+from .config import ServiceConfig
+
+__all__ = ["ServiceConfig"]

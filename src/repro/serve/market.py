@@ -53,12 +53,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+import warnings
 from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.service import ServiceCheckpointer
+from .config import ServiceConfig
 from ..core.auction import (
     ClockConfig,
     blocked_demand_fn,
@@ -166,10 +168,35 @@ class MarketService:
 
     Durability contract: reconstruct the service with the same arguments
     (same ``wal_path`` / ``checkpoint_dir``) after a crash and the
-    constructor restores the latest checkpoint, recovers the WAL's torn
-    tail, and replays the un-checkpointed records through the validation
-    path — state is bit-identical to the moment before the kill.
+    constructor restores the latest checkpoint (base full + ordered delta
+    replay), recovers the WAL's torn tail, and replays the
+    un-checkpointed records through the validation path — state is
+    bit-identical to the moment before the kill.
+
+    Configuration lives in one frozen :class:`repro.serve.ServiceConfig`
+    (``config=``).  The old per-knob kwargs still work for one release via
+    a deprecation shim that warns once per process.
     """
+
+    _legacy_kwargs_warned = False  # DeprecationWarning fires once per process
+
+    @classmethod
+    def _coerce_config(
+        cls, config: ServiceConfig | None, legacy: dict
+    ) -> ServiceConfig:
+        config = config if config is not None else ServiceConfig()
+        if not legacy:
+            return config
+        if not cls._legacy_kwargs_warned:
+            warnings.warn(
+                "passing MarketService knobs as individual kwargs "
+                f"({sorted(legacy)}) is deprecated — pass "
+                "config=repro.serve.ServiceConfig(...) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            cls._legacy_kwargs_warned = True
+        return config.replace(**legacy)
 
     def __init__(
         self,
@@ -178,24 +205,18 @@ class MarketService:
         k_bound: int,
         *,
         reserve: np.ndarray | None = None,
-        clock: ClockConfig = ClockConfig(),
-        rows_cap: int = 64,
-        settle_blocks: int = 8,
-        max_pending: int = 100_000,
-        max_quantity: float = 1e6,
-        max_history: int = 512,
-        warm_start: bool = True,
         faults: FaultModel | None = None,
-        wal_path: str | None = None,
-        wal_sync: str = "flush",
-        checkpoint_dir: str | None = None,
-        checkpoint_keep: int = 2,
-        tick_deadline_s: float | None = None,
-        max_escalations: int = 2,
-        backoff_base_s: float = 1.0,
-        backoff_cap_s: float = 60.0,
+        config: ServiceConfig | None = None,
+        **legacy,
     ) -> None:
-        self.book = MarketBook(base_cost, num_bundles, k_bound, rows_cap)
+        cfg = self._coerce_config(config, legacy)
+        self.config = cfg
+        self.book = MarketBook(
+            base_cost,
+            num_bundles,
+            k_bound,
+            cfg.rows_cap if cfg.rows_cap is not None else 64,
+        )
         self.reserve = (
             np.asarray(base_cost, np.float64)
             if reserve is None
@@ -206,21 +227,25 @@ class MarketService:
                 f"reserve must be ({self.book.num_resources},), "
                 f"got {self.reserve.shape}"
             )
-        self.clock = clock
-        self.settle_blocks = int(settle_blocks)
-        self.max_pending = int(max_pending)
+        self.clock = cfg.clock if cfg.clock is not None else ClockConfig()
+        self.settle_blocks = (
+            int(cfg.settle_blocks) if cfg.settle_blocks is not None else 8
+        )
+        self.max_pending = int(cfg.max_pending)
         # the f64 supply ledger is exact only while every |q| (and their
         # per-pool sums) stays well inside the 2^53 integer window — bound it
-        self.max_quantity = float(max_quantity)
+        self.max_quantity = float(cfg.max_quantity)
         # bounded history rings: an always-on process must not grow without
         # bound, and warm starts / poll_prices only ever read the tail
-        self.max_history = max(int(max_history), 1)
-        self.warm_start = bool(warm_start)
+        self.max_history = max(int(cfg.max_history), 1)
+        self.warm_start = bool(cfg.warm_start)
         self.faults = faults
-        self.tick_deadline_s = tick_deadline_s
-        self.max_escalations = int(max_escalations)
-        self.backoff_base_s = float(backoff_base_s)
-        self.backoff_cap_s = float(backoff_cap_s)
+        self.tick_deadline_s = cfg.tick_deadline_s
+        self.max_escalations = int(cfg.max_escalations)
+        self.backoff_base_s = float(cfg.backoff_base_s)
+        self.backoff_cap_s = float(cfg.backoff_cap_s)
+        self.checkpoint_interval = int(cfg.checkpoint_interval)
+        self.async_commit = bool(cfg.async_commit)
         self.epoch = 0
         self.price_history: list[np.ndarray] = []
         self.stats_history: list[EpochStats] = []
@@ -235,23 +260,31 @@ class MarketService:
         self._replaying = False
         self._restored_wal_offset = 0
         self._restored_wal_generation = 0
+        self._prices_since_ckpt = 0
+        self._stats_since_ckpt = 0
+        self._commit_failures = 0
 
         # -- crash recovery: checkpoint first, then the WAL tail -------------
         self._ckpt = (
-            ServiceCheckpointer(checkpoint_dir, keep=checkpoint_keep)
-            if checkpoint_dir is not None
+            ServiceCheckpointer(
+                cfg.checkpoint_dir,
+                keep=cfg.checkpoint_keep,
+                full_every=cfg.checkpoint_full_every,
+            )
+            if cfg.checkpoint_dir is not None
             else None
         )
         self.restored_step = (
             self._ckpt.restore_latest(self) if self._ckpt is not None else None
         )
         self._wal = (
-            WriteAheadLog(wal_path, sync=wal_sync)
-            if wal_path is not None
+            WriteAheadLog(cfg.wal_path, sync=cfg.wal_sync)
+            if cfg.wal_path is not None
             else None
         )
         self.replayed_records = 0
         self._wal_drained_offset = 0
+        self._durable_wal_offset = 0
         if self._wal is not None:
             if self._wal.generation == self._restored_wal_generation:
                 replay_start = self._restored_wal_offset
@@ -264,6 +297,8 @@ class MarketService:
             # records at or before this offset are already inside the book
             # (or consumed counters); only the tail past it needs replay
             self._wal_drained_offset = replay_start
+            # everything the restored checkpoint covers is durable on disk
+            self._durable_wal_offset = replay_start
 
     # -- ingestion -----------------------------------------------------------
 
@@ -577,44 +612,121 @@ class MarketService:
             if converged:
                 self.price_history.append(prices)
                 self._last_price_epoch = self.epoch
+                self._prices_since_ckpt += 1
                 del self.price_history[: -self.max_history]
             self.stats_history.append(stats)
+            self._stats_since_ckpt += 1
             del self.stats_history[: -self.max_history]
             self.epoch += 1
             self._commit_durable()
         return stats
 
+    def _settle_async_save(self) -> bool:
+        """Resolve the previous tick's in-flight background save, if any.
+
+        Success advances the durable WAL watermark to the offset that save
+        covered.  Failure is *this* tick's problem — never silently
+        dropped: the failed delta's rows are re-marked dirty (so the next
+        record covers both windows), the health machine steps, and the
+        commit-failure counter rides on the service."""
+        payload, err = self._ckpt.wait_commit(self)
+        if payload is None and err is None:
+            return True
+        if err is not None:
+            self._commit_failures += 1
+            self.health.on_failure(self.backoff_base_s, self.backoff_cap_s)
+            return False
+        self._durable_wal_offset = payload.wal_offset
+        return True
+
+    def _truncate_wal(self) -> None:
+        """Drop the WAL prefix that durable checkpoints already cover.
+
+        Only records at or before ``_durable_wal_offset`` go — an async
+        save that has not been waited on yet keeps its tail journaled, so
+        a crash during the overlap window replays it."""
+        if self._wal is None:
+            return
+        removed = self._wal.truncate_to(self._durable_wal_offset)
+        if removed:
+            floor = self._wal.data_start
+            self._wal_drained_offset = max(
+                self._wal_drained_offset - removed, floor
+            )
+            self._durable_wal_offset = max(
+                self._durable_wal_offset - removed, floor
+            )
+
     def _commit_durable(self) -> None:
         """Tick-boundary durability: checkpoint, then compact the WAL.
 
-        The pending queue is empty here (the tick just drained it), so
-        the checkpoint covers every WAL record and the log can truncate;
-        a crash *between* the two replays from the checkpoint's stored
-        drain offset, so nothing double-applies.  Without a checkpointer
-        the WAL is group-fsync'd instead — committed ticks are
-        power-durable even under the cheap per-append flush mode."""
-        if self._ckpt is not None:
+        The pending queue is empty here (the tick just drained it), so a
+        cut checkpoint covers every drained WAL record.  Ordering contract:
+
+        1. settle the *previous* tick's background save (``async_commit``)
+           — its failure fails this tick's commit, stepping health;
+        2. cut this tick's record — a dirty-row delta chained to the last
+           full checkpoint, or a compacted full every ``full_every``;
+        3. only after a record is *durable* does the WAL truncate up to
+           the offset that record covers (sync path truncates after its
+           own blocking save; async path truncates up to the previous
+           save settled in step 1).
+
+        Ticks between ``checkpoint_interval`` boundaries group-fsync the
+        WAL instead, as does a service with no checkpointer — committed
+        ticks are power-durable even under the cheap per-append flush
+        mode."""
+        if self._ckpt is None:
+            if self._wal is not None:
+                self._wal.sync()
+            return
+        self._hook("pre_commit_wait")
+        self._settle_async_save()
+        if self.epoch % self.checkpoint_interval != 0:
+            if self._wal is not None:
+                self._wal.sync()
+            return
+        if self.async_commit:
+            # truncate to the *previous* save's durable offset before
+            # dispatching this one — the new record's tail stays journaled
+            # until the next tick proves it durable
+            self._truncate_wal()
+            self._ckpt.save_async(self)
+            if self._wal is not None:
+                self._wal.sync()
+        else:
             self._ckpt.save(self, block=True)
             if self._wal is not None:
-                self._wal.reset()
-                self._wal_drained_offset = self._wal.offset
-        elif self._wal is not None:
+                self._durable_wal_offset = self._wal_drained_offset
+                self._hook("post_delta_pre_truncate")
+                self._truncate_wal()
+
+    def flush(self) -> bool:
+        """Settle any in-flight background save and sync the WAL.
+
+        Returns False when the settled save had failed (the failure has
+        been absorbed into health/counters and the rows re-marked dirty).
+        Call before dropping an ``async_commit`` service in-process."""
+        ok = True
+        if self._ckpt is not None:
+            ok = self._settle_async_save()
+        if self._wal is not None:
             self._wal.sync()
+        return ok
 
     def checkpoint(self) -> int | None:
         """Cut an out-of-band checkpoint (after bridge loads/syncs, which
-        mutate the book without passing through the WAL).  The WAL is only
-        compacted when nothing is pending — queued records must survive
-        until a tick drains them."""
+        mutate the book without passing through the WAL).  Always a
+        blocking save; the WAL truncates up to the drained offset — queued
+        records past it must survive until a tick drains them."""
         if self._ckpt is None:
             return None
+        self._settle_async_save()
         step = self._ckpt.save(self, block=True)
         if self._wal is not None:
-            if not self._pending:
-                self._wal.reset()
-                self._wal_drained_offset = self._wal.offset
-            else:
-                self._wal.sync()
+            self._durable_wal_offset = self._wal_drained_offset
+            self._truncate_wal()
+            self._wal.sync()
         return step
 
     def preview(self) -> EpochStats:
@@ -624,7 +736,14 @@ class MarketService:
     # -- economy bridge ------------------------------------------------------
 
     @classmethod
-    def from_economy(cls, eco: Economy, **kwargs) -> "MarketService":
+    def from_economy(
+        cls,
+        eco: Economy,
+        *,
+        config: ServiceConfig | None = None,
+        faults: FaultModel | None = None,
+        **legacy,
+    ) -> "MarketService":
         """Stand up a service over an Economy's current market.
 
         Operator supply (the free capacity of every pool, priced at the
@@ -634,6 +753,10 @@ class MarketService:
         economy's dirty-uid tracking.  Operator rows are snapshot at bridge
         time (a production deployment would re-quote them per tick).
 
+        The config's ``None`` settlement-shape fields (``clock`` /
+        ``settle_blocks`` / ``rows_cap``) derive from the economy, so the
+        bridged service settles exactly like the simulator it mirrors.
+
         With ``checkpoint_dir`` set, a prior checkpoint wins: the restored
         book already holds the bridged rows, so the bulk load is skipped
         and the service resumes where it crashed.  A fresh durable bridge
@@ -641,12 +764,19 @@ class MarketService:
         WAL."""
         base_cost = np.tile(eco.base_cost_rt, eco.C).astype(np.float32)
         reserve = np.asarray(reserve_prices(eco.pools(), eco.weighting))
-        kwargs.setdefault("clock", eco.clock)
-        kwargs.setdefault("settle_blocks", eco.settle_blocks)
-        kwargs.setdefault("rows_cap", max(len(eco.pop) + eco.R, 64))
+        cfg = cls._coerce_config(config, legacy)
+        derived = {}
+        if cfg.clock is None:
+            derived["clock"] = eco.clock
+        if cfg.settle_blocks is None:
+            derived["settle_blocks"] = eco.settle_blocks
+        if cfg.rows_cap is None:
+            derived["rows_cap"] = max(len(eco.pop) + eco.R, 64)
+        if derived:
+            cfg = cfg.replace(**derived)
         svc = cls(
             base_cost, num_bundles=eco.C, k_bound=eco.T,
-            reserve=reserve, **kwargs,
+            reserve=reserve, faults=faults, config=cfg,
         )
         if svc.restored_step is not None:
             return svc
@@ -696,6 +826,8 @@ def main(argv=None):
                     help="per-tick bid-stream dropout probability (fault)")
     ap.add_argument("--durable-dir", default=None,
                     help="directory for WAL + checkpoints (enables kill-resume)")
+    ap.add_argument("--async-commit", action="store_true",
+                    help="cut checkpoints on a background thread")
     ap.add_argument("--kill-resume", action="store_true",
                     help="drop the service mid-horizon and resume from disk")
     ap.add_argument("--seed", type=int, default=0)
@@ -704,19 +836,20 @@ def main(argv=None):
     import os
 
     eco = fleet_economy(args.agents, args.clusters, seed=args.seed)
-    durable = {}
+    cfg = ServiceConfig()
     if args.durable_dir:
         os.makedirs(args.durable_dir, exist_ok=True)
-        durable = dict(
+        cfg = cfg.replace(
             wal_path=os.path.join(args.durable_dir, "market.wal"),
             checkpoint_dir=os.path.join(args.durable_dir, "ckpt"),
+            async_commit=args.async_commit,
         )
     faults = (
         FaultModel(bid_dropout=args.dropout, seed=args.seed)
         if args.dropout > 0
         else None
     )
-    svc = MarketService.from_economy(eco, faults=faults, **durable)
+    svc = MarketService.from_economy(eco, config=cfg, faults=faults)
     rng = np.random.default_rng(args.seed)
     print(
         f"[market] book: {svc.book.num_rows} rows "
@@ -747,7 +880,7 @@ def main(argv=None):
         if args.kill_resume and args.durable_dir and t == args.ticks // 2:
             pend = svc.pending
             del svc  # hard drop mid-horizon: no checkpoint, no drain
-            svc = MarketService.from_economy(eco, faults=faults, **durable)
+            svc = MarketService.from_economy(eco, config=cfg, faults=faults)
             print(
                 f"[market] killed + resumed: epoch {svc.epoch}, "
                 f"{svc.replayed_records} WAL records replayed, "

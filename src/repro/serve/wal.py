@@ -127,6 +127,47 @@ class WriteAheadLog:
         self._f.flush()
         os.fsync(self._f.fileno())
 
+    def truncate_to(self, offset: int) -> int:
+        """Prefix compaction: drop bytes ``[data_start, offset)`` — records a
+        durable checkpoint now owns — keeping the unconfirmed tail.
+
+        Returns the number of bytes removed; every tracked offset ``>=
+        offset`` shifts down by exactly that much (``new = old - removed``).
+        The compacted log is built as a sibling file and atomically
+        ``os.replace``d in, so a crash at any instant leaves either the old
+        log or the new one — never a half-copied tail that torn-frame
+        recovery would mistake for the true end of log (losing acknowledged
+        records after it).  The generation counter bumps, so checkpoint
+        offsets recorded against the old layout replay conservatively from
+        ``data_start`` — exactly the surviving, un-checkpointed tail.
+
+        ``offset == end`` degenerates to :meth:`reset` (empty tail);
+        ``offset <= data_start`` is a no-op (nothing to drop, no bump).
+        """
+        end = self._f.tell()
+        offset = min(max(int(offset), _DATA_START), end)
+        removed = offset - _DATA_START
+        if removed <= 0:
+            return 0
+        if offset == end:
+            self.reset()
+            return removed
+        self._f.seek(offset)
+        tail = self._f.read(end - offset)
+        tmp = self.path + ".compact"
+        with open(tmp, "wb") as g:
+            g.write(_MAGIC)
+            g.write(_GEN.pack(self.generation + 1))
+            g.write(tail)
+            g.flush()
+            os.fsync(g.fileno())
+        os.replace(tmp, self.path)
+        self._f.close()
+        self.generation += 1
+        self._f = open(self.path, "r+b")
+        self._f.seek(0, os.SEEK_END)
+        return removed
+
     def close(self) -> None:
         if not self._f.closed:
             self._f.flush()

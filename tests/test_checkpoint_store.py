@@ -1,0 +1,157 @@
+"""CheckpointStore: the shared atomic manifest+npz record protocol.
+
+The store was factored out of MarketCheckpointer / ServiceCheckpointer,
+which each used to carry a private copy of the same on-disk procedure.
+The contract of the refactor is *byte identity*: a record written through
+the shared store must produce exactly the bytes the inlined legacy
+procedure produced, so checkpoints written before the refactor restore
+unchanged and content-addressed comparisons keep working.  The fixture
+test below re-implements the legacy procedure inline and compares file
+hashes.
+"""
+import hashlib
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {
+        "book/idx": rng.integers(0, 9, size=24).astype(np.int32),
+        "book/val": rng.normal(size=24).astype(np.float32),
+        "ledger": rng.normal(size=3).astype(np.float64),
+        "free": np.array([7, 5], np.int64),
+        "mask": rng.random((4, 2)) > 0.5,
+    }
+
+
+def _legacy_write(directory, prefix, step, tree, metadata):
+    """The pre-refactor write procedure, verbatim: sorted-key npz members,
+    manifest keys in exactly this insertion order, .tmp staging + rename."""
+    host = {k: np.asarray(tree[k]) for k in sorted(tree.keys())}
+    manifest = {
+        "step": int(step),
+        "keys": sorted(host.keys()),
+        "shapes": {k: list(v.shape) for k, v in host.items()},
+        "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        "metadata": metadata or {},
+    }
+    name = f"{prefix}_{step:08d}"
+    tmp = os.path.join(directory, f".tmp.{name}")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **host)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, final)
+    return final
+
+
+def _sha(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def test_record_bytes_identical_to_legacy_procedure(tmp_path):
+    meta = {"epoch": 3, "health": {"state": "healthy"}, "keys": ["b", "a"]}
+    store = CheckpointStore(str(tmp_path / "new"))
+    store.write_record("ckpt", 3, _tree(), metadata=meta)
+    legacy = _legacy_write(str(tmp_path), "ckpt", 3, _tree(), meta)
+    for fname in ("manifest.json", "arrays.npz"):
+        new = os.path.join(store.record_path("ckpt", 3), fname)
+        assert _sha(new) == _sha(os.path.join(legacy, fname)), fname
+
+
+def test_write_is_deterministic_across_runs(tmp_path):
+    """np.savez stamps the ZipInfo-default date, so identical arrays give
+    identical bytes — what lets delta records be content-compared."""
+    a = CheckpointStore(str(tmp_path / "a"))
+    b = CheckpointStore(str(tmp_path / "b"))
+    a.write_record("delta", 5, _tree(), metadata={"parent_step": 4})
+    b.write_record("delta", 5, _tree(), metadata={"parent_step": 4})
+    for fname in ("manifest.json", "arrays.npz"):
+        assert _sha(os.path.join(a.record_path("delta", 5), fname)) == _sha(
+            os.path.join(b.record_path("delta", 5), fname)
+        ), fname
+
+
+def test_read_record_round_trips_dtypes(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = _tree()
+    store.write_record("ckpt", 0, tree, metadata={"m": 1})
+    got, manifest = store.read_record("ckpt", 0)
+    assert manifest["metadata"] == {"m": 1}
+    assert got.keys() == tree.keys()
+    for k, v in tree.items():
+        assert got[k].dtype == v.dtype, k  # f64 survives x64-disabled JAX
+        np.testing.assert_array_equal(got[k], v)
+
+
+def test_prefixes_share_directory_without_aliasing(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.write_record("ckpt", 1, _tree())
+    store.write_record("delta", 2, _tree())
+    store.write_record("delta", 10, _tree())
+    assert store.record_steps("ckpt") == [1]
+    assert store.record_steps("delta") == [2, 10]
+    assert store.latest_step("ckpt") == 1
+    assert store.latest_step("delta") == 10
+    store.remove_record("delta", 2)
+    assert store.record_steps("delta") == [10]
+
+
+def test_staging_dirs_invisible_to_readers(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), ".tmp.ckpt_00000007"))
+    assert store.record_steps("ckpt") == []
+    assert store.latest_step("ckpt") is None
+
+
+def test_pre_replace_fires_between_stage_and_rename(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    seen = {}
+
+    def probe():
+        seen["staged"] = os.path.isdir(
+            os.path.join(str(tmp_path), ".tmp.ckpt_00000001")
+        )
+        seen["final"] = store.has_record("ckpt", 1)
+
+    store.write_record("ckpt", 1, _tree(), pre_replace=probe)
+    assert seen == {"staged": True, "final": False}
+    assert store.has_record("ckpt", 1)
+
+
+def test_async_write_error_surfaces_at_wait(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+
+    def boom():
+        raise OSError("disk full")
+
+    store.write_record_async("ckpt", 1, _tree(), pre_replace=boom)
+    with pytest.raises(OSError, match="disk full"):
+        store.wait()
+    # the error is consumed: the store is usable again
+    store.wait()
+    store.write_record("ckpt", 2, _tree())
+    assert store.record_steps("ckpt") == [2]
+
+
+def test_async_write_completes_and_joins(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    gate = threading.Event()
+
+    def probe():
+        gate.wait(5)
+
+    store.write_record_async("ckpt", 1, _tree(), pre_replace=probe)
+    assert not store.has_record("ckpt", 1)  # still staged behind the gate
+    gate.set()
+    store.wait()
+    assert store.has_record("ckpt", 1)

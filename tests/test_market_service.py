@@ -24,6 +24,7 @@ import pytest
 from repro.core.economy import make_fleet_economy
 from repro.core.faults import FaultModel
 from repro.core.markets import fleet_economy, fleet_population
+from repro.serve import ServiceConfig
 from repro.serve.market import BidDelta, MarketService
 
 SEEDS = (0, 3, 7)
@@ -32,7 +33,10 @@ SEEDS = (0, 3, 7)
 def _tiny_service(**kw):
     """4-resource book, no economy attached — ingestion unit tests."""
     kw.setdefault("rows_cap", 8)
-    return MarketService(np.ones(4, np.float32), num_bundles=2, k_bound=2, **kw)
+    return MarketService(
+        np.ones(4, np.float32), num_bundles=2, k_bound=2,
+        config=ServiceConfig(**kw),
+    )
 
 
 def _bid(key, q=1.0, pi=5.0):
@@ -202,9 +206,11 @@ def test_incremental_book_bit_identical_under_interleaving(seed):
         svc._drain()
         twin = MarketService(
             svc.book.base_cost, svc.book.num_bundles, svc.book.k_bound,
-            reserve=svc.reserve, clock=svc.clock,
-            settle_blocks=svc.settle_blocks, rows_cap=svc.book.rows_cap,
-            faults=svc.faults,
+            reserve=svc.reserve, faults=svc.faults,
+            config=ServiceConfig(
+                clock=svc.clock, settle_blocks=svc.settle_blocks,
+                rows_cap=svc.book.rows_cap,
+            ),
         )
         twin.book = svc.book.rebuilt()
         twin.epoch = svc.epoch

@@ -1,0 +1,120 @@
+"""ServiceConfig: validation at construction + the legacy-kwarg shim.
+
+The consolidated config is the one home for every MarketService knob; a
+bad value must fail when the config is built, not at the first tick, and
+the old per-kwarg constructor surface must keep working for one release
+behind a DeprecationWarning that fires exactly once per process.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serve import ServiceConfig
+from repro.serve.market import MarketService
+
+
+def test_defaults_validate():
+    cfg = ServiceConfig()
+    assert cfg.wal_sync == "flush"
+    assert cfg.checkpoint_interval == 1
+    assert cfg.checkpoint_full_every == 8
+    assert not cfg.async_commit
+    assert cfg.clock is None and cfg.rows_cap is None
+
+
+def test_frozen():
+    cfg = ServiceConfig()
+    with pytest.raises(Exception):
+        cfg.max_pending = 5
+
+
+def test_replace_revalidates():
+    cfg = ServiceConfig().replace(max_history=7)
+    assert cfg.max_history == 7
+    with pytest.raises(ValueError, match="max_history"):
+        cfg.replace(max_history=0)
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(wal_sync="eventually"),
+        dict(max_pending=0),
+        dict(max_history=0),
+        dict(checkpoint_keep=0),
+        dict(checkpoint_interval=0),
+        dict(checkpoint_full_every=0),
+        dict(max_escalations=-1),
+        dict(rows_cap=0),
+        dict(settle_blocks=0),
+        dict(max_quantity=0.0),
+        dict(tick_deadline_s=-1.0),
+        dict(backoff_base_s=0.0),
+        dict(backoff_cap_s=-1.0),
+        dict(async_commit=True),  # requires checkpoint_dir
+    ],
+)
+def test_invalid_values_rejected_at_config_time(bad):
+    with pytest.raises(ValueError):
+        ServiceConfig(**bad)
+
+
+def test_async_commit_requires_checkpoint_dir(tmp_path):
+    cfg = ServiceConfig(async_commit=True, checkpoint_dir=str(tmp_path))
+    assert cfg.async_commit
+
+
+def test_unknown_field_rejected():
+    with pytest.raises(TypeError):
+        ServiceConfig(wal_pth="typo")
+
+
+# -- deprecation shim ---------------------------------------------------------
+
+
+def _svc(**kw):
+    return MarketService(np.ones(2, np.float32), num_bundles=1, k_bound=1, **kw)
+
+
+def test_legacy_kwargs_warn_exactly_once_and_apply():
+    MarketService._legacy_kwargs_warned = False  # order-independent test
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        svc = _svc(rows_cap=4, max_pending=17)
+        _svc(max_history=3)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "deprecated" in str(dep[0].message)
+    # the shimmed kwargs land in the validated config
+    assert svc.book.rows_cap == 4
+    assert svc.max_pending == 17
+    assert svc.config.max_pending == 17
+
+
+def test_legacy_kwargs_fold_into_explicit_config():
+    MarketService._legacy_kwargs_warned = False
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        svc = _svc(config=ServiceConfig(max_history=9), rows_cap=4)
+    assert svc.max_history == 9  # from the config
+    assert svc.book.rows_cap == 4  # from the legacy kwarg
+
+
+def test_unknown_legacy_kwarg_rejected():
+    MarketService._legacy_kwargs_warned = True  # silence the shim
+    with pytest.raises(TypeError):
+        _svc(row_cap=4)  # typo'd name fails loudly, not silently ignored
+
+
+def test_legacy_kwargs_validated_like_config():
+    MarketService._legacy_kwargs_warned = True
+    with pytest.raises(ValueError, match="wal_sync"):
+        _svc(wal_sync="eventually")
+
+
+def test_config_object_attached_to_service():
+    svc = _svc()
+    assert isinstance(svc.config, ServiceConfig)
+    assert svc.checkpoint_interval == 1
+    assert not svc.async_commit

@@ -27,35 +27,60 @@ import pytest
 from repro.core.auction import ClockConfig
 from repro.core.faults import FaultModel
 from repro.core.markets import fleet_economy
+from repro.serve import ServiceConfig
 from repro.serve.market import BidDelta, MarketService
 
 SEEDS = [0, 3, 7]
 POINTS = ["mid_ingest", "post_drain", "post_settle"]
+# commit-path kill points (fire inside the tick's durable commit, after the
+# epoch has advanced): mid-delta-write, between-durable-save-and-truncate,
+# mid-compaction, post-compaction-pre-prune, at the start of the async
+# background write, and during the async write's overlap with the next
+# (mutating) tick
+COMMIT_POINTS = [
+    "mid_delta",
+    "post_delta_pre_truncate",
+    "mid_compaction",
+    "post_compaction",
+    "pre_delta_write",
+    "async_overlap",
+]
 
 # One deterministic three-tick workload (churn + withdraw + fault dropout),
 # killable at tick 1 via the service's crash-point hooks, resumable from the
 # WAL + checkpoint, and runnable WAL-less as the uninterrupted reference.
 _SCRIPT = """
-import sys, os
+import sys, os, time
 sys.path.insert(0, "src")
 import dataclasses, pickle
 import numpy as np
 from repro.core.markets import fleet_economy
 from repro.core.faults import FaultModel
+from repro.serve import ServiceConfig
 from repro.serve.market import MarketService, BidDelta
 
 mode, point, seed, d = sys.argv[1], sys.argv[2], int(sys.argv[3]), sys.argv[4]
 TICKS, KILL_TICK = 3, 1
+ASYNC_POINTS = {"pre_delta_write", "async_overlap"}
+FULL_POINTS = {"mid_compaction", "post_compaction"}
+COMMIT_POINTS = {
+    "mid_delta", "post_delta_pre_truncate", "mid_compaction",
+    "post_compaction", "pre_delta_write",
+}
 
 eco = fleet_economy(40, 3, seed=seed)
-kw = {}
+cfg = ServiceConfig()
 if mode != "ref":
-    kw = dict(
+    cfg = cfg.replace(
         wal_path=os.path.join(d, "w.wal"),
         checkpoint_dir=os.path.join(d, "ck"),
+        async_commit=point in ASYNC_POINTS,
+        # full_every=1 turns every commit into a compaction, so the
+        # compaction kill points fire on the killed tick's commit
+        checkpoint_full_every=1 if point in FULL_POINTS else 8,
     )
 svc = MarketService.from_economy(
-    eco, faults=FaultModel(bid_dropout=0.2, seed=seed), **kw
+    eco, config=cfg, faults=FaultModel(bid_dropout=0.2, seed=seed)
 )
 
 keys, idx, val, mask, pi = eco.export_bid_rows()
@@ -78,11 +103,29 @@ if mode == "crash":
                 seen["n"] += 1
                 if seen["n"] == 5:  # 5th append of tick 1's batch, pre-ack
                     os._exit(1)
+        svc._test_hooks[point] = boom
+    elif point == "async_overlap":
+        # die inside the NEXT tick's drain (the book is already mutated),
+        # once the background record covering the killed boundary has
+        # become durable — the write raced a mutating tick and must have
+        # captured the pre-tick snapshot
+        rec = os.path.join(d, "ck", "delta_%08d" % (KILL_TICK + 1))
+        def boom():
+            if svc.epoch == KILL_TICK + 1:
+                while not os.path.isdir(rec):
+                    time.sleep(0.005)
+                os._exit(1)
+        svc._test_hooks["post_drain"] = boom
+    elif point in COMMIT_POINTS:
+        def boom():
+            if svc.epoch == KILL_TICK + 1:  # the killed tick's commit
+                os._exit(1)
+        svc._test_hooks[point] = boom
     else:
         def boom():
             if svc.epoch == KILL_TICK:
                 os._exit(1)
-    svc._test_hooks[point] = boom
+        svc._test_hooks[point] = boom
 
 # the client retries every delta it never saw acknowledged; re-submission is
 # idempotent (last-write-wins pending + same deterministic batch content), so
@@ -93,7 +136,10 @@ for t in range(svc.epoch, TICKS):
         svc.submit(dd)
     svc.withdraw(wkey)
     svc.tick()
+    if mode == "crash" and point == "pre_delta_write" and t == KILL_TICK:
+        time.sleep(60)  # the background writer's kill hook fires any moment
 
+svc.flush()
 svc.book.parity_check()
 arrays, meta = svc.book.export_state()
 out = dict(
@@ -155,7 +201,7 @@ def _assert_bit_identical(got, ref):
 
 
 @pytest.mark.parametrize("seed", SEEDS)
-@pytest.mark.parametrize("point", POINTS)
+@pytest.mark.parametrize("point", POINTS + COMMIT_POINTS)
 def test_hard_kill_recovery_bit_identical(tmp_path, reference, point, seed):
     r = _run("crash", point, seed, tmp_path)
     assert r.returncode == 1, f"kill hook never fired: {r.stderr}"
@@ -171,10 +217,11 @@ def test_checkpoint_without_wal_resumes_committed_state(tmp_path):
     """Checkpoint-only durability: committed ticks survive, the un-journaled
     pending queue (documented) does not."""
     eco = fleet_economy(30, 3, seed=0)
-    svc = MarketService.from_economy(eco, checkpoint_dir=str(tmp_path))
+    cfg = ServiceConfig(checkpoint_dir=str(tmp_path))
+    svc = MarketService.from_economy(eco, config=cfg)
     s0 = svc.tick()
     del svc
-    svc2 = MarketService.from_economy(eco, checkpoint_dir=str(tmp_path))
+    svc2 = MarketService.from_economy(eco, config=cfg)
     assert svc2.restored_step == 1 and svc2.epoch == 1
     assert svc2.pending == 0
     np.testing.assert_array_equal(svc2.poll_prices()[0], s0.prices)
@@ -184,11 +231,11 @@ def test_checkpoint_without_wal_resumes_committed_state(tmp_path):
 def test_stale_checkpoint_offset_survives_compaction(tmp_path):
     """A crash can strand a checkpoint whose WAL offset predates a later
     compaction; the generation counter must prevent offset aliasing."""
-    kw = dict(
+    cfg = ServiceConfig(
         wal_path=str(tmp_path / "w.wal"), checkpoint_dir=str(tmp_path / "ck")
     )
     eco = fleet_economy(30, 3, seed=0)
-    svc = MarketService.from_economy(eco, **kw)
+    svc = MarketService.from_economy(eco, config=cfg)
     keys, idx, val, mask, pi = eco.export_bid_rows()
     i = int(np.flatnonzero(mask.any(axis=1))[0])
     bundles = [(idx[i, b], val[i, b]) for b in np.flatnonzero(mask[i])]
@@ -198,7 +245,7 @@ def test_stale_checkpoint_offset_survives_compaction(tmp_path):
     svc.submit(BidDelta(keys[i], bundles, pi[i][mask[i]] * 1.10))
     del svc
 
-    svc2 = MarketService.from_economy(eco, **kw)
+    svc2 = MarketService.from_economy(eco, config=cfg)
     # the checkpoint's offset points into the dead generation g-1; recovery
     # must detect the mismatch and replay the whole surviving log instead of
     # seeking past the (post-compaction, smaller) record
@@ -209,19 +256,27 @@ def test_stale_checkpoint_offset_survives_compaction(tmp_path):
 
 def test_mismatched_shape_restore_rejected(tmp_path):
     eco = fleet_economy(30, 3, seed=0)
-    svc = MarketService.from_economy(eco, checkpoint_dir=str(tmp_path))
+    cfg = ServiceConfig(checkpoint_dir=str(tmp_path))
+    svc = MarketService.from_economy(eco, config=cfg)
     svc.tick()
     with pytest.raises(ValueError, match="reconstruct the same service"):
         MarketService(
-            np.ones(2, np.float32), num_bundles=1, k_bound=1,
-            checkpoint_dir=str(tmp_path),
+            np.ones(2, np.float32), num_bundles=1, k_bound=1, config=cfg
         )
 
 
 def test_checkpoint_pruning_keeps_newest(tmp_path):
+    # full_every=1: every record is a full checkpoint, so keep=2 retains
+    # exactly the newest two steps (delta-chain retention is covered by
+    # test_incremental_checkpoint.py)
     eco = fleet_economy(30, 3, seed=0)
     svc = MarketService.from_economy(
-        eco, checkpoint_dir=str(tmp_path), checkpoint_keep=2
+        eco,
+        config=ServiceConfig(
+            checkpoint_dir=str(tmp_path),
+            checkpoint_keep=2,
+            checkpoint_full_every=1,
+        ),
     )
     for _ in range(4):
         svc.tick()
@@ -239,7 +294,7 @@ _STARVED = ClockConfig(max_rounds=3)  # guaranteed non-convergence
 
 def _svc(seed=0, **kw):
     eco = fleet_economy(30, 3, seed=seed)
-    return MarketService.from_economy(eco, **kw)
+    return MarketService.from_economy(eco, config=ServiceConfig(**kw))
 
 
 def test_failed_tick_commits_nothing_and_serves_last_good(seed=0):
@@ -353,7 +408,10 @@ def test_max_history_ring_bounds_memory():
 def test_psi_measures_settled_share_of_offered_supply():
     # one pool with 10 units on offer, one buyer taking 4 at a high price:
     # psi = 4/10 on that pool, 0 on the never-offered pool
-    svc = MarketService(np.array([1.0, 1.0], np.float32), 1, 1, rows_cap=4)
+    svc = MarketService(
+        np.array([1.0, 1.0], np.float32), 1, 1,
+        config=ServiceConfig(rows_cap=4),
+    )
     svc.book.upsert(
         "op-0", [(np.array([0], np.int32), np.array([-10.0], np.float32))],
         [-10.0],

@@ -13,6 +13,7 @@ import struct
 import numpy as np
 import pytest
 
+from repro.serve import ServiceConfig
 from repro.serve.market import BidDelta, MarketService
 from repro.serve.wal import _DATA_START, _HEADER, _MAGIC, WriteAheadLog
 
@@ -138,6 +139,65 @@ def test_reset_compacts_and_bumps_generation(tmp_path):
     assert gen == 1
 
 
+def test_truncate_to_drops_exact_prefix(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        offs = [w.append(("r", i)) for i in range(4)]
+        end = w.offset
+        removed = w.truncate_to(offs[1])
+        assert removed == offs[1] - _DATA_START
+        # surviving records shift down by exactly `removed`
+        got = list(w.records())
+        assert [r for r, _ in got] == [("r", 2), ("r", 3)]
+        assert [o for _, o in got] == [o - removed for o in offs[2:]]
+        assert w.offset == end - removed
+        # partial truncation bumps the generation: stored offsets into the
+        # old coordinate space must not alias into the compacted log
+        assert w.generation == 1
+        w.append(("r", 4))
+    assert _records(p) == [("r", 2), ("r", 3), ("r", 4)]
+
+
+def test_truncate_to_full_log_is_reset(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        w.append(("a", 1))
+        w.append(("b", 2))
+        removed = w.truncate_to(w.offset)
+        assert removed > 0
+        assert w.offset == w.data_start == _DATA_START
+        assert w.generation == 1
+        assert list(w.records()) == []
+
+
+def test_truncate_to_noop_and_clamping(tmp_path):
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        end = w.append(("a", 1))
+        assert w.truncate_to(0) == 0  # below data_start clamps to no-op
+        assert w.truncate_to(_DATA_START) == 0
+        assert w.generation == 0
+        assert w.truncate_to(end + 999) == end - _DATA_START  # clamps to end
+        assert list(w.records()) == []
+
+
+def test_truncate_to_is_crash_atomic(tmp_path):
+    """The compacted log is built as a sibling file and renamed into place,
+    so the original (with every acknowledged record) survives a kill at any
+    point before the rename — simulated by just not renaming."""
+    p = str(tmp_path / "w.wal")
+    with WriteAheadLog(p) as w:
+        offs = [w.append(("r", i)) for i in range(3)]
+    # leftover staging file from a killed truncation must not confuse reopen
+    with open(p + ".compact", "wb") as f:
+        f.write(b"garbage")
+    w = WriteAheadLog(p)
+    assert [r for r, _ in w.records()] == [("r", i) for i in range(3)]
+    w.truncate_to(offs[0])
+    assert [r for r, _ in w.records()] == [("r", 1), ("r", 2)]
+    w.close()
+
+
 def test_fsync_mode_appends_and_recovers(tmp_path):
     p = str(tmp_path / "w.wal")
     with WriteAheadLog(p, sync="fsync") as w:
@@ -152,7 +212,7 @@ def test_fsync_mode_appends_and_recovers(tmp_path):
 def _tiny_service(tmp_path, **kw):
     return MarketService(
         np.ones(3, np.float32), num_bundles=2, k_bound=2,
-        wal_path=str(tmp_path / "svc.wal"), **kw,
+        config=ServiceConfig(wal_path=str(tmp_path / "svc.wal"), **kw),
     )
 
 
